@@ -1,0 +1,49 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.channel.mobility import ManhattanParams
+from repro.channel.v2x import ChannelParams
+from repro.core.baselines import SCHEDULERS
+from repro.core.lyapunov import VedsParams
+from repro.core.scenario import ScenarioParams, make_round
+
+
+def time_call(fn: Callable, *args, reps: int = 3) -> float:
+    """Median wall time of a jitted call, in microseconds."""
+    fn(*args)  # compile + warmup
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return 1e6 * float(np.median(ts))
+
+
+def mean_success(scheduler: str, *, v_max: float = 10.0, alpha: float = 2.0,
+                 V: float = 0.2, rounds: int = 8, n_sov: int = 8,
+                 n_opv: int = 8, n_slots: int = 60, q_bits: float = 1e7,
+                 seed: int = 0) -> Dict[str, float]:
+    mob = ManhattanParams(v_max=v_max)
+    ch = ChannelParams()
+    prm = VedsParams(alpha=alpha, V=V, Q=q_bits, slot=0.1)
+    sc = ScenarioParams(n_sov=n_sov, n_opv=n_opv, n_slots=n_slots)
+    fn = SCHEDULERS[scheduler]
+    mk = jax.jit(lambda k: make_round(k, sc, mob, ch, prm))
+    run = jax.jit(lambda r: fn(r, prm, ch))
+    succ, e_sov, e_opv = [], [], []
+    for r in range(rounds):
+        out = run(mk(jax.random.key(seed * 1000 + r)))
+        succ.append(float(out["n_success"]))
+        e_sov.append(float(jnp.sum(out["energy_sov"])))
+        e_opv.append(float(jnp.sum(out["energy_opv"])))
+    return {"n_success": float(np.mean(succ)),
+            "energy": float(np.mean(e_sov) + np.mean(e_opv)),
+            "runner": run, "maker": mk}

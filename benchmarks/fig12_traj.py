@@ -1,0 +1,48 @@
+"""Fig. 12: trajectory-prediction ADE on the Argoverse-like task,
+VEDS vs benchmarks (synthetic kinematic substitute; DESIGN.md §6)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.data.synthetic import make_trajectory_batch
+from repro.fl.simulator import FLSimConfig, run_fl
+from repro.models.lanegcn import lanegcn_ade, lanegcn_decl, lanegcn_loss
+from repro.models.module import materialize
+
+
+def run(rounds: int = 30,
+        schedulers=("veds", "optimal", "v2i_only", "madca", "sa")):
+    key = jax.random.key(0)
+    n_clients = 40
+    client_data = []
+    for c in range(n_clients):
+        b = make_trajectory_batch(jax.random.fold_in(key, 100 + c), 128)
+        client_data.append(b)
+    test = make_trajectory_batch(jax.random.fold_in(key, 999), 512)
+
+    eval_fn = jax.jit(lambda p: lanegcn_ade(p, test))
+    results = {}
+    for name in schedulers:
+        params = materialize(jax.random.fold_in(key, 3), lanegcn_decl())
+        sim = FLSimConfig(rounds=rounds, scheduler=name, seed=7, lr=0.02)
+        hist = run_fl(jax.random.fold_in(key, 4), params,
+                      lambda p, b: lanegcn_loss(p, b),
+                      client_data, sim, eval_fn=eval_fn, eval_every=5)
+        results[name] = hist
+    return results
+
+
+def main(csv=True, rounds: int = 30):
+    res = run(rounds=rounds)
+    finals = {n: h["metric"][-1] for n, h in res.items()}
+    if csv:
+        print("fig12_traj,0," + ";".join(
+            f"{n}_ade={v:.3f}" for n, v in finals.items()))
+    for n, h in res.items():
+        print(f"#  {n:10s} ade_curve={['%.2f' % m for m in h['metric']]}")
+    return finals
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Fig. 4: successful aggregations vs vehicle speed, VEDS vs benchmarks."""
+from __future__ import annotations
+
+from benchmarks.common import mean_success, time_call
+
+
+def run(rounds: int = 6, speeds=(0.0, 5.0, 10.0, 15.0, 20.0, 25.0)):
+    rows = []
+    us = None
+    for v in speeds:
+        for name in ("veds", "optimal", "v2i_only", "madca", "sa"):
+            out = mean_success(name, v_max=v, rounds=rounds)
+            if us is None:
+                rnd = out["maker"](__import__("jax").random.key(0))
+                us = time_call(out["runner"], rnd)
+            rows.append((v, name, out["n_success"]))
+    return rows, us
+
+
+def main(csv=True):
+    rows, us = run()
+    veds5 = [r[2] for r in rows if r[1] == "veds" and r[0] == 5.0][0]
+    opt5 = [r[2] for r in rows if r[1] == "optimal" and r[0] == 5.0][0]
+    frac = veds5 / max(opt5, 1e-9)
+    if csv:
+        print(f"fig4_speed,{us:.0f},veds_frac_of_optimal_v5={frac:.3f}")
+    for v, name, s in rows:
+        print(f"#  v={v:5.1f}  {name:10s} n_success={s:.2f}")
+    return frac
+
+
+if __name__ == "__main__":
+    main()

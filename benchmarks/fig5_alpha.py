@@ -1,0 +1,31 @@
+"""Fig. 5: successful aggregations vs sigmoid parameter alpha (VEDS)."""
+from __future__ import annotations
+
+from benchmarks.common import mean_success, time_call
+
+
+def run(rounds: int = 6, alphas=(0.01, 0.1, 0.5, 2.0, 10.0, 100.0)):
+    rows = []
+    us = None
+    for a in alphas:
+        out = mean_success("veds", alpha=a, rounds=rounds)
+        if us is None:
+            rnd = out["maker"](__import__("jax").random.key(0))
+            us = time_call(out["runner"], rnd)
+        rows.append((a, out["n_success"]))
+    return rows, us
+
+
+def main(csv=True):
+    rows, us = run()
+    best = max(rows, key=lambda r: r[1])
+    if csv:
+        print(f"fig5_alpha,{us:.0f},best_alpha={best[0]}"
+              f";best_success={best[1]:.2f}")
+    for a, s in rows:
+        print(f"#  alpha={a:7.2f} n_success={s:.2f}")
+    return best
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Figs. 8/9: successful aggregations and energy vs the weight V (VEDS)."""
+from __future__ import annotations
+
+from benchmarks.common import mean_success, time_call
+
+
+def run(rounds: int = 6, vs=(0.01, 0.1, 0.2, 1.0, 10.0, 100.0)):
+    rows = []
+    us = None
+    for V in vs:
+        out = mean_success("veds", V=V, rounds=rounds)
+        if us is None:
+            rnd = out["maker"](__import__("jax").random.key(0))
+            us = time_call(out["runner"], rnd)
+        rows.append((V, out["n_success"], out["energy"]))
+    return rows, us
+
+
+def main(csv=True):
+    rows, us = run()
+    mono = all(rows[i][2] <= rows[i + 1][2] + 0.05
+               for i in range(len(rows) - 1))
+    if csv:
+        print(f"fig8_v_weight,{us:.0f},energy_monotone_in_V={mono}")
+    for V, s, e in rows:
+        print(f"#  V={V:7.2f} n_success={s:.2f} energy={e:.3f}J")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from records.
+
+  PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+
+from benchmarks.roofline import analyze_record, load_all, model_flops
+
+
+def fmt_bytes(b):
+    if b >= 2 ** 40:
+        return f"{b/2**40:.2f}TiB"
+    if b >= 2 ** 30:
+        return f"{b/2**30:.2f}GiB"
+    return f"{b/2**20:.1f}MiB"
+
+
+def dryrun_table(records, mesh):
+    out = ["| arch | shape | args/dev | temp/dev | flops/dev | coll bytes/dev | ar/ag/rs/a2a/cp |",
+           "|---|---|---|---|---|---|---|"]
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh or "__iter" in r.get("variant", ""):
+            continue
+        m = r["memory"]
+        c = r["collectives_count"]
+        counts = "/".join(str(c[k]) for k in (
+            "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+            "collective-permute"))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_bytes(m['argument_bytes'])}"
+            f" | {fmt_bytes(m['temp_bytes'])}"
+            f" | {r['deep_cost']['dot_flops']:.2e}"
+            f" | {fmt_bytes(sum(r['collectives_bytes'].values()))}"
+            f" | {counts} |")
+    return "\n".join(out)
+
+
+def roofline_table(records, mesh):
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | useful | next lever |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        a = analyze_record(r)
+        u = a["useful_ratio"]
+        out.append(
+            f"| {a['arch']} | {a['shape']} | {a['compute_s']:.4f} | "
+            f"{a['memory_s']:.4f} | {a['collective_s']:.4f} | "
+            f"{a['dominant']} | {u:.3f} | {a['hint']} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--kind", default="roofline",
+                    choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+    recs = [r for r in load_all(args.dir)
+            if "__iter" not in json.dumps(r.get("arch", ""))]
+    if args.kind == "dryrun":
+        print(dryrun_table(recs, args.mesh))
+    else:
+        print(roofline_table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh): three terms in seconds,
+  compute    = HLO_FLOPs_per_chip / 197e12        (bf16 peak, v5e)
+  memory     = HLO_bytes_per_chip / 819e9         (HBM bw)
+  collective = collective_bytes_per_chip / 50e9   (ICI link bw)
+plus MODEL_FLOPS = 6 N D (train; 2 N D prefill/decode, N_active for MoE) and
+the useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_PARAM_CACHE: Dict[str, Dict[str, float]] = {}
+
+
+def arch_params(arch: str) -> Dict[str, float]:
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    from repro.configs.registry import get_config
+    from repro.models import engine
+    from repro.models.module import param_count
+    from repro.sharding.policy import attention_tp_mode
+
+    cfg = get_config(arch)
+    tp = attention_tp_mode(cfg.num_heads, 16)
+    decl = engine.model_decl(cfg, tp)
+    total = float(param_count(decl))
+    active = total
+    if cfg.num_experts:
+        blocks = decl["blocks"]
+        expert = 0.0
+        for i, kind in enumerate(cfg.pattern):
+            if kind == "moe":
+                from repro.models.module import param_count as pc
+                b = dict(blocks[i])
+                expert += float(pc({k: b[k] for k in
+                                    ("w_gate", "w_up", "w_down")}))
+        frac = cfg.experts_per_tok / cfg.num_experts
+        active = total - expert * (1.0 - frac)
+    _PARAM_CACHE[arch] = {"total": total, "active": active}
+    return _PARAM_CACHE[arch]
+
+
+def tokens_of(shape: str, kind_lookup=None) -> float:
+    from repro.configs.base import SHAPES_BY_NAME
+    s = SHAPES_BY_NAME[shape]
+    if s.kind == "train":
+        return s.global_batch * s.seq_len
+    if s.kind == "prefill":
+        return s.global_batch * s.seq_len
+    return float(s.global_batch)  # decode: one token per sequence
+
+
+def model_flops(arch: str, shape: str) -> float:
+    from repro.configs.base import SHAPES_BY_NAME
+    s = SHAPES_BY_NAME[shape]
+    n = arch_params(arch)["active"]
+    d = tokens_of(shape)
+    mult = 6.0 if s.kind == "train" else 2.0
+    return mult * n * d
+
+
+def analyze_record(rec: dict) -> dict:
+    chips = rec["devices"]
+    deep = rec.get("deep_cost", {})
+    # trip-count-aware totals (see launch/hlo_costs.py); raw cost_analysis
+    # counts each while body once and is kept in the record for reference.
+    fl = deep.get("dot_flops", rec["cost"]["flops"])
+    by = deep.get("hbm_bytes", rec["cost"]["bytes_accessed"])
+    coll = sum(rec["collectives_bytes"].values())
+    t_c = fl / PEAK_FLOPS
+    t_m = by / HBM_BW
+    t_x = coll / LINK_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"]) / chips
+    ratio = mf / fl if fl > 0 else float("nan")
+    hint = {
+        "compute": "reduce recompute (remat policy) / use causal-aware "
+                   "flash kernel to halve masked-out FLOPs",
+        "memory": "fuse attention softmax path (Pallas flash kernel) and "
+                  "keep KV in bf16 to cut HBM traffic",
+        "collective": "reshard to cut per-layer psums (head-TP or 2D "
+                      "sharding) / overlap collectives with compute",
+    }[dom]
+    return {"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dom, "model_flops_per_chip": mf,
+            "useful_ratio": ratio, "hint": hint}
+
+
+def load_all(dirpath: str = "experiments/dryrun",
+             include_variants: bool = False):
+    out = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        if not include_variants and "__iter" in os.path.basename(p):
+            continue  # §Perf iteration records live alongside baselines
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def table(dirpath: str = "experiments/dryrun", mesh: Optional[str] = None):
+    rows = [analyze_record(r) for r in load_all(dirpath)
+            if (mesh is None or r["mesh"] == mesh)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def main(csv: bool = True):
+    rows = table(mesh="pod16x16")
+    if not rows:
+        print("roofline,0,no_dryrun_records_found")
+        return []
+    worst = min(rows, key=lambda r: r["useful_ratio"]
+                if not math.isnan(r["useful_ratio"]) else 1e9)
+    if csv:
+        print(f"roofline,0,n_records={len(rows)};worst_useful_ratio="
+              f"{worst['useful_ratio']:.3f}@{worst['arch']}/{worst['shape']}")
+    hdr = (f"# {'arch':24s} {'shape':12s} {'comp_s':>9s} {'mem_s':>9s} "
+           f"{'coll_s':>9s} {'dom':>10s} {'useful':>7s}")
+    print(hdr)
+    for r in rows:
+        print(f"# {r['arch']:24s} {r['shape']:12s} {r['compute_s']:9.4f} "
+              f"{r['memory_s']:9.4f} {r['collective_s']:9.4f} "
+              f"{r['dominant']:>10s} {r['useful_ratio']:7.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark harness: one entry per paper figure + the roofline table.
+
+Prints ``name,us_per_call,derived`` CSV lines (detail lines are prefixed
+with ``#``). Scale knobs are chosen so the full suite runs on CPU in
+minutes; pass --full for paper-scale rounds.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (fig4_speed, fig5_alpha, fig8_v_weight,
+                            fig10_cifar, fig12_traj, roofline)
+    jobs = {
+        "fig4_speed": lambda: fig4_speed.main(),
+        "fig5_alpha": lambda: fig5_alpha.main(),
+        "fig8_v_weight": lambda: fig8_v_weight.main(),
+        "fig10_cifar": lambda: fig10_cifar.main(
+            rounds=50 if args.full else 30),
+        "fig12_traj": lambda: fig12_traj.main(
+            rounds=60 if args.full else 20),
+        "roofline": lambda: roofline.main(),
+    }
+    only = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    rc = 0
+    for name, fn in jobs.items():
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+            import traceback
+            traceback.print_exc(limit=3)
+            rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

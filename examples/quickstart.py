@@ -1,0 +1,45 @@
+"""Quickstart: one VFL scheduling round, VEDS vs the paper's benchmarks.
+
+Runs the full pipeline — Manhattan mobility, 3GPP TR 37.885 channels,
+derivative-based drift-plus-penalty scheduling with the interior-point COT
+solver — for a handful of rounds and prints who got their model uploaded.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.channel.mobility import ManhattanParams
+from repro.channel.v2x import ChannelParams
+from repro.core.baselines import SCHEDULERS
+from repro.core.lyapunov import VedsParams
+from repro.core.scenario import ScenarioParams, make_round
+
+
+def main():
+    mob = ManhattanParams(v_max=10.0)
+    ch = ChannelParams()
+    prm = VedsParams(alpha=2.0, V=0.2, Q=1e7, slot=0.1)
+    sc = ScenarioParams(n_sov=8, n_opv=8, n_slots=60)
+
+    mk = jax.jit(lambda k: make_round(k, sc, mob, ch, prm))
+    runners = {n: jax.jit(lambda r, fn=fn: fn(r, prm, ch))
+               for n, fn in SCHEDULERS.items()}
+
+    print(f"{'scheduler':12s} {'success/round':>14s} {'COT slots':>10s} "
+          f"{'max SOV energy':>15s}")
+    for name, run in runners.items():
+        succ, cot, emax = [], [], []
+        for seed in range(4):
+            out = run(mk(jax.random.key(seed)))
+            succ.append(float(out["n_success"]))
+            cot.append(float(out["n_cot_slots"]))
+            emax.append(float(out["energy_sov"].max()))
+        print(f"{name:12s} {np.mean(succ):>10.2f}/{sc.n_sov} "
+              f"{np.mean(cot):>10.1f} {np.mean(emax):>14.4f}J")
+    print("\nVEDS should be near the optimal bound and clearly above "
+          "V2I-only — the V2V sidelink relays are doing the work.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Serve a small model with batched requests (prefill + decode loop).
+
+  PYTHONPATH=src python examples/serve_batch.py --arch zamba2-2.7b --batch 4
+(thin wrapper over repro.launch.serve; any --arch from the registry works)
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    argv = ["--arch", "zamba2-2.7b", "--batch", "4", "--prompt-len", "32",
+            "--gen", "16"]
+    argv += sys.argv[1:]
+    sys.argv = ["serve_batch"] + argv
+    return serve_main()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+from repro.channel.mobility import ManhattanParams, init_mobility, step_mobility  # noqa: F401
+from repro.channel.v2x import ChannelParams, channel_gain, pathloss_db  # noqa: F401

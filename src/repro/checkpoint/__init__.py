@@ -1,0 +1,1 @@
+from repro.checkpoint.np_ckpt import load_checkpoint, save_checkpoint  # noqa: F401

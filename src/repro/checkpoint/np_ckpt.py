@@ -1,0 +1,45 @@
+"""Checkpointing: pytree <-> .npz with path-flattened keys + JSON meta."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, meta: Optional[Dict[str, Any]] = None,
+                    step: Optional[int] = None) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    meta = dict(meta or {})
+    if step is not None:
+        meta["step"] = step
+    with open(path.replace(".npz", "") + ".meta.json", "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of `like` (a template pytree)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_template = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat_template[0]:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = data[key]
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)

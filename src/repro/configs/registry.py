@@ -1,0 +1,37 @@
+"""Architecture registry: --arch <id> resolution for launch/dryrun/train."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.configs import (
+    zamba2_2p7b, xlstm_1p3b, qwen3_32b, starcoder2_15b, minitron_4b,
+    llama32_vision_90b, granite_moe_1b, whisper_small, codeqwen_7b,
+    llama4_scout,
+)
+
+_MODULES = (
+    zamba2_2p7b, xlstm_1p3b, qwen3_32b, starcoder2_15b, minitron_4b,
+    llama32_vision_90b, granite_moe_1b, whisper_small, codeqwen_7b,
+    llama4_scout,
+)
+
+ARCH_IDS: Tuple[str, ...] = tuple(m.ID for m in _MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    for m in _MODULES:
+        if m.ID == arch:
+            return m.config()
+    raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    for m in _MODULES:
+        if m.ID == arch:
+            return m.smoke_config()
+    raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {m.ID: m.config() for m in _MODULES}

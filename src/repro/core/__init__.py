@@ -1,0 +1,10 @@
+"""VEDS core: the paper's primary contribution.
+
+Scheduler (Algorithms 1/2), derivative-based drift-plus-penalty machinery,
+convex solvers (Prop. 1 closed form + interior-point P4), scenario builder,
+and the four benchmark schedulers from Section VI.
+"""
+from repro.core.lyapunov import VedsParams, sigmoid_shifted, sigmoid_weight  # noqa: F401
+from repro.core.veds import RoundInputs, veds_round, solve_slot  # noqa: F401
+from repro.core.baselines import SCHEDULERS  # noqa: F401
+from repro.core.scenario import ScenarioParams, make_round  # noqa: F401

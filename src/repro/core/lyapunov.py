@@ -1,0 +1,58 @@
+"""Derivative-based drift-plus-penalty machinery (paper eqs. 16-20).
+
+The stepwise indicator 1{sum_t z_m(t) >= Q} is approximated by the shifted
+sigmoid sigma(z) = 1 / (1 + exp(-alpha (z - Q) / Q)); the per-slot scheduling
+weight is its derivative evaluated at zeta_m(t) (bits already delivered).
+Virtual queues track cumulative energy-budget violation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class VedsParams:
+    alpha: float = 2.0       # sigmoid approximation sharpness
+    V: float = 0.2           # drift-plus-penalty trade-off weight
+    Q: float = 1e7           # model size [bits]
+    slot: float = 0.1        # kappa [s]
+    ipm_iters: int = 25      # Newton iterations for P4
+    ipm_mu: float = 1e-3     # final barrier weight
+
+
+def sigmoid_shifted(z: jax.Array, prm: VedsParams) -> jax.Array:
+    return jax.nn.sigmoid(prm.alpha * (z - prm.Q) / prm.Q)
+
+
+def sigmoid_weight(zeta: jax.Array, prm: VedsParams) -> jax.Array:
+    """d sigma / d zeta at the delivered-bits state (eq. below (17))."""
+    s = sigmoid_shifted(zeta, prm)
+    return prm.alpha * s * (1.0 - s) / prm.Q
+
+
+def psi(prm: VedsParams) -> float:
+    """psi(alpha) = sigma'(0) / sigma'(Q) — Theorem 2's bound factor."""
+    import math
+    s0 = 1.0 / (1.0 + math.exp(prm.alpha))
+    sq = 0.5
+    return (s0 * (1 - s0)) / (sq * (1 - sq))
+
+
+def update_queue_sov(q: jax.Array, e_cm: jax.Array, e_cons: jax.Array,
+                     e_cp: jax.Array, T: int) -> jax.Array:
+    """Eq. (19)."""
+    return jnp.maximum(q + e_cm - (e_cons - e_cp) / T, 0.0)
+
+
+def update_queue_opv(q: jax.Array, e_cm: jax.Array, e_cons: jax.Array,
+                     T: int) -> jax.Array:
+    """Eq. (20)."""
+    return jnp.maximum(q + e_cm - e_cons / T, 0.0)
+
+
+def update_zeta(zeta: jax.Array, z: jax.Array, prm: VedsParams) -> jax.Array:
+    """Eq. (17): delivered bits, saturated at Q."""
+    return jnp.minimum(zeta + z, prm.Q)

@@ -1,0 +1,71 @@
+"""Scenario generation: mobility rollout + channel draws -> RoundInputs.
+
+This is the simulation substrate behind every paper figure: a fleet of
+vehicles on the Manhattan grid; per round, the first S in-coverage vehicles
+are SOVs (they hold data and train) and the next U are OPVs (relays).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.channel.mobility import (ManhattanParams, init_mobility,
+                                    rollout_positions)
+from repro.channel.v2x import ChannelParams, channel_gain
+from repro.core.lyapunov import VedsParams
+from repro.core.veds import RoundInputs
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioParams:
+    n_sov: int = 10
+    n_opv: int = 10
+    n_slots: int = 100
+    n_flop: float = 2.0e7        # FLOPs per sample (paper's computation model)
+    batch_size: int = 32
+    clock_hz: float = 1.0e9      # vehicle processor clock
+    rho: float = 1.0e-28         # energy coefficient (Table I)
+    e_min: float = 0.05          # energy budget low [J]  (Table I)
+    e_max: float = 0.10          # energy budget high [J]
+
+
+def compute_model(sc: ScenarioParams) -> Tuple[float, float]:
+    """Returns (t_cp, e_cp) for the standard computation model."""
+    work = sc.n_flop * sc.batch_size
+    t_cp = work / sc.clock_hz
+    e_cp = sc.rho * sc.clock_hz ** 2 * work
+    return t_cp, e_cp
+
+
+def make_round(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
+               ch: ChannelParams, prm: VedsParams) -> RoundInputs:
+    """One round's gains/budgets. Vehicles: [0:S] SOVs, [S:S+U] OPVs."""
+    S, U, T = sc.n_sov, sc.n_opv, sc.n_slots
+    k_mob, k_ch, k_e, k_cp = jax.random.split(key, 4)
+    st = init_mobility(k_mob, S + U, mob)
+    _, traj = rollout_positions(jax.random.fold_in(k_mob, 1), st, mob, T,
+                                prm.slot)                       # [T,N,2]
+    rsu = jnp.asarray(mob.rsu_xy)
+    d_rsu = jnp.linalg.norm(traj - rsu, axis=-1)                # [T,N]
+    cov = d_rsu <= mob.coverage
+    d_sov_opv = jnp.linalg.norm(
+        traj[:, :S, None, :] - traj[:, None, S:, :], axis=-1)   # [T,S,U]
+
+    ks = jax.random.split(k_ch, 3)
+    g_sr = channel_gain(ks[0], d_rsu[:, :S], ch, in_range=cov[:, :S])
+    g_or = channel_gain(ks[1], d_rsu[:, S:], ch, in_range=cov[:, S:])
+    g_so = channel_gain(ks[2], d_sov_opv, ch)
+
+    t_cp_s, e_cp_s = compute_model(sc)
+    # small heterogeneity across vehicles in clock speed
+    jitter = jax.random.uniform(k_cp, (S,), minval=0.8, maxval=1.2)
+    t_cp = t_cp_s / jitter
+    e_cp = e_cp_s * jitter ** 2
+    e_sov = jax.random.uniform(k_e, (S,), minval=sc.e_min, maxval=sc.e_max)
+    e_opv = jax.random.uniform(jax.random.fold_in(k_e, 1), (U,),
+                               minval=sc.e_min, maxval=sc.e_max)
+    return RoundInputs(g_sr=g_sr, g_or=g_or, g_so=g_so, t_cp=t_cp,
+                       e_cp=e_cp, e_sov=e_sov, e_opv=e_opv)

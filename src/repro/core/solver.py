@@ -1,0 +1,105 @@
+"""Convex solvers for the per-slot subproblems.
+
+* P3.1 (direct transmission): closed form (Proposition 1).
+* P4 (cooperative transmission, fixed OPV prefix): log-barrier damped-Newton
+  interior-point method, branch-free with a fixed iteration budget so it can
+  be jit'ed and vmapped over all (SOV, prefix) candidates. This replaces the
+  paper's CVX call — same convex program, TPU-native solver (see DESIGN.md §3).
+
+P4 in our canonical form, variables p in R^{1+U} (index 0 = the SOV):
+  maximize  cw * ln(1 + a.p) - q.p
+  s.t.      0 <= p <= pmax,   d.p <= 0
+with d = a - g_min * e0 (decodability constraint (28), reduced to the
+weakest scheduled OPV), entries of a zeroed for unscheduled OPVs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dt_power_opt(cw: jax.Array, q: jax.Array, gain: jax.Array,
+                 noise: float, p_max: float) -> jax.Array:
+    """Proposition 1: water-filling style closed form for P3.1.
+
+    cw = V * dsigma/dzeta * beta / ln(2) (nats); q = kappa * queue weight.
+    Maximizes cw*ln(1 + gain*p/noise) - q*kappa*p over [0, p_max].
+    """
+    a = gain / noise
+    p = cw / jnp.maximum(q, 1e-12) - 1.0 / jnp.maximum(a, 1e-30)
+    return jnp.clip(p, 0.0, p_max)
+
+
+def _phi_grad_hess(p, a, q, cw, d, p_max, mu):
+    """Barrier objective phi = F + mu * barriers; returns (grad, hess)."""
+    s = 1.0 + jnp.dot(a, p)
+    gF = cw * a / s - q
+    HF = -cw * jnp.outer(a, a) / (s * s)
+    # box barriers
+    g_lo = mu / jnp.maximum(p, 1e-12)
+    g_hi = -mu / jnp.maximum(p_max - p, 1e-12)
+    H_lo = -mu / jnp.maximum(p, 1e-12) ** 2
+    H_hi = -mu / jnp.maximum(p_max - p, 1e-12) ** 2
+    # decodability barrier: ln(-d.p), requires d.p < 0
+    slack = -jnp.dot(d, p)
+    g_c = -mu * d / jnp.maximum(slack, 1e-12)
+    H_c = -mu * jnp.outer(d, d) / jnp.maximum(slack, 1e-12) ** 2
+    grad = gF + g_lo + g_hi + g_c
+    hess = HF + jnp.diag(H_lo + H_hi) + H_c
+    return grad, hess
+
+
+def _project_feasible(p, d, p_max, margin=0.999):
+    """Clip into the box and scale OPV powers to satisfy d.p <= 0."""
+    p = jnp.clip(p, 1e-9, p_max - 1e-9)
+    p_m = p[0]
+    rest = p[1:]
+    # d0 <= 0 when feasible candidate; headroom = -d0 * p_m
+    headroom = jnp.maximum(-d[0] * p_m, 1e-30)
+    load = jnp.dot(d[1:], rest)
+    scale = jnp.minimum(1.0, margin * headroom / jnp.maximum(load, 1e-30))
+    return jnp.concatenate([p[:1], rest * scale])
+
+
+def solve_p4(cw: jax.Array, a: jax.Array, q: jax.Array, d: jax.Array,
+             p_max: jax.Array, *, iters: int = 25,
+             mu_final: float = 1e-3):
+    """Interior-point solve of P4. All args vectors [1+U] except cw scalar.
+
+    Unscheduled OPVs must have a=0, q arbitrary, p_max>0; their optimum is 0.
+    Returns (p_opt, value) with value = cw*ln(1+a.p) - q.p.
+    """
+    n = a.shape[0]
+    p0 = jnp.full((n,), 0.25) * p_max
+    p0 = p0.at[0].set(0.5 * p_max[0])
+    p0 = _project_feasible(p0, d, p_max, margin=0.5)
+
+    mus = jnp.geomspace(1e-1, mu_final, iters)
+
+    def step(p, mu):
+        grad, hess = _phi_grad_hess(p, a, q, cw, d, p_max, mu)
+        # damped Newton ascent on the concave barrier objective
+        hess = hess - 1e-9 * jnp.eye(n)
+        dlt = jnp.linalg.solve(hess, -grad)
+        # keep steps inside the trust region of the barrier
+        norm = jnp.linalg.norm(dlt)
+        dlt = dlt * jnp.minimum(1.0, 0.5 * jnp.max(p_max) / (norm + 1e-12))
+        p_new = _project_feasible(p + dlt, d, p_max)
+        return p_new, None
+
+    p, _ = jax.lax.scan(step, p0, mus)
+    # gradient polish: a few projected-ascent steps on the raw objective
+    def polish(p, i):
+        s = 1.0 + jnp.dot(a, p)
+        g = cw * a / s - q
+        lr = 0.05 * jnp.max(p_max) / (jnp.linalg.norm(g) + 1e-12)
+        return _project_feasible(p + lr * g, d, p_max), None
+
+    p, _ = jax.lax.scan(polish, p, jnp.arange(10))
+    val = cw * jnp.log1p(jnp.dot(a, p)) - jnp.dot(q, p)
+    # zero-power value as a floor (solver never worse than not transmitting)
+    val0 = jnp.zeros(())
+    better = val >= val0
+    p = jnp.where(better, p, jnp.zeros_like(p))
+    val = jnp.maximum(val, val0)
+    return p, val

@@ -1,0 +1,3 @@
+from repro.data.synthetic import (  # noqa: F401
+    cifar_like_dataset, lm_batch, make_trajectory_batch, partition_labels,
+)

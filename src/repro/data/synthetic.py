@@ -1,0 +1,121 @@
+"""Deterministic synthetic data generators (offline substitutes; DESIGN.md §6).
+
+* CIFAR-like: 10-class 32x32x3 images = class prototype mixed into random
+  structure + noise, so a small CNN genuinely learns (acc well above chance),
+  supporting the paper's Fig. 10/11 comparisons under identical seeds.
+* Trajectories: Argoverse-like kinematic sequences (2s hist -> 3s future,
+  10 Hz) with turning maneuvers + lane-node map features, for LaneGCN-lite.
+* LM token streams: structured Markov-ish streams for the big-arch smoke and
+  end-to-end training demos.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lanegcn import FUT, HIST
+
+
+# ---------------------------------------------------------------------------
+# CIFAR-like classification
+# ---------------------------------------------------------------------------
+
+def cifar_like_dataset(key: jax.Array, n: int, noise: float = 0.6,
+                       proto_seed: int = 42):
+    """Returns images [n,32,32,3] in [-1,1]-ish and labels [n].
+
+    Class prototypes are drawn from `proto_seed` (not `key`) so that train
+    and test splits share the same class structure.
+    """
+    _, k2, k3 = jax.random.split(key, 3)
+    protos = jax.random.normal(jax.random.key(proto_seed), (10, 32, 32, 3))
+    labels = jax.random.randint(k2, (n,), 0, 10)
+    base = protos[labels]
+    imgs = base + noise * jax.random.normal(k3, (n, 32, 32, 3))
+    return imgs.astype(jnp.float32), labels
+
+
+def partition_labels(labels: np.ndarray, n_clients: int,
+                     iid: bool, classes_per_client: int = 2,
+                     seed: int = 0) -> list:
+    """Index partition: iid shuffle-split or label-sharded non-iid (the
+    paper's non-iid setting: each vehicle holds samples from 2 classes)."""
+    rng = np.random.default_rng(seed)
+    n = len(labels)
+    if iid:
+        idx = rng.permutation(n)
+        return np.array_split(idx, n_clients)
+    # strict label sharding: each client receives `classes_per_client`
+    # single-class chunks from distinct classes (the paper's 2-class split)
+    classes = np.unique(labels)
+    k = len(classes)
+    chunks_per_class = max(1, (n_clients * classes_per_client) // k)
+    chunks = []  # (class_rank, indices)
+    for rank, c in enumerate(classes):
+        idx = rng.permutation(np.where(labels == c)[0])
+        for part in np.array_split(idx, chunks_per_class):
+            chunks.append((rank, part))
+    parts = [[] for _ in range(n_clients)]
+    # class-major order + a stride of n_clients gives each client chunks
+    # from different classes
+    for j, (rank, part) in enumerate(chunks):
+        parts[j % n_clients].append(part)
+    return [np.concatenate(p) if p else np.array([], np.int64)
+            for p in parts]
+
+
+# ---------------------------------------------------------------------------
+# Argoverse-like trajectories
+# ---------------------------------------------------------------------------
+
+def make_trajectory_batch(key: jax.Array, b: int,
+                          num_map_nodes: int = 64) -> Dict[str, jax.Array]:
+    """Kinematic trajectories with random curvature + speed profile."""
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    dt = 0.1
+    speed = jax.random.uniform(k1, (b, 1), minval=3.0, maxval=15.0)
+    heading0 = jax.random.uniform(k2, (b, 1), minval=0.0, maxval=2 * jnp.pi)
+    curls = jax.random.normal(k3, (b, 1)) * 0.05          # turn rate rad/step
+    accel = jax.random.normal(k5, (b, 1)) * 0.05
+    t = jnp.arange(HIST + FUT, dtype=jnp.float32)[None, :]
+    heading = heading0 + curls * t
+    v = jnp.maximum(speed + accel * t, 0.5)
+    dx = jnp.stack([v * jnp.cos(heading), v * jnp.sin(heading)], -1) * dt
+    pos = jnp.cumsum(dx, axis=1)
+    pos = pos - pos[:, HIST - 1:HIST]                     # center at t=0
+    hist, fut = pos[:, :HIST], pos[:, HIST:]
+    # map: lane nodes sampled along the future path + lateral offsets
+    sel = jnp.linspace(0, FUT - 1, num_map_nodes).astype(jnp.int32)
+    centers = fut[:, sel]
+    off = jax.random.normal(k4, (b, num_map_nodes, 2)) * 2.0
+    nodes = centers + off
+    dirs = jnp.gradient(nodes, axis=1)[0] if False else \
+        jnp.concatenate([nodes[:, 1:] - nodes[:, :-1],
+                         nodes[:, -1:] - nodes[:, -2:-1]], axis=1)
+    map_feats = jnp.concatenate([nodes * 0.05, dirs], axis=-1)
+    d2 = jnp.sum((nodes[:, :, None] - nodes[:, None]) ** 2, -1)
+    adj = (d2 < 25.0).astype(jnp.float32)
+    return {"hist": hist, "fut": fut, "map_feats": map_feats,
+            "map_adj": adj}
+
+
+# ---------------------------------------------------------------------------
+# LM token streams
+# ---------------------------------------------------------------------------
+
+def lm_batch(key: jax.Array, b: int, t: int, vocab: int) -> Dict[str, jax.Array]:
+    """Structured token stream: tokens follow a noisy +step pattern so the
+    next-token task has learnable signal."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    start = jax.random.randint(k1, (b, 1), 0, vocab)
+    step = jax.random.randint(k2, (b, 1), 1, 7)
+    ar = jnp.arange(t + 1)[None, :]
+    toks = (start + step * ar) % vocab
+    noise = jax.random.bernoulli(k3, 0.1, toks.shape)
+    rand = jax.random.randint(jax.random.fold_in(key, 7), toks.shape, 0, vocab)
+    toks = jnp.where(noise, rand, toks)
+    return {"tokens": toks[:, :t].astype(jnp.int32),
+            "labels": toks[:, 1:t + 1].astype(jnp.int32)}

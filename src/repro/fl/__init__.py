@@ -1,0 +1,2 @@
+from repro.fl.vfl import make_vfl_round, vehicle_axes  # noqa: F401
+from repro.fl.simulator import FLSimConfig, run_fl  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.kernels.fedavg_agg.ops import fedavg_agg_tpu  # noqa: F401
+from repro.kernels.fedavg_agg.ref import fedavg_agg_ref  # noqa: F401

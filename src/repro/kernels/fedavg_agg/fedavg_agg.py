@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: masked weighted FedAvg aggregation (eq. 11).
+
+Per-device leg of the VFL aggregation: fuse mask*weight scaling, the
+vehicle-axis reduction and the normalization into one VMEM pass over the
+parameter shard (the all-reduce across devices stays a collective; this
+kernel removes the intermediate scaled copies XLA would otherwise
+materialize).
+
+x [V, L] (vehicle-stacked flat param shard), w [V] (mask * |D_m|), plus the
+previous global params old [L] used when all uploads failed.
+Grid over L tiles; weights are broadcast into each program.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, old_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # [V, bl]
+    w = w_ref[...].astype(jnp.float32)          # [1, V]
+    num = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [1, bl]
+    den = jnp.sum(w)
+    avg = num[0] / jnp.maximum(den, 1e-9)
+    o_ref[...] = jnp.where(den > 0, avg,
+                           old_ref[...].astype(jnp.float32)
+                           ).astype(o_ref.dtype)
+
+
+def fedavg_agg_pallas(x: jax.Array, w: jax.Array, old: jax.Array, *,
+                      block_l: int = 2048,
+                      interpret: bool = True) -> jax.Array:
+    V, L = x.shape
+    block_l = min(block_l, L)
+    nl = pl.cdiv(L, block_l)
+    return pl.pallas_call(
+        _kernel,
+        grid=(nl,),
+        in_specs=[
+            pl.BlockSpec((V, block_l), lambda i: (0, i)),
+            pl.BlockSpec((1, V), lambda i: (0, 0)),
+            pl.BlockSpec((block_l,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_l,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((L,), x.dtype),
+        interpret=interpret,
+    )(x, w[None], old)

@@ -1,0 +1,33 @@
+"""Jit'd wrapper: aggregate a whole pytree of vehicle-stacked params."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedavg_agg.fedavg_agg import fedavg_agg_pallas
+from repro.kernels.fedavg_agg.ref import fedavg_agg_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("force_ref", "block_l"))
+def fedavg_agg_tpu(x: jax.Array, w: jax.Array, old: jax.Array, *,
+                   block_l: int = 2048, force_ref: bool = False) -> jax.Array:
+    if force_ref:
+        return fedavg_agg_ref(x, w, old)
+    return fedavg_agg_pallas(x, w, old, block_l=block_l,
+                             interpret=not _on_tpu())
+
+
+def fedavg_agg_tree(params_v, w, old_tree, **kw):
+    """Apply the kernel leaf-wise over a [V, ...] stacked pytree."""
+    def leaf(x, old):
+        V = x.shape[0]
+        flat = x.reshape(V, -1)
+        out = fedavg_agg_tpu(flat, w, old.reshape(-1), **kw)
+        return out.reshape(old.shape)
+    return jax.tree.map(leaf, params_v, old_tree)

@@ -1,0 +1,12 @@
+"""Oracle for the FedAvg aggregation kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg_agg_ref(x: jax.Array, w: jax.Array, old: jax.Array) -> jax.Array:
+    den = w.sum()
+    avg = jnp.einsum("v,vl->l", w.astype(jnp.float32),
+                     x.astype(jnp.float32)) / jnp.maximum(den, 1e-9)
+    return jnp.where(den > 0, avg, old.astype(jnp.float32)).astype(x.dtype)

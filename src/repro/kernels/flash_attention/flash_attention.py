@@ -1,0 +1,120 @@
+"""Pallas TPU flash-attention kernel (causal / sliding-window / full).
+
+Grid: (BH, num_q_blocks, num_kv_blocks); the kv axis is innermost and
+iterated sequentially on TPU, so the online-softmax state (m, l, acc) lives
+in VMEM scratch that persists across kv steps of one (batch*head, q-block).
+
+BlockSpecs tile HBM->VMEM as:
+  q:   (1, block_q, D)  indexed (bh, qi, 0)
+  k,v: (1, block_kv, D) indexed (bh, 0,  kj)
+  out: (1, block_q, D)  written on the last kv step.
+
+MXU alignment: block_q/block_kv multiples of 128 recommended; D is the
+(padded) head dim. fp32 accumulation throughout.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: Optional[int],
+            block_q: int, block_kv: int, seq_q: int, seq_kv: int,
+            q_offset: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                      # [bq, D]
+    k = k_ref[0].astype(jnp.float32)                      # [bk, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0)
+    kpos = kj * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    mask = kpos < seq_kv
+    if causal:
+        mask = mask & (qpos >= kpos)
+    if window is not None:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    # zero the padded kv tail so 0 * garbage (possibly NaN) cannot poison acc
+    kv_valid = (kj * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_kv, 1), 0)) < seq_kv
+    v_blk = jnp.where(kv_valid, v_ref[0].astype(jnp.float32), 0.0)
+    acc = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v_blk, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-37)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: Optional[int] = None,
+    block_q: int = 128, block_kv: int = 128, q_offset: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    """q [BH, T, D]; k/v [BH, S, D] -> [BH, T, D]."""
+    BH, T, D = q.shape
+    S = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    block_q = min(block_q, T)
+    block_kv = min(block_kv, S)
+    nq = pl.cdiv(T, block_q)
+    nk = pl.cdiv(S, block_kv)
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, seq_q=T, seq_kv=S,
+        q_offset=q_offset)
+
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, D), q.dtype),
+        scratch_shapes=[
+            # (m, l, acc) persist across the kv grid dimension in VMEM
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

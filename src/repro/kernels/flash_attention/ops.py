@@ -1,0 +1,46 @@
+"""Jit'd wrapper: GQA-aware entry point with interpret/XLA fallback.
+
+On TPU, `flash_attention_tpu` runs the Pallas kernel; on CPU it runs the
+kernel body in interpret mode (correctness) unless `force_ref` is set.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "force_ref",
+                                             "q_offset"))
+def flash_attention_tpu(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        block_q: int = 128, block_kv: int = 128,
+                        q_offset: int = 0,
+                        force_ref: bool = False) -> jax.Array:
+    """q [B,T,H,D]; k/v [B,S,KV,D] (KV divides H). Returns [B,T,H,D]."""
+    B, T, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+    kf = kr.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vf = vr.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    if force_ref:
+        of = flash_attention_ref(qf, kf, vf, causal=causal, window=window,
+                                 q_offset=q_offset)
+    else:
+        of = flash_attention_pallas(
+            qf, kf, vf, causal=causal, window=window, block_q=block_q,
+            block_kv=block_kv, q_offset=q_offset, interpret=not _on_tpu())
+    return of.reshape(B, H, T, D).transpose(0, 2, 1, 3)

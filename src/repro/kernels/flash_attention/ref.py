@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        q_offset: int = 0) -> jax.Array:
+    """q [BH,T,D]; k/v [BH,S,D]. Naive softmax attention with masks."""
+    BH, T, D = q.shape
+    S = k.shape[1]
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    qpos = q_offset + jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask = mask & (qpos >= kpos)
+    if window is not None:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

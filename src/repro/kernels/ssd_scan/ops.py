@@ -1,0 +1,32 @@
+"""Jit'd wrapper for the SSD scan kernel (pads T to a chunk multiple)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "force_ref"))
+def ssd_scan_tpu(v: jax.Array, b: jax.Array, c: jax.Array, log_a: jax.Array,
+                 *, chunk: int = 128, force_ref: bool = False) -> jax.Array:
+    if force_ref:
+        return ssd_scan_ref(v, b, c, log_a)
+    BH, T, P = v.shape
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad)))
+    y = ssd_scan_pallas(v, b, c, log_a, chunk=chunk,
+                        interpret=not _on_tpu())
+    return y[:, :T]

@@ -1,0 +1,28 @@
+"""Oracle for the SSD scan kernel: naive O(T) recurrence (different
+algorithm than the chunked kernel, hence a strong cross-check)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(v: jax.Array, b: jax.Array, c: jax.Array,
+                 log_a: jax.Array) -> jax.Array:
+    """v [BH,T,P], b/c [BH,T,N], log_a [BH,T] -> y [BH,T,P]."""
+    BH, T, P = v.shape
+    N = b.shape[-1]
+
+    def step(state, xs):
+        v_t, b_t, c_t, la_t = xs
+        state = jnp.exp(la_t)[:, None, None] * state \
+            + jnp.einsum("bn,bp->bnp", b_t, v_t)
+        y = jnp.einsum("bn,bnp->bp", c_t, state)
+        return state, y
+
+    xs = (v.astype(jnp.float32).swapaxes(0, 1),
+          b.astype(jnp.float32).swapaxes(0, 1),
+          c.astype(jnp.float32).swapaxes(0, 1),
+          log_a.astype(jnp.float32).swapaxes(0, 1))
+    s0 = jnp.zeros((BH, N, P), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1).astype(v.dtype)

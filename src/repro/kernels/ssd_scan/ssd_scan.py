@@ -1,0 +1,85 @@
+"""Pallas TPU kernel for the Mamba2/SSD chunked scan.
+
+Computes, per (batch*head), the scalar-decay linear recurrence
+  S_t = a_t * S_{t-1} + b_t v_t^T,   y_t = c_t . S_t
+in chunked form: intra-chunk quadratic part on the MXU + inter-chunk state
+carried in VMEM scratch across the sequential chunk grid dimension.
+
+Grid: (BH, num_chunks). Blocks:
+  v:  (1, C, P);  b,c: (1, C, N);  log_a: (1, C);  y: (1, C, P)
+State scratch: [N, P] f32, persists across chunks of one bh program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(v_ref, b_ref, c_ref, la_ref, y_ref, state_scr, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    v = v_ref[0].astype(jnp.float32)          # [C, P]
+    b = b_ref[0].astype(jnp.float32)          # [C, N]
+    c = c_ref[0].astype(jnp.float32)          # [C, N]
+    la = la_ref[0].astype(jnp.float32)        # [C]
+    cum = jnp.cumsum(la)                      # [C]
+
+    # intra-chunk: w_ij = (c_i . b_j) * exp(cum_i - cum_j) for j <= i
+    s = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [C, C]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    dec = jnp.exp(cum[:, None] - cum[None, :])
+    w = jnp.where(ii >= jj, s * dec, 0.0)
+    y = jax.lax.dot_general(w, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [C, P]
+
+    # inter-chunk from carried state
+    qeff = c * jnp.exp(cum)[:, None]
+    y = y + jax.lax.dot_general(qeff, state_scr[...],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # state update: S <- exp(cum_C) S + sum_j exp(cum_C - cum_j) b_j v_j^T
+    tail = jnp.exp(cum[-1] - cum)
+    keff = b * tail[:, None]
+    state_scr[...] = (jnp.exp(cum[-1]) * state_scr[...]
+                      + jax.lax.dot_general(
+                          keff, v, (((0,), (0,)), ((), ())),
+                          preferred_element_type=jnp.float32))
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_pallas(v: jax.Array, b: jax.Array, c: jax.Array,
+                    log_a: jax.Array, *, chunk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """v [BH,T,P], b/c [BH,T,N], log_a [BH,T] -> y [BH,T,P]."""
+    BH, T, P = v.shape
+    N = b.shape[-1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+
+    kern = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, P), v.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(v, b, c, log_a)

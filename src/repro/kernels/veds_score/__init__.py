@@ -1,0 +1,2 @@
+from repro.kernels.veds_score.ops import veds_dt_score_tpu  # noqa: F401
+from repro.kernels.veds_score.ref import veds_dt_score_ref  # noqa: F401

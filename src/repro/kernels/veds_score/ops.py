@@ -1,0 +1,25 @@
+"""Jit'd wrapper for the DT scoring kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.veds_score.ref import veds_dt_score_ref
+from repro.kernels.veds_score.veds_score import veds_dt_score_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "V", "kappa", "bw", "noise", "p_max", "block_c", "force_ref"))
+def veds_dt_score_tpu(g, q, w, e, *, V, kappa, bw, noise, p_max,
+                      block_c: int = 256, force_ref: bool = False):
+    if force_ref:
+        return veds_dt_score_ref(g, q, w, e, V=V, kappa=kappa, bw=bw,
+                                 noise=noise, p_max=p_max)
+    return veds_dt_score_pallas(g, q, w, e, V=V, kappa=kappa, bw=bw,
+                                noise=noise, p_max=p_max, block_c=block_c,
+                                interpret=not _on_tpu())

@@ -1,0 +1,20 @@
+"""Oracle for the DT scoring kernel (mirrors core.veds._dt_candidates)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LN2 = 0.6931471805599453
+NEG = -1e30
+
+
+def veds_dt_score_ref(g, q, w, e, *, V, kappa, bw, noise, p_max):
+    a = g.astype(jnp.float32) / noise
+    cw = V * w.astype(jnp.float32) * kappa * bw / LN2
+    q_eff = jnp.maximum(q.astype(jnp.float32) * kappa, 1e-9)
+    p = jnp.clip(cw / q_eff - 1.0 / jnp.maximum(a, 1e-30), 0.0, p_max)
+    rate = bw * jnp.log1p(p * a) / LN2
+    z = kappa * rate
+    y = V * w * z - q * kappa * p
+    valid = e & (g > 0)
+    return (jnp.where(valid, y, NEG), jnp.where(valid, p, 0.0),
+            jnp.where(valid, z, 0.0))

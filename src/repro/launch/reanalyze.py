@@ -1,0 +1,41 @@
+"""Recompute deep_cost fields of existing dry-run records from their stored
+HLO dumps (no recompilation). Usage:
+  PYTHONPATH=src python -m repro.launch.reanalyze [dir]
+"""
+import glob
+import gzip
+import json
+import sys
+
+from repro.launch.hlo_costs import analyze
+
+
+def main() -> int:
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    for path in sorted(glob.glob(d + "/*.json")):
+        gz = path.replace(".json", ".hlo.txt.gz")
+        try:
+            with gzip.open(gz, "rt") as f:
+                hlo = f.read()
+        except FileNotFoundError:
+            print("no hlo for", path)
+            continue
+        deep = analyze(hlo)
+        with open(path) as f:
+            rec = json.load(f)
+        rec["deep_cost"] = {
+            "dot_flops": deep["dot_flops"],
+            "hbm_bytes": deep["hbm_bytes"],
+            "unknown_trip_whiles": len(deep["unknown_trip_whiles"]),
+        }
+        rec["collectives_bytes"] = deep["collectives_bytes"]
+        rec["collectives_count"] = deep["collectives_count"]
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print("reanalyzed", path.split("/")[-1],
+              f"hbm={deep['hbm_bytes']/1e12:.2f}TB")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

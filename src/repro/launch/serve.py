@@ -1,0 +1,100 @@
+"""Batched serving driver: prefill a prompt batch, then decode N tokens.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch zamba2-2.7b \
+      --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def build_cross_cache(cfg, params, cache, src, tp):
+    """Populate cross-attention K/V cache slots from the source memory."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import engine
+
+    mem = engine.source_memory(params, cfg, src, tp)
+    new_cache = list(cache)
+    for i, kind in enumerate(cfg.pattern):
+        if kind != "cross":
+            continue
+        bp = params["blocks"][i]
+
+        def kv(bp_l):
+            k = jnp.einsum("bsd,dhk->bshk", mem, bp_l["wk"].astype(mem.dtype))
+            v = jnp.einsum("bsd,dhk->bshk", mem, bp_l["wv"].astype(mem.dtype))
+            return k, v
+
+        ks, vs = jax.vmap(kv)(bp)
+        new_cache[i] = {"k": ks.astype(cache[i]["k"].dtype),
+                        "v": vs.astype(cache[i]["v"].dtype)}
+    return list(new_cache)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="zamba2-2.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.registry import get_smoke_config
+    from repro.models import engine
+    from repro.models.module import materialize
+    from repro.sharding.policy import attention_tp_mode
+
+    mesh = jax.make_mesh((1, args.devices), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = get_smoke_config(args.arch)
+    tp = attention_tp_mode(cfg.num_heads, args.devices)
+    key = jax.random.key(args.seed)
+    params = materialize(key, engine.model_decl(cfg, tp))
+
+    B, P, G = args.batch, args.prompt_len, args.gen
+    S = P + G
+    prompts = jax.random.randint(jax.random.fold_in(key, 1), (B, P), 0,
+                                 cfg.vocab_size)
+    src = None
+    if cfg.family in ("vlm", "audio"):
+        src = 0.1 * jax.random.normal(
+            jax.random.fold_in(key, 2), (B, cfg.num_src_tokens, cfg.src_dim))
+
+    with jax.set_mesh(mesh):
+        step = jax.jit(lambda p, c, t, pos: engine.decode_step(
+            p, c, t, pos, cfg, mesh, tp=tp))
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             engine.cache_decl(cfg, B, S))
+        if src is not None:
+            cache = build_cross_cache(cfg, params, cache, src, tp)
+        # teacher-forced prefill through the decode path (exercises the same
+        # kernels the production server uses), then greedy generation
+        t0 = time.time()
+        toks = prompts[:, 0]
+        out = []
+        for t in range(S - 1):
+            logits, cache = step(params, cache, toks, jnp.int32(t))
+            nxt = logits.argmax(-1).astype(jnp.int32)
+            toks = jnp.where(t + 1 < P, prompts[:, min(t + 1, P - 1)], nxt)
+            if t + 1 >= P:
+                out.append(toks)
+        dt = time.time() - t0
+        gen = jnp.stack(out, 1)
+        print(f"arch={cfg.name} served batch={B} prompt={P} gen={gen.shape[1]}"
+              f" tokens in {dt:.1f}s ({B*gen.shape[1]/dt:.1f} tok/s)")
+        print("sample:", gen[0, :16].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

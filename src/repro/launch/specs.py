@@ -1,0 +1,201 @@
+"""Abstract inputs + shardings for every (arch x input-shape x mesh) combo.
+
+`build_case` returns (step_fn, abstract_args, in_shardings) such that
+  jax.jit(step_fn, in_shardings=...).lower(*abstract_args).compile()
+is the multi-pod dry-run for that combination. No arrays are allocated:
+params/caches/batches are jax.ShapeDtypeStruct stand-ins.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.channel.v2x import ChannelParams
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.lyapunov import VedsParams
+from repro.core.veds import RoundInputs
+from repro.fl.vfl import make_train_step
+from repro.models import engine
+from repro.models.module import abstract, axes_of
+from repro.sharding.policy import attention_tp_mode
+from repro.sharding.rules import LogicalRules, default_rules, fsdp_rules, spec_for
+
+N_OPV = 8
+N_SLOTS = 50
+
+
+def pick_rules(cfg: ModelConfig, mesh: Mesh) -> LogicalRules:
+    multi_pod = "pod" in mesh.axis_names
+    if cfg.num_vehicles == 1:
+        return fsdp_rules(multi_pod=False)  # embed->data; federation on pod
+    rules = default_rules(multi_pod=multi_pod)
+    if cfg.sharding_profile == "dp":
+        # edge-scale models: replicate params; parallelize the per-vehicle
+        # batch over the model axis instead (grad psum over 'model').
+        rules = rules.override(
+            vocab=None, heads=None, mlp=None, experts=None, row_in=None,
+            row_head_dim=None, ssm_heads=None)
+    return rules
+
+
+def effective_vehicles(cfg: ModelConfig, mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pods = sizes.get("pod", 1)
+    if cfg.num_vehicles == 1:
+        return pods  # federation across pods when available
+    return cfg.num_vehicles * pods if pods > 1 else cfg.num_vehicles
+
+
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _batch_entry(mesh: Mesh, b: int):
+    axes = _data_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if b % total == 0:
+        return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _tree_shardings(mesh, rules, axes_tree, prefix=()):
+    def one(a):
+        return _named(mesh, spec_for(rules, tuple(prefix) + a))
+    return jax.tree.map(one, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _round_inputs_abstract(V: int) -> RoundInputs:
+    f = jnp.float32
+    return RoundInputs(
+        g_sr=_sds((N_SLOTS, V), f), g_or=_sds((N_SLOTS, N_OPV), f),
+        g_so=_sds((N_SLOTS, V, N_OPV), f), t_cp=_sds((V,), f),
+        e_cp=_sds((V,), f), e_sov=_sds((V,), f), e_opv=_sds((N_OPV,), f))
+
+
+def build_case(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Returns (step_fn, args, in_shardings)."""
+    tp = attention_tp_mode(cfg.num_heads, mesh.shape.get("model", 1))
+    rules = pick_rules(cfg, mesh)
+    decl = engine.model_decl(cfg, tp)
+    p_axes = axes_of(decl)
+    p_abs = abstract(decl)
+    rep = _named(mesh, P())
+
+    if shape.kind == "train":
+        V = effective_vehicles(cfg, mesh)
+        cfg_v = cfg.replace(num_vehicles=V)
+        b_v = shape.global_batch // V
+        assert b_v >= 1 and b_v % max(cfg.grad_accum, 1) == 0 or \
+            cfg.grad_accum <= b_v, (b_v, cfg.grad_accum)
+        ga = min(cfg.grad_accum, b_v)
+        while b_v % ga:
+            ga -= 1
+        cfg_v = cfg_v.replace(grad_accum=ga)
+        params_v = jax.tree.map(
+            lambda s: _sds((V,) + s.shape, s.dtype), p_abs)
+        veh_axes = () if V == 1 else (
+            ("pod",) if (cfg.num_vehicles == 1) else _data_axes(mesh))
+        veh_spec_entry = (veh_axes if len(veh_axes) > 1 else
+                          (veh_axes[0] if veh_axes else None))
+        params_shard = jax.tree.map(
+            lambda a: _named(mesh, P(veh_spec_entry,
+                                     *spec_for(rules, a))),
+            p_axes, is_leaf=lambda x: isinstance(x, tuple))
+        batch = {"tokens": _sds((V, b_v, shape.seq_len), jnp.int32),
+                 "labels": _sds((V, b_v, shape.seq_len), jnp.int32)}
+        if V == 1:
+            inner = "data"
+        elif cfg.sharding_profile == "dp" and \
+                b_v % mesh.shape.get("model", 1) == 0:
+            inner = "model"  # dp profile: per-vehicle batch over model axis
+        else:
+            inner = None
+        bspec = P(veh_spec_entry, inner, None)
+        batch_shard = {"tokens": _named(mesh, bspec),
+                       "labels": _named(mesh, bspec)}
+        if cfg.family in ("vlm", "audio"):
+            batch["src"] = _sds((V, b_v, cfg.num_src_tokens, cfg.src_dim),
+                                cfg.dtype)
+            batch_shard["src"] = _named(
+                mesh, P(veh_spec_entry, inner, None, None))
+        rnd = _round_inputs_abstract(V)
+        rnd_shard = jax.tree.map(lambda _: rep, rnd)
+        weights = _sds((V,), jnp.float32)
+
+        veds_prm = VedsParams(Q=8 * 4e9 / max(V, 2), slot=0.1)
+        ch_prm = ChannelParams()
+        step = make_train_step(cfg_v, mesh, tp, lr=0.1,
+                               inline_scheduler=True,
+                               veds_prm=veds_prm, ch_prm=ch_prm)
+        args = (params_v, batch, rnd, weights)
+        shardings = (params_shard, batch_shard, rnd_shard, rep)
+        return step, args, shardings
+
+    if shape.kind == "prefill":
+        b_entry = _batch_entry(mesh, shape.global_batch)
+        tokens = _sds((shape.global_batch, shape.seq_len), jnp.int32)
+        params_shard = _tree_shardings(mesh, rules, p_axes)
+        args = [p_abs, tokens]
+        shardings = [params_shard, _named(mesh, P(b_entry, None))]
+        if cfg.family in ("vlm", "audio"):
+            args.append(_sds((shape.global_batch, cfg.num_src_tokens,
+                              cfg.src_dim), cfg.dtype))
+            shardings.append(_named(mesh, P(b_entry, None, None)))
+
+            def step(params, tokens, src):
+                # serving prefill returns only the last position's logits
+                # (§Perf iteration B3: full-sequence unembed + logits output
+                # dominated FLOPs and HBM of the baseline prefill)
+                logits, _ = engine.forward(params, tokens, cfg, tp=tp,
+                                           src=src, last_logit_only=True,
+                                           seq_shard=True)
+                return logits
+        else:
+            def step(params, tokens):
+                logits, _ = engine.forward(params, tokens, cfg, tp=tp,
+                                           last_logit_only=True,
+                                           seq_shard=True)
+                return logits
+        return step, tuple(args), tuple(shardings)
+
+    # decode
+    force_swa = (shape.seq_len > 100_000
+                 and cfg.long_context_variant == "swa")
+    B = shape.global_batch
+    b_entry = _batch_entry(mesh, B)
+    cache_decl_ = engine.cache_decl(cfg, B, shape.seq_len,
+                                    force_swa=force_swa)
+    cache_abs = abstract(cache_decl_)
+    cache_axes = axes_of(cache_decl_)
+    # batch axis of caches follows the data axes when divisible
+    c_rules = rules.override(batch=b_entry) if b_entry else \
+        rules.override(batch=None)
+    cache_shard = _tree_shardings(mesh, c_rules, cache_axes)
+    params_shard = _tree_shardings(mesh, rules, p_axes)
+    tokens = _sds((B,), jnp.int32)
+    pos = _sds((), jnp.int32)
+
+    def step(params, cache, tokens, pos):
+        logits, new_cache = engine.decode_step(
+            params, cache, tokens, pos, cfg, mesh, tp=tp,
+            force_swa=force_swa)
+        return logits, new_cache
+
+    args = (p_abs, cache_abs, tokens, pos)
+    shardings = (params_shard, cache_shard, _named(mesh, P(b_entry)), rep)
+    return step, args, shardings

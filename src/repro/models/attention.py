@@ -1,0 +1,413 @@
+"""Attention cores.
+
+Three paths, all GQA-grouped (no materialized KV-head repeat):
+
+* `flash_attention`: pure-jnp two-level chunked online-softmax attention used
+  for training and prefill. Memory is O(q_chunk * kv_chunk) per step; both
+  scan bodies are checkpointed so the backward recomputes tiles (flash-style)
+  instead of saving the score matrix. This is also the oracle the Pallas
+  kernel (`repro.kernels.flash_attention`) is validated against.
+* `decode_attention`: distributed single-token attention over a KV cache whose
+  *sequence* dimension is sharded across the `model` mesh axis (flash-decode).
+  Implemented with partial-manual shard_map: manual over `model`, GSPMD-auto
+  elsewhere. Works for any (heads, kv_heads) — no head-divisibility needed —
+  and is how long caches (32k/500k) fit per-device HBM.
+* `decode_attention_local`: single-device fallback (smoke tests, 1-device CPU).
+
+Layouts: q [B, T, KV, G, D]; k, v [B, S, KV, D]. Sliding-window decode uses a
+ring cache of width W with slot->position arithmetic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def _score_block(q, k, scale):
+    # q [B, qc, KV, G, D], k [B, kc, KV, D] -> [B, KV, G, qc, kc] (f32)
+    return jnp.einsum(
+        "bqkgd,bckd->bkgqc", q, k,
+        preferred_element_type=jnp.float32) * scale
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+    skip_masked_blocks: bool = True,
+) -> jax.Array:
+    """Chunked online-softmax attention. q [B,T,KV,G,D]; k,v [B,S,KV,D].
+
+    With skip_masked_blocks (§Perf iteration B), causal/windowed attention
+    iterates only the (q-chunk, kv-chunk) tiles that intersect the mask band
+    — a single scan over a statically precomputed tile list (qi-major), with
+    an O(q_chunk) online-softmax carry and one output write per q-chunk.
+    Halves both score FLOPs and score HBM traffic for causal attention.
+    """
+    if skip_masked_blocks and (causal or window is not None):
+        return _flash_attention_banded(
+            q, k, v, causal=causal, window=window, q_chunk=q_chunk,
+            kv_chunk=kv_chunk, q_offset=q_offset)
+    return _flash_attention_dense(
+        q, k, v, causal=causal, window=window, q_chunk=q_chunk,
+        kv_chunk=kv_chunk, q_offset=q_offset)
+
+
+def _flash_attention_dense(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    B, T, KV, G, D = q.shape
+    S = k.shape[1]
+    scale = 1.0 / (D ** 0.5)
+    q_chunk = min(q_chunk, T)
+    kv_chunk = min(kv_chunk, S)
+    nq = -(-T // q_chunk)
+    nk = -(-S // kv_chunk)
+    Tp, Sp = nq * q_chunk, nk * kv_chunk
+    if Tp != T:
+        q = jnp.pad(q, ((0, 0), (0, Tp - T)) + ((0, 0),) * 3)
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+
+    kc = k.reshape(B, nk, kv_chunk, KV, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, kv_chunk, KV, D).transpose(1, 0, 2, 3, 4)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def kv_step(carry, kv_blk, qi_blk, qpos0):
+        m, l, acc = carry
+        kj, vj, j = kv_blk
+        s = _score_block(qi_blk, kj, scale)  # [B,KV,G,qc,kc]
+        qpos = qpos0 + jnp.arange(q_chunk)
+        kpos = j * kv_chunk + jnp.arange(kv_chunk)
+        mask = kpos[None, :] < S  # padding
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        if window is not None:
+            mask = mask & (qpos[:, None] - kpos[None, :] < window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bqkgd", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def q_step(_, q_blk):
+        qi, i = q_blk
+        qpos0 = q_offset + i * q_chunk
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, KV, G, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            lambda c, kvb: kv_step(c, kvb, qi, qpos0),
+            (m0, l0, a0), (kc, vc, jnp.arange(nk)))
+        out = acc / jnp.maximum(
+            l.transpose(0, 3, 1, 2)[..., None], 1e-37)
+        return None, out.astype(q.dtype)
+
+    qcs = q.reshape(B, nq, q_chunk, KV, G, D).transpose(1, 0, 2, 3, 4, 5)
+    _, outs = jax.lax.scan(q_step, None, (qcs, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tp, KV, G, D)
+    return out[:, :T]
+
+
+def _band_tiles(T, S, q_chunk, kv_chunk, q_offset, causal, window):
+    """Static (qi, kj) tile list intersecting the causal/window band,
+    qi-major, plus first/last flags per qi group."""
+    nq = -(-T // q_chunk)
+    nk = -(-S // kv_chunk)
+    tiles = []
+    for qi in range(nq):
+        q_lo = q_offset + qi * q_chunk
+        q_hi = q_offset + (qi + 1) * q_chunk - 1
+        row = []
+        for kj in range(nk):
+            k_lo = kj * kv_chunk
+            k_hi = (kj + 1) * kv_chunk - 1
+            if causal and k_lo > q_hi:
+                continue
+            if window is not None and k_hi <= q_lo - window:
+                continue
+            row.append((qi, kj))
+        if not row:  # keep at least one tile so the row normalizes
+            row = [(qi, 0)]
+        tiles.append(row)
+    qi_arr, kj_arr, first, last = [], [], [], []
+    for row in tiles:
+        for i, (qi, kj) in enumerate(row):
+            qi_arr.append(qi)
+            kj_arr.append(kj)
+            first.append(i == 0)
+            last.append(i == len(row) - 1)
+    import numpy as np
+    return (np.asarray(qi_arr, np.int32), np.asarray(kj_arr, np.int32),
+            np.asarray(first, bool), np.asarray(last, bool), nq, nk)
+
+
+def _flash_attention_banded(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+    window: Optional[int], q_chunk: int, kv_chunk: int, q_offset: int,
+) -> jax.Array:
+    B, T, KV, G, D = q.shape
+    S = k.shape[1]
+    scale = 1.0 / (D ** 0.5)
+    q_chunk = min(q_chunk, T)
+    kv_chunk = min(kv_chunk, S)
+    qi_arr, kj_arr, first, last, nq, nk = _band_tiles(
+        T, S, q_chunk, kv_chunk, q_offset, causal, window)
+    Tp, Sp = nq * q_chunk, nk * kv_chunk
+    if Tp != T:
+        q = jnp.pad(q, ((0, 0), (0, Tp - T)) + ((0, 0),) * 3)
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    qcs = q.reshape(B, nq, q_chunk, KV, G, D).transpose(1, 0, 2, 3, 4, 5)
+    kcs = k.reshape(B, nk, kv_chunk, KV, D).transpose(1, 0, 2, 3, 4)
+    vcs = v.reshape(B, nk, kv_chunk, KV, D).transpose(1, 0, 2, 3, 4)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def tile(carry, xs):
+        m, l, acc, out = carry
+        qi, kj, is_first, is_last = xs
+        qb = jax.lax.dynamic_index_in_dim(qcs, qi, 0, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(kcs, kj, 0, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vcs, kj, 0, keepdims=False)
+        m = jnp.where(is_first, NEG_INF, m)
+        l = jnp.where(is_first, 0.0, l)
+        acc = jnp.where(is_first, 0.0, acc)
+        s = _score_block(qb, kb, scale)             # [B,KV,G,qc,kc]
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+        mask = kpos[None, :] < S
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        if window is not None:
+            mask = mask & (qpos[:, None] - kpos[None, :] < window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        pj = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + pj.sum(axis=-1)
+        kv_valid = (kpos < S)[None, :, None, None]
+        vb32 = jnp.where(kv_valid, vb.astype(jnp.float32), 0.0)
+        pv = jnp.einsum("bkgqc,bckd->bqkgd", pj, vb32,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        res = (acc / jnp.maximum(
+            l.transpose(0, 3, 1, 2)[..., None], 1e-37)).astype(q.dtype)
+        # slice-sized in-place write (full-tensor select would copy `out`
+        # every tile): keep old slice unless this is the row's last tile
+        old = jax.lax.dynamic_index_in_dim(out, qi, 0, keepdims=False)
+        val = jnp.where(is_last, res, old)
+        out = jax.lax.dynamic_update_index_in_dim(out, val, qi, 0)
+        return (m_new, l, acc, out), None
+
+    m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+    a0 = jnp.zeros((B, q_chunk, KV, G, D), jnp.float32)
+    o0 = jnp.zeros((nq, B, q_chunk, KV, G, D), q.dtype)
+    xs = (jnp.asarray(qi_arr), jnp.asarray(kj_arr),
+          jnp.asarray(first), jnp.asarray(last))
+    (_, _, _, out), _ = jax.lax.scan(tile, (m0, l0, a0, o0), xs)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tp, KV, G, D)
+    return out[:, :T]
+
+
+def _current_model_axis_size() -> int:
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and "model" in (mesh.axis_names or ()):
+            return mesh.shape["model"]
+    except Exception:
+        pass
+    return 1
+
+
+def seq_sharded_flash_attention(q, k, v, *, causal=True, window=None,
+                                q_chunk=512, kv_chunk=1024, q_offset=0):
+    """Sequence-parallel attention core (§Perf iteration B4).
+
+    For row-TP archs the attention core is replicated over `model`; here the
+    query/sequence dim is shard_map'ed over `model` instead (KV replicated,
+    per-shard flash with a traced q_offset), cutting per-device score
+    compute and HBM traffic by the TP degree. Falls back to the banded
+    single-device path when no model axis is available or shapes don't
+    divide.
+    """
+    B, T, KV, G, D = q.shape
+    n = _current_model_axis_size()
+    if n <= 1 or T % n != 0 or T < 4 * q_chunk or not causal or window:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               q_chunk=q_chunk, kv_chunk=kv_chunk,
+                               q_offset=q_offset)
+    t_loc = T // n
+
+    def body(q_loc, k_all, v_all):
+        i = jax.lax.axis_index("model")
+        off = q_offset + i * t_loc
+        # traced offset -> dense masking path (tile lists must be static)
+        return _flash_attention_dense(
+            q_loc, k_all, v_all, causal=True, window=None,
+            q_chunk=min(q_chunk, t_loc), kv_chunk=kv_chunk, q_offset=off)
+
+    fn = jax.shard_map(
+        body, in_specs=(P(None, "model"), P(), P()),
+        out_specs=P(None, "model"),
+        axis_names=frozenset({"model"}), check_vma=False)
+    return fn(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token, KV cache)
+# ---------------------------------------------------------------------------
+
+def _decode_core(q, ck, cv, valid):
+    """q [B,KV,G,D]; ck/cv [B,S,KV,D]; valid [B,S] -> partial (m,l,o)."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", q, ck,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    return m, l, o
+
+
+def _append(cache, new, idx, owner):
+    """Masked single-slot append: write `new` [B,KV,D] at seq index `idx`."""
+    old = jax.lax.dynamic_slice_in_dim(cache, idx, 1, axis=1)
+    val = jnp.where(owner, new[:, None], old)
+    return jax.lax.dynamic_update_slice_in_dim(cache, val.astype(cache.dtype),
+                                               idx, axis=1)
+
+
+def decode_attention_local(q, cache_k, cache_v, k_new, v_new, pos, *,
+                           window: Optional[int] = None):
+    """Single-device decode attention. pos: scalar int32 (tokens so far)."""
+    S = cache_k.shape[1]
+    if window is None:
+        idx = jnp.minimum(pos, S - 1)
+        ck = _append(cache_k, k_new, idx, True)
+        cv = _append(cache_v, v_new, idx, True)
+        slot_pos = jnp.arange(S)
+        valid = slot_pos <= pos
+    else:
+        idx = pos % S  # ring buffer of width S == window
+        ck = _append(cache_k, k_new, idx, True)
+        cv = _append(cache_v, v_new, idx, True)
+        slots = jnp.arange(S)
+        age = (pos - slots) % S
+        entry_pos = pos - age
+        valid = (entry_pos >= 0) & (age < jnp.minimum(window, pos + 1))
+    valid = jnp.broadcast_to(valid[None], (q.shape[0], S))
+    m, l, o = _decode_core(q, ck, cv, valid)
+    out = o / jnp.maximum(l[..., None], 1e-37)
+    return out.astype(q.dtype), ck, cv
+
+
+def decode_attention(mesh, q, cache_k, cache_v, k_new, v_new, pos, *,
+                     window: Optional[int] = None,
+                     batch_axes: Tuple[str, ...] = ("data",)):
+    """Distributed flash-decode: cache seq dim sharded over 'model'.
+
+    q/k_new/v_new [B,KV(,G),D] replicated over 'model', sharded over data axes
+    on batch; cache [B,S,KV,D] with S sharded over 'model'. Combines partial
+    softmax stats with pmax/psum over 'model'.
+    """
+    if "model" not in mesh.axis_names or mesh.shape["model"] == 1:
+        return decode_attention_local(q, cache_k, cache_v, k_new, v_new, pos,
+                                      window=window)
+    n_shard = mesh.shape["model"]
+    S = cache_k.shape[1]
+    assert S % n_shard == 0, (S, n_shard)
+    s_loc = S // n_shard
+
+    def body(q, ck, cv, kn, vn, pos):
+        i = jax.lax.axis_index("model")
+        off = i * s_loc
+        if window is None:
+            gidx = jnp.minimum(pos, S - 1)
+            owner = (gidx >= off) & (gidx < off + s_loc)
+            lidx = jnp.clip(gidx - off, 0, s_loc - 1)
+            ck = _append(ck, kn, lidx, owner)
+            cv = _append(cv, vn, lidx, owner)
+            slot_pos = off + jnp.arange(s_loc)
+            valid = slot_pos <= pos
+        else:
+            gidx = pos % S
+            owner = (gidx >= off) & (gidx < off + s_loc)
+            lidx = jnp.clip(gidx - off, 0, s_loc - 1)
+            ck = _append(ck, kn, lidx, owner)
+            cv = _append(cv, vn, lidx, owner)
+            slots = off + jnp.arange(s_loc)
+            age = (pos - slots) % S
+            entry_pos = pos - age
+            valid = (entry_pos >= 0) & (age < jnp.minimum(window, pos + 1))
+        valid = jnp.broadcast_to(valid[None], (q.shape[0], s_loc))
+        m, l, o = _decode_core(q, ck, cv, valid)
+        m_glob = jax.lax.pmax(m, "model")
+        corr = jnp.exp(m - m_glob)
+        l_glob = jax.lax.psum(l * corr, "model")
+        o_glob = jax.lax.psum(o * corr[..., None], "model")
+        out = o_glob / jnp.maximum(l_glob[..., None], 1e-37)
+        return out.astype(q.dtype), ck, cv
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(None, "model"), P(None, "model"), P(), P(), P()),
+        out_specs=(P(), P(None, "model"), P(None, "model")),
+        axis_names=frozenset({"model"}), check_vma=False)
+    return fn(q, cache_k, cache_v, k_new, v_new, pos)
+
+
+def decode_cross_attention(mesh, q, cache_k, cache_v):
+    """Cross-attention decode: static precomputed KV (no append).
+
+    q [B,KV,G,D]; cache [B,S_src,KV,D] with S_src sharded over 'model'.
+    """
+    if "model" not in mesh.axis_names or mesh.shape["model"] == 1:
+        valid = jnp.ones((q.shape[0], cache_k.shape[1]), bool)
+        m, l, o = _decode_core(q, cache_k, cache_v, valid)
+        return (o / jnp.maximum(l[..., None], 1e-37)).astype(q.dtype)
+
+    def body(q, ck, cv):
+        valid = jnp.ones((q.shape[0], ck.shape[1]), bool)
+        m, l, o = _decode_core(q, ck, cv, valid)
+        m_glob = jax.lax.pmax(m, "model")
+        corr = jnp.exp(m - m_glob)
+        l_glob = jax.lax.psum(l * corr, "model")
+        o_glob = jax.lax.psum(o * corr[..., None], "model")
+        return (o_glob / jnp.maximum(l_glob[..., None], 1e-37)).astype(q.dtype)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(None, "model"), P(None, "model")),
+        out_specs=P(),
+        axis_names=frozenset({"model"}), check_vma=False)
+    return fn(q, cache_k, cache_v)

@@ -1,0 +1,630 @@
+"""Sub-block implementations for the unified decoder engine.
+
+Each sub-block kind provides:
+  <kind>_decl(cfg, tp)         -> param declaration pytree
+  <kind>_apply(p, x, ...)      -> training/prefill forward (residual included)
+  <kind>_decode(p, x, cache, ...) -> single-token step with cache/state
+  <kind>_cache_decl(cfg, B, S) -> cache declaration for decode
+
+TP modes: "head" (q heads sharded over `model`) or "row" (projections sharded
+on the input dim; attention core replicated across `model`). See
+sharding/policy.py for how the mode is chosen per architecture.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as att
+from repro.models import layers as L
+from repro.models.module import declare
+
+UNC = P.UNCONSTRAINED
+
+
+def constrain(x, spec_entries):
+    """Best-effort sharding constraint; entries None->UNCONSTRAINED."""
+    spec = P(*[UNC if e is None else e for e in spec_entries])
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+# ===========================================================================
+# attention (self full / sliding-window / cross)
+# ===========================================================================
+
+def attn_decl(cfg: ModelConfig, tp: str, cross: bool = False):
+    d, H, KV, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    in_ax = "embed" if tp == "head" else "row_in"
+    p = {
+        "ln": L.rmsnorm_decl(d),
+        "wq": declare((d, H, Dh), (in_ax, "heads" if tp == "head" else "out",
+                                   "head_dim")),
+        "wk": declare((d, KV, Dh), (in_ax, "kv_heads", "head_dim")),
+        "wv": declare((d, KV, Dh), (in_ax, "kv_heads", "head_dim")),
+        "wo": declare((H, Dh, d),
+                      ("heads", "head_dim", "embed") if tp == "head"
+                      else ("out", "row_head_dim", "embed")),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = {"scale": declare((Dh,), ("head_dim",), init="ones")}
+        p["k_norm"] = {"scale": declare((Dh,), ("head_dim",), init="ones")}
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x, src, positions, tp: str, cross: bool):
+    """Project + norm + rope. Returns q [B,T,H,Dh], k/v [B,S,KV,Dh]."""
+    kv_in = src if cross else x
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_in, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_in, p["wv"].astype(x.dtype))
+    if "q_norm" in p:
+        q = L.rmsnorm(p["q_norm"], q)
+        k = L.rmsnorm(p["k_norm"], k)
+    if not cross and positions is not None:
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    if tp == "head":
+        q = constrain(q, (None, None, "model", None))
+    return q, k, v
+
+
+def attn_apply(p, x, cfg: ModelConfig, *, tp: str, kind: str = "attn",
+               src=None, positions=None, causal: bool = True,
+               seq_shard: bool = False):
+    cross = kind == "cross"
+    h = L.rmsnorm(p["ln"], x)
+    hsrc = src if cross else None
+    q, k, v = _qkv(p, cfg, h, hsrc, positions, tp, cross)
+    B, T, H, Dh = q.shape
+    KV = k.shape[2]
+    window = cfg.window if kind == "attn_swa" else None
+    if tp == "head":
+        # repeat KV to full heads; sharded over `model` so per-device memory
+        # is KV-cache / TP_degree.
+        g = H // KV
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        k = constrain(k, (None, None, "model", None))
+        v = constrain(v, (None, None, "model", None))
+        qg = q[:, :, :, None, :]  # [B,T,H,1,Dh]
+        out = att.flash_attention(qg, k, v, causal=causal and not cross,
+                                  window=window, q_chunk=cfg.attn_chunk)
+        out = out[:, :, :, 0, :]
+    else:
+        g = H // KV
+        qg = q.reshape(B, T, KV, g, Dh)
+        # §Perf iteration B4: in row-TP the attention core is replicated
+        # across `model`; for long causal prefill shard the q/seq dim over
+        # `model` instead (sequence-parallel attention core) — per-device
+        # score compute/traffic drops by the TP degree. Inference-only:
+        # XLA 0.8's partitioner fatally crashes differentiating through
+        # this shard_map (see EXPERIMENTS.md §Perf pair 1).
+        if seq_shard:
+            out = att.seq_sharded_flash_attention(
+                qg, k, v, causal=causal and not cross, window=window,
+                q_chunk=cfg.attn_chunk)
+        else:
+            out = att.flash_attention(
+                qg, k, v, causal=causal and not cross, window=window,
+                q_chunk=cfg.attn_chunk)
+        out = out.reshape(B, T, H, Dh)
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+    return x + y
+
+
+def attn_cache_decl(cfg: ModelConfig, n_rep: int, batch: int, seq_len: int,
+                    kind: str, dtype):
+    KV, Dh = cfg.num_kv_heads, cfg.head_dim
+    S = min(cfg.window, seq_len) if kind == "attn_swa" else seq_len
+    if kind == "cross":
+        S = cfg.num_src_tokens
+    shp = (n_rep, batch, S, KV, Dh)
+    axes = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+    return {"k": declare(shp, axes, init="zeros", dtype=dtype),
+            "v": declare(shp, axes, init="zeros", dtype=dtype)}
+
+
+def attn_decode(p, x, cache, pos, cfg: ModelConfig, mesh, *, tp: str,
+                kind: str = "attn"):
+    """x [B,d] single token. cache {k,v} [B,S,KV,Dh]. Returns (y, cache)."""
+    cross = kind == "cross"
+    h = L.rmsnorm(p["ln"], x)
+    B, d = h.shape
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bd,dhk->bhk", h, p["wq"].astype(x.dtype))
+    if "q_norm" in p:
+        q = L.rmsnorm(p["q_norm"], q)
+    if not cross:
+        k_new = jnp.einsum("bd,dhk->bhk", h, p["wk"].astype(x.dtype))
+        v_new = jnp.einsum("bd,dhk->bhk", h, p["wv"].astype(x.dtype))
+        if "k_norm" in p:
+            k_new = L.rmsnorm(p["k_norm"], k_new)
+        q = L.rope(q, pos, cfg.rope_theta)
+        k_new = L.rope(k_new, pos, cfg.rope_theta)
+    g = H // KV
+    qg = q.reshape(B, KV, g, Dh)
+    window = cfg.window if kind == "attn_swa" else None
+    if cross:
+        out = att.decode_cross_attention(mesh, qg, cache["k"], cache["v"])
+        ck, cv = cache["k"], cache["v"]
+    else:
+        out, ck, cv = att.decode_attention(
+            mesh, qg, cache["k"], cache["v"], k_new, v_new, pos,
+            window=window)
+    out = out.reshape(B, H, Dh)
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(x.dtype))
+    return x + y, {"k": ck, "v": cv}
+
+
+# ===========================================================================
+# MLP
+# ===========================================================================
+
+def mlp_decl(cfg: ModelConfig, tp: str):
+    return {"ln": L.rmsnorm_decl(cfg.d_model),
+            "mlp": L.mlp_decl(cfg.d_model, cfg.d_ff,
+                              gated=cfg.act == "silu")}
+
+
+def mlp_apply(p, x, cfg: ModelConfig, **_):
+    return x + L.mlp(p["mlp"], L.rmsnorm(p["ln"], x), act=cfg.act)
+
+
+def mlp_decode(p, x, cache, pos, cfg, mesh, **_):
+    return mlp_apply(p, x, cfg), cache
+
+
+# ===========================================================================
+# MoE (token-choice top-k, sort-based fixed-capacity grouped matmul,
+#      experts sharded over `model`)
+# ===========================================================================
+
+def moe_decl(cfg: ModelConfig, tp: str):
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    p = {
+        "ln": L.rmsnorm_decl(d),
+        "router": declare((d, E), ("embed", None), init="normal",
+                          scale=0.02, dtype=jnp.float32),
+        "w_gate": declare((E, d, f), ("experts", "embed", "expert_mlp")),
+        "w_up": declare((E, d, f), ("experts", "embed", "expert_mlp")),
+        "w_down": declare((E, f, d), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.shared_expert:
+        p["shared"] = L.mlp_decl(d, cfg.moe_d_ff, gated=True)
+    return p
+
+
+def _router(p, h, cfg: ModelConfig):
+    logits = jnp.einsum("...d,de->...e", h.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, cfg.experts_per_tok)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # switch-style load-balance aux loss
+    me = probs.mean(axis=tuple(range(probs.ndim - 1)))
+    ce = jnp.zeros_like(me).at[eidx.reshape(-1)].add(
+        1.0 / eidx.size)
+    aux = cfg.num_experts * jnp.sum(me * ce)
+    return gate, eidx, aux
+
+
+def _gcd(a: int, b: int) -> int:
+    while b:
+        a, b = b, a % b
+    return a
+
+
+def moe_apply(p, x, cfg: ModelConfig, groups: int = 16, **_):
+    """Group-local sort-based dispatch (§Perf iteration B).
+
+    Tokens are reshaped [G, N/G, d] with G aligned to the data-axis sharding,
+    so the argsort / gather / scatter-add of the dispatch all stay *within*
+    a shard. Only the expert buffer [G, E, C, d] is resharded (data<->model,
+    the MoE all-to-all) around the expert matmuls. Per-group capacity
+    dropping, standard token-choice top-k.
+    """
+    B, T, d = x.shape
+    h = L.rmsnorm(p["ln"], x)
+    E, k = cfg.num_experts, cfg.experts_per_tok
+    N = B * T
+    G = _gcd(B, groups)
+    n = N // G
+    ht = h.reshape(G, n, d)
+    gate, eidx, aux = _router(p, ht, cfg)            # [G,n,k]
+    C = max(1, int(n * k * cfg.capacity_factor) // E)
+
+    flat_e = eidx.reshape(G, n * k)
+    flat_g = gate.reshape(G, n * k)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(n), k)[None], (G, n * k))
+    order = jnp.argsort(flat_e, axis=1)              # per-group local sort
+    se = jnp.take_along_axis(flat_e, order, 1)
+    sg = jnp.take_along_axis(flat_g, order, 1)
+    stok = jnp.take_along_axis(flat_tok, order, 1)
+    first = jax.vmap(lambda s: jnp.searchsorted(s, jnp.arange(E)))(se)
+    counts = jax.vmap(
+        lambda s: jnp.searchsorted(s, jnp.arange(E), side="right"))(se) - first
+    slots = first[:, :, None] + jnp.arange(C)[None, None]   # [G,E,C]
+    slot_valid = jnp.arange(C)[None, None] < counts[:, :, None]
+    slots = jnp.clip(slots, 0, n * k - 1)
+    tok_idx = jnp.take_along_axis(stok, slots.reshape(G, -1), 1)  # [G,E*C]
+    gates_ec = jnp.where(
+        slot_valid.reshape(G, -1),
+        jnp.take_along_axis(sg, slots.reshape(G, -1), 1), 0.0)
+
+    xb = jnp.take_along_axis(ht, tok_idx[..., None], 1)      # [G,E*C,d]
+    xb = xb.reshape(G, E, C, d)
+    xb = constrain(xb, (None, "model", None, None))  # the MoE all-to-all
+    gh = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xb,
+                                p["w_gate"].astype(x.dtype)))
+    uh = jnp.einsum("gecd,edf->gecf", xb, p["w_up"].astype(x.dtype))
+    yb = jnp.einsum("gecf,efd->gecd", gh * uh, p["w_down"].astype(x.dtype))
+    yb = yb * gates_ec.reshape(G, E, C, 1).astype(yb.dtype)
+    yb = constrain(yb, (None, None, None, None))     # back to token sharding
+    out = jnp.zeros((G, n, d), yb.dtype).at[
+        jnp.arange(G)[:, None], tok_idx].add(
+        yb.reshape(G, E * C, d), mode="drop")
+    out = out.reshape(B, T, d)
+    if "shared" in p:
+        out = out + L.mlp(p["shared"], h.reshape(B, T, d), act="silu")
+    return x + out, aux
+
+
+def moe_decode(p, x, cache, pos, cfg: ModelConfig, mesh, **_):
+    """Decode: masked dense over local experts + psum over model axis.
+
+    Decode MoE is weight-read-bound; each device applies its local experts to
+    the (small) token batch, masked by routing, summed over `model`.
+    """
+    h = L.rmsnorm(p["ln"], x)                        # [B,d]
+    gate, eidx, _ = _router(p, h, cfg)               # [B,k]
+    onehot = jax.nn.one_hot(eidx, cfg.num_experts, dtype=x.dtype)  # [B,k,E]
+    w_tok = jnp.einsum("bk,bke->be", gate.astype(x.dtype), onehot)  # [B,E]
+    gh = jax.nn.silu(jnp.einsum("bd,edf->ebf", h, p["w_gate"].astype(x.dtype)))
+    uh = jnp.einsum("bd,edf->ebf", h, p["w_up"].astype(x.dtype))
+    ye = jnp.einsum("ebf,efd->ebd", gh * uh, p["w_down"].astype(x.dtype))
+    y = jnp.einsum("ebd,be->bd", ye, w_tok)
+    if "shared" in p:
+        y = y + L.mlp(p["shared"], h, act="silu")
+    return x + y, cache
+
+
+# ===========================================================================
+# Mamba2 / SSD (scalar-per-head decay, shared B/C across heads, G=1)
+# ===========================================================================
+
+def mamba_decl(cfg: ModelConfig, tp: str):
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.ssm_heads
+    return {
+        "ln": L.rmsnorm_decl(d),
+        "w_x": declare((d, di), ("embed", "mlp")),
+        "w_z": declare((d, di), ("embed", "mlp")),
+        "w_bc": declare((d, 2 * N), ("embed", None)),
+        "w_dt": declare((d, H), ("embed", "ssm_heads")),
+        "conv_w": declare((cfg.ssm_conv_k, di), ("conv_k", "mlp"),
+                          init="normal", scale=0.5),
+        "A_log": declare((H,), ("ssm_heads",), init="zeros"),
+        "dt_bias": declare((H,), ("ssm_heads",), init="zeros"),
+        "D": declare((H,), ("ssm_heads",), init="ones"),
+        "out_norm": {"scale": declare((di,), ("mlp",), init="ones")},
+        "w_out": declare((di, d), ("mlp", "embed")),
+    }
+
+
+def _ssd_chunk_scan(xh, bmat, cmat, log_a, chunk: int, state0=None):
+    """Chunked SSD. xh [B,T,H,P] (v), bmat/cmat [B,T,N], log_a [B,T,H]<=0.
+
+    Returns y [B,T,H,P], final state [B,H,N,P].
+    """
+    B, T, H, Pd = xh.shape
+    N = bmat.shape[-1]
+    chunk = min(chunk, T)
+    nc = T // chunk
+    assert nc * chunk == T, (T, chunk)
+    xs = (xh.reshape(B, nc, chunk, H, Pd).transpose(1, 0, 2, 3, 4),
+          bmat.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3),
+          cmat.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3),
+          log_a.reshape(B, nc, chunk, H).transpose(1, 0, 2, 3))
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, Pd), jnp.float32)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def step(state, xs_c):
+        xc, bc, cc, la = xs_c
+        cum = jnp.cumsum(la.astype(jnp.float32), axis=1)      # [B,c,H]
+        # intra-chunk: scores shared across heads, decay per head
+        s = jnp.einsum("bin,bjn->bij", cc.astype(jnp.float32),
+                       bc.astype(jnp.float32))
+        ii = jnp.arange(xc.shape[1])
+        causal = (ii[:, None] >= ii[None, :]).astype(jnp.float32)
+        dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # [B,i,j,H]
+        w = s[..., None] * causal[None, :, :, None] * dec      # [B,i,j,H]
+        y = jnp.einsum("bijh,bjhp->bihp", w, xc.astype(jnp.float32))
+        # inter-chunk contribution from carried state
+        qeff = cc[:, :, None, :] * jnp.exp(cum)[..., None]      # [B,i,H,N]
+        y = y + jnp.einsum("bihn,bhnp->bihp", qeff, state)
+        # state update
+        tail = jnp.exp(cum[:, -1:, :] - cum)                    # [B,j,H]
+        keff = bc[:, :, None, :] * tail[..., None]              # [B,j,H,N]
+        state = (jnp.exp(cum[:, -1])[:, :, None, None] * state
+                 + jnp.einsum("bjhn,bjhp->bhnp", keff,
+                              xc.astype(jnp.float32)))
+        return state, y.astype(xh.dtype)
+
+    state, ys = jax.lax.scan(step, state0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, Pd)
+    return y, state
+
+
+def _mamba_proj(p, x, cfg: ModelConfig):
+    h = L.rmsnorm(p["ln"], x)
+    xi = jnp.einsum("...d,di->...i", h, p["w_x"].astype(x.dtype))
+    z = jnp.einsum("...d,di->...i", h, p["w_z"].astype(x.dtype))
+    bc = jnp.einsum("...d,dn->...n", h, p["w_bc"].astype(x.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("...d,dh->...h", h, p["w_dt"].astype(x.dtype))
+        + p["dt_bias"].astype(x.dtype))
+    return xi, z, bc, dt
+
+
+def mamba_apply(p, x, cfg: ModelConfig, **_):
+    B, T, d = x.shape
+    H, Pd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xi, z, bc, dt = _mamba_proj(p, x, cfg)
+    # causal depthwise conv over x path
+    K = cfg.ssm_conv_k
+    xpad = jnp.pad(xi, ((0, 0), (K - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i:i + T] * p["conv_w"][i].astype(x.dtype)
+             for i in range(K))
+    xc = jax.nn.silu(xc)
+    xh = xc.reshape(B, T, H, Pd)
+    bmat, cmat = bc[..., :N], bc[..., N:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    log_a = dt.astype(jnp.float32) * A                    # [B,T,H] <= 0
+    v = xh * dt[..., None].astype(x.dtype)
+    y, _ = _ssd_chunk_scan(v, bmat, cmat, log_a, cfg.ssm_chunk)
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, T, cfg.d_inner)
+    y = L.rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    return x + jnp.einsum("...i,id->...d", y, p["w_out"].astype(x.dtype))
+
+
+def mamba_cache_decl(cfg: ModelConfig, n_rep: int, batch: int, dtype):
+    H, Pd, N, K = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_conv_k
+    return {
+        "conv": declare((n_rep, batch, K - 1, cfg.d_inner),
+                        ("layers", "batch", "conv_k", "mlp"),
+                        init="zeros", dtype=dtype),
+        "state": declare((n_rep, batch, H, N, Pd),
+                         ("layers", "batch", "ssm_heads", "ssm_state", None),
+                         init="zeros", dtype=jnp.float32),
+    }
+
+
+def mamba_decode(p, x, cache, pos, cfg: ModelConfig, mesh, **_):
+    B, d = x.shape
+    H, Pd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xi, z, bc, dt = _mamba_proj(p, x, cfg)
+    conv, state = cache["conv"], cache["state"]           # [B,K-1,di],[B,H,N,P]
+    hist = jnp.concatenate([conv, xi[:, None]], axis=1)   # [B,K,di]
+    xc = jnp.einsum("bki,ki->bi", hist, p["conv_w"].astype(x.dtype))
+    xc = jax.nn.silu(xc)
+    conv_new = hist[:, 1:]
+    xh = xc.reshape(B, H, Pd)
+    bmat, cmat = bc[..., :N], bc[..., N:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt.astype(jnp.float32) * A)               # [B,H]
+    v = (xh * dt[..., None].astype(x.dtype)).astype(jnp.float32)
+    kv = jnp.einsum("bn,bhp->bhnp", bmat.astype(jnp.float32), v)
+    state_new = a[..., None, None] * state + kv
+    y = jnp.einsum("bn,bhnp->bhp", cmat.astype(jnp.float32), state_new)
+    y = y.astype(x.dtype) + xh * p["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(B, cfg.d_inner)
+    y = L.rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    out = x + jnp.einsum("bi,id->bd", y, p["w_out"].astype(x.dtype))
+    return out, {"conv": conv_new, "state": state_new}
+
+
+# ===========================================================================
+# mLSTM (matrix memory; chunked like SSD but per-head q/k and normalizer)
+# ===========================================================================
+
+def mlstm_decl(cfg: ModelConfig, tp: str):
+    d = cfg.d_model
+    di = int(cfg.lstm_proj_factor * d)
+    H = cfg.num_heads
+    Pd = di // H
+    return {
+        "ln": L.rmsnorm_decl(d),
+        "w_q": declare((d, H, Pd), ("embed", None, "row_head_dim")),
+        "w_k": declare((d, H, Pd), ("embed", None, "row_head_dim")),
+        "w_v": declare((d, H, Pd), ("embed", None, "row_head_dim")),
+        "w_if": declare((d, 2 * H), ("embed", None)),
+        "w_o": declare((d, di), ("embed", "mlp")),
+        "w_out": declare((di, d), ("mlp", "embed")),
+        "out_norm": {"scale": declare((di,), ("mlp",), init="ones")},
+    }
+
+
+def _mlstm_gates(p, h):
+    gif = jnp.einsum("...d,dg->...g", h.astype(jnp.float32), p["w_if"
+                     ].astype(jnp.float32))
+    H = gif.shape[-1] // 2
+    log_f = -jax.nn.softplus(-gif[..., :H])      # log sigmoid(f) <= 0
+    log_i = gif[..., H:]                          # exp-gate in log space
+    return log_f, log_i
+
+
+def mlstm_apply(p, x, cfg: ModelConfig, **_):
+    B, T, d = x.shape
+    h = L.rmsnorm(p["ln"], x)
+    q = jnp.einsum("btd,dhp->bthp", h, p["w_q"].astype(x.dtype))
+    k = jnp.einsum("btd,dhp->bthp", h, p["w_k"].astype(x.dtype))
+    v = jnp.einsum("btd,dhp->bthp", h, p["w_v"].astype(x.dtype))
+    log_f, log_i = _mlstm_gates(p, h)             # [B,T,H]
+    Pd = q.shape[-1]
+    scale = Pd ** -0.5
+    chunk = min(cfg.ssm_chunk, T)
+    nc = T // chunk
+    xs = tuple(a.reshape(B, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+               for a in (q, k, v, log_f, log_i))
+    state0 = (jnp.zeros((B, q.shape[2], Pd, Pd), jnp.float32),
+              jnp.zeros((B, q.shape[2], Pd), jnp.float32))
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def step(carry, xs_c):
+        Cm, n = carry
+        qc, kc, vc, lf, li = xs_c
+        cum = jnp.cumsum(lf.astype(jnp.float32), axis=1)          # [B,c,H]
+        # intra: w_ij = q_i k_j exp(cum_i - cum_j + li_j)  (j<=i)
+        s = jnp.einsum("bihp,bjhp->bhij", qc.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * scale
+        ii = jnp.arange(qc.shape[1])
+        causal = (ii[:, None] >= ii[None, :]).astype(jnp.float32)
+        g = cum[:, :, None, :] - cum[:, None, :, :] + li[:, None, :, :]
+        w = s * jnp.exp(jnp.minimum(g, 20.0)).transpose(0, 3, 1, 2) \
+            * causal[None, None]
+        y = jnp.einsum("bhij,bjhp->bihp", w, vc.astype(jnp.float32))
+        den = jnp.einsum("bhij,bjhp->bihp", w,
+                         jnp.ones_like(vc, jnp.float32))
+        # inter from carried matrix memory
+        qeff = qc.astype(jnp.float32) * jnp.exp(cum)[..., None] * scale
+        y = y + jnp.einsum("bihp,bhpq->bihq", qeff, Cm)
+        den = den + jnp.einsum("bihp,bhp->bih", qeff, n)[..., None]
+        out = y / jnp.maximum(jnp.abs(den), 1.0)
+        # state update
+        tail = jnp.exp(cum[:, -1:, :] - cum + li)                 # [B,j,H]
+        keff = kc.astype(jnp.float32) * tail[..., None]
+        decay = jnp.exp(cum[:, -1])[:, :, None, None]
+        Cm = decay * Cm + jnp.einsum("bjhp,bjhq->bhpq", keff,
+                                     vc.astype(jnp.float32))
+        n = decay[..., 0] * n + keff.sum(axis=1)
+        return (Cm, n), out.astype(x.dtype)
+
+    _, ys = jax.lax.scan(step, state0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, T, -1)
+    o = jax.nn.sigmoid(jnp.einsum("btd,di->bti", h, p["w_o"].astype(x.dtype)))
+    y = L.rmsnorm(p["out_norm"], y) * o
+    return x + jnp.einsum("bti,id->btd", y, p["w_out"].astype(x.dtype))
+
+
+def mlstm_cache_decl(cfg: ModelConfig, n_rep: int, batch: int, dtype):
+    di = int(cfg.lstm_proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    Pd = di // H
+    return {
+        "C": declare((n_rep, batch, H, Pd, Pd),
+                     ("layers", "batch", None, "row_head_dim", None),
+                     init="zeros", dtype=jnp.float32),
+        "n": declare((n_rep, batch, H, Pd),
+                     ("layers", "batch", None, "row_head_dim"),
+                     init="zeros", dtype=jnp.float32),
+    }
+
+
+def mlstm_decode(p, x, cache, pos, cfg: ModelConfig, mesh, **_):
+    B, d = x.shape
+    h = L.rmsnorm(p["ln"], x)
+    q = jnp.einsum("bd,dhp->bhp", h, p["w_q"].astype(x.dtype))
+    k = jnp.einsum("bd,dhp->bhp", h, p["w_k"].astype(x.dtype))
+    v = jnp.einsum("bd,dhp->bhp", h, p["w_v"].astype(x.dtype))
+    log_f, log_i = _mlstm_gates(p, h)            # [B,H]
+    Pd = q.shape[-1]
+    f = jnp.exp(log_f)[..., None, None]
+    i = jnp.exp(jnp.minimum(log_i, 20.0))[..., None, None]
+    Cm = f * cache["C"] + i * jnp.einsum("bhp,bhq->bhpq",
+                                         k.astype(jnp.float32),
+                                         v.astype(jnp.float32))
+    n = f[..., 0] * cache["n"] + i[..., 0] * k.astype(jnp.float32)
+    qs = q.astype(jnp.float32) * (Pd ** -0.5)
+    y = jnp.einsum("bhp,bhpq->bhq", qs, Cm)
+    den = jnp.einsum("bhp,bhp->bh", qs, n)[..., None]
+    y = (y / jnp.maximum(jnp.abs(den), 1.0)).astype(x.dtype)
+    y = y.reshape(B, -1)
+    o = jax.nn.sigmoid(jnp.einsum("bd,di->bi", h, p["w_o"].astype(x.dtype)))
+    y = L.rmsnorm(p["out_norm"], y) * o
+    out = x + jnp.einsum("bi,id->bd", y, p["w_out"].astype(x.dtype))
+    return out, {"C": Cm, "n": n}
+
+
+# ===========================================================================
+# sLSTM (scalar memory, true recurrence via lax.scan over time)
+# ===========================================================================
+
+def slstm_decl(cfg: ModelConfig, tp: str):
+    d = cfg.d_model
+    H = cfg.num_heads
+    Pd = d // H
+    return {
+        "ln": L.rmsnorm_decl(d),
+        "w_in": declare((d, H, 4 * Pd), ("embed", None, None)),
+        "r": declare((H, Pd, 4 * Pd), (None, None, None), scale=0.5),
+        "b": declare((H, 4 * Pd), (None, None), init="zeros"),
+        "w_out": declare((d, d), ("embed", "out")),
+    }
+
+
+def _slstm_cell(p, gx, state):
+    """gx [B,H,4P] precomputed input gates; state (h,c,n,m) each [B,H,P]."""
+    h, c, n, m = state
+    rec = jnp.einsum("bhp,hpq->bhq", h, p["r"].astype(jnp.float32))
+    g = gx.astype(jnp.float32) + rec + p["b"].astype(jnp.float32)
+    Pd = g.shape[-1] // 4
+    gi, gf, gz, go = (g[..., :Pd], g[..., Pd:2 * Pd],
+                      g[..., 2 * Pd:3 * Pd], g[..., 3 * Pd:])
+    log_f = -jax.nn.softplus(-gf)
+    m_new = jnp.maximum(log_f + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    c_new = f * c + i * jnp.tanh(gz)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_apply(p, x, cfg: ModelConfig, **_):
+    B, T, d = x.shape
+    H = cfg.num_heads
+    Pd = d // H
+    hin = L.rmsnorm(p["ln"], x)
+    gx = jnp.einsum("btd,dhq->bthq", hin, p["w_in"].astype(x.dtype))
+    state0 = tuple(jnp.zeros((B, H, Pd), jnp.float32) for _ in range(4))
+
+    def step(state, gx_t):
+        ns = _slstm_cell(p, gx_t, state)
+        # emit h in its carry dtype (f32): converting per step makes XLA
+        # re-convert the whole [T,...] ys buffer every iteration
+        # (§Perf iteration A5)
+        return ns, ns[0]
+
+    _, hs = jax.lax.scan(step, state0, gx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(B, T, d).astype(x.dtype)
+    return x + jnp.einsum("btd,de->bte", y, p["w_out"].astype(x.dtype))
+
+
+def slstm_cache_decl(cfg: ModelConfig, n_rep: int, batch: int, dtype):
+    H = cfg.num_heads
+    Pd = cfg.d_model // H
+    shp = (n_rep, batch, H, Pd)
+    ax = ("layers", "batch", None, None)
+    return {k: declare(shp, ax, init="zeros", dtype=jnp.float32)
+            for k in ("h", "c", "n", "m")}
+
+
+def slstm_decode(p, x, cache, pos, cfg: ModelConfig, mesh, **_):
+    hin = L.rmsnorm(p["ln"], x)
+    gx = jnp.einsum("bd,dhq->bhq", hin, p["w_in"].astype(x.dtype))
+    state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    h, c, n, m = _slstm_cell(p, gx, state)
+    B = x.shape[0]
+    y = h.astype(x.dtype).reshape(B, -1)
+    out = x + jnp.einsum("bd,de->be", y, p["w_out"].astype(x.dtype))
+    return out, {"h": h, "c": c, "n": n, "m": m}

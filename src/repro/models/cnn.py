@@ -1,0 +1,60 @@
+"""The paper's CIFAR-10 model: a CNN with six convolutional layers.
+
+Pure-JAX (lax.conv) implementation used by the VFL experiments
+(benchmarks/fig10_cifar.py). Structure: 3 stages of (conv-conv-pool),
+channels 32/64/128, then a linear classifier head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.module import declare
+
+
+def _conv_decl(cin: int, cout: int, k: int = 3):
+    import math
+    std = math.sqrt(2.0 / (k * k * cin))  # He init over the true fan-in
+    return {"w": declare((k, k, cin, cout), (None, None, None, None),
+                         init="normal", scale=std),
+            "b": declare((cout,), (None,), init="zeros")}
+
+
+def _conv(p, x, stride: int = 1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def cnn_decl(num_classes: int = 10):
+    chans = [(3, 32), (32, 32), (32, 64), (64, 64), (64, 128), (128, 128)]
+    return {
+        "convs": [_conv_decl(ci, co) for ci, co in chans],
+        "head": {"w": declare((128 * 4 * 4, num_classes),
+                              (None, "classes"), init="scaled"),
+                 "b": declare((num_classes,), ("classes",), init="zeros")},
+    }
+
+
+def cnn_apply(params, images: jax.Array) -> jax.Array:
+    """images [B,32,32,3] float -> logits [B,10]."""
+    x = images
+    for i, p in enumerate(params["convs"]):
+        x = jax.nn.relu(_conv(p, x))
+        if i % 2 == 1:  # pool after every conv pair
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def cnn_loss(params, batch) -> jax.Array:
+    logits = cnn_apply(params, batch["x"])
+    return L.softmax_cross_entropy(logits, batch["y"])
+
+
+def cnn_accuracy(params, batch) -> jax.Array:
+    logits = cnn_apply(params, batch["x"])
+    return (logits.argmax(-1) == batch["y"]).mean()

@@ -1,0 +1,261 @@
+"""Unified decoder-LM engine.
+
+A model = embedding -> [super-block scanned n_rep times] -> norm -> unembed,
+where the super-block is cfg.pattern (a short list of sub-block kinds).
+Optionally: an encoder (whisper) or a projector over source embeddings (vlm),
+whose output feeds the `cross` sub-blocks.
+
+Params layout:
+  {"embed": ..., "blocks": (tree_0, ..., tree_{P-1}),  # stacked [n_rep,...]
+   "shared": {i: tree} for weight-tied positions (zamba2),
+   "final_norm": ..., "lm_head": ...,
+   "encoder": {...} | "projector": {...}  (optional)}
+
+Caches for decode mirror "blocks": a tuple of per-position trees stacked
+[n_rep, ...] (empty dict for stateless kinds).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models.module import Declared, declare
+from repro.sharding.policy import pad_vocab
+
+_DECLS = {
+    "attn": lambda cfg, tp: B.attn_decl(cfg, tp),
+    "attn_swa": lambda cfg, tp: B.attn_decl(cfg, tp),
+    "cross": lambda cfg, tp: B.attn_decl(cfg, tp, cross=True),
+    "mlp": B.mlp_decl,
+    "moe": B.moe_decl,
+    "mamba": B.mamba_decl,
+    "mlstm": B.mlstm_decl,
+    "slstm": B.slstm_decl,
+}
+
+_STATEFUL = ("attn", "attn_swa", "cross", "mamba", "mlstm", "slstm")
+
+
+def _stack_decl(tree, n: int):
+    return jax.tree.map(
+        lambda d: Declared((n,) + d.shape, ("layers",) + d.axes, d.init,
+                           d.scale, d.dtype),
+        tree, is_leaf=lambda x: isinstance(x, Declared))
+
+
+def effective_kind(kind: str, force_swa: bool) -> str:
+    if force_swa and kind == "attn":
+        return "attn_swa"
+    return kind
+
+
+# ---------------------------------------------------------------------------
+# declarations
+# ---------------------------------------------------------------------------
+
+def model_decl(cfg: ModelConfig, tp: str) -> Dict[str, Any]:
+    V = pad_vocab(cfg.vocab_size)
+    dt = cfg.pdtype
+    blocks = []
+    shared = {}
+    for i, kind in enumerate(cfg.pattern):
+        tree = _DECLS[kind](cfg, tp)
+        if cfg.shared_attn and kind in ("attn", "mlp") and cfg.family == "hybrid":
+            shared[str(i)] = tree              # declared once, weight-tied
+            blocks.append({})
+        else:
+            blocks.append(_stack_decl(tree, cfg.n_rep))
+    decl: Dict[str, Any] = {
+        "embed": L.embed_decl(V, cfg.d_model),
+        "blocks": list(blocks),
+        "shared": shared,
+        "final_norm": L.rmsnorm_decl(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        decl["lm_head"] = L.unembed_decl(V, cfg.d_model)
+    if cfg.family == "vlm":
+        decl["projector"] = L.linear_decl(cfg.src_dim, cfg.d_model,
+                                          ("out", "embed"))
+    if cfg.encoder_layers:
+        enc_blk = {"attn": B.attn_decl(cfg, tp), "mlp": B.mlp_decl(cfg, tp)}
+        decl["encoder"] = {
+            "blocks": _stack_decl(enc_blk, cfg.encoder_layers),
+            "pos": declare((cfg.num_src_tokens, cfg.d_model),
+                           ("frames", "embed"), init="normal", scale=0.02),
+            "final_norm": L.rmsnorm_decl(cfg.d_model),
+        }
+    decl = jax.tree.map(
+        lambda d: Declared(d.shape, d.axes, d.init, d.scale, dt)
+        if d.dtype == jnp.float32 and d.init in ("scaled", "normal") else d,
+        decl, is_leaf=lambda x: isinstance(x, Declared))
+    return decl
+
+
+# ---------------------------------------------------------------------------
+# encoder / source memory
+# ---------------------------------------------------------------------------
+
+def _encode(params, cfg: ModelConfig, src: jax.Array, tp: str) -> jax.Array:
+    """Whisper-style bidirectional encoder over stub frame embeddings."""
+    enc = params["encoder"]
+    x = src.astype(cfg.dtype) + enc["pos"].astype(cfg.dtype)[None]
+
+    def body(x, blk):
+        x = B.attn_apply(blk["attn"], x, cfg, tp=tp, kind="attn",
+                         causal=False, positions=None)
+        x = B.mlp_apply(blk["mlp"], x, cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, enc["blocks"])
+    return L.rmsnorm(enc["final_norm"], x)
+
+
+def source_memory(params, cfg: ModelConfig, src: Optional[jax.Array],
+                  tp: str) -> Optional[jax.Array]:
+    if src is None:
+        return None
+    if cfg.family == "vlm":
+        return L.linear(params["projector"], src.astype(cfg.dtype))
+    if cfg.encoder_layers:
+        return _encode(params, cfg, src, tp)
+    return src.astype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+_APPLY = {
+    "attn": functools.partial(B.attn_apply, kind="attn"),
+    "attn_swa": functools.partial(B.attn_apply, kind="attn_swa"),
+    "cross": functools.partial(B.attn_apply, kind="cross"),
+    "mlp": B.mlp_apply,
+    "mamba": B.mamba_apply,
+    "mlstm": B.mlstm_apply,
+    "slstm": B.slstm_apply,
+}
+
+
+def forward(params, tokens: jax.Array, cfg: ModelConfig, *, tp: str,
+            src: Optional[jax.Array] = None,
+            last_logit_only: bool = False,
+            seq_shard: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """tokens [B,T] -> (logits [B,T,V] f32, aux scalar).
+
+    last_logit_only: unembed just the final position (serving prefill)."""
+    Bsz, T = tokens.shape
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    memory = source_memory(params, cfg, src, tp)
+    positions = L.rope_positions(T)
+
+    def apply_one(kind, p, x):
+        if kind == "moe":
+            fn = B.moe_apply
+            if cfg.remat:
+                fn = jax.checkpoint(fn, static_argnums=(2,),
+                                    prevent_cse=False)
+            y, aux = fn(p, x, cfg)
+            return y, aux
+        fn = _APPLY[kind]
+        kw = {}
+        if kind in ("attn", "attn_swa", "cross"):
+            kw = dict(tp=tp, positions=None if kind == "cross" else positions,
+                      src=memory if kind == "cross" else None,
+                      seq_shard=seq_shard and kind != "cross")
+            call = lambda p, x: fn(p, x, cfg, **kw)  # noqa: E731
+        else:
+            call = lambda p, x: fn(p, x, cfg)        # noqa: E731
+        if cfg.remat:
+            call = jax.checkpoint(call, prevent_cse=False)
+        return call(p, x), jnp.zeros((), jnp.float32)
+
+    def superblock(carry, blk_params):
+        x, aux = carry
+        for i, kind in enumerate(cfg.pattern):
+            p = params["shared"].get(str(i)) or blk_params[i]
+            x, a = apply_one(kind, p, x)
+            aux = aux + a
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(superblock, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    x = L.rmsnorm(params["final_norm"], x)
+    if last_logit_only:
+        x = x[:, -1:]
+    if cfg.tie_embeddings:
+        logits = L.unembed_tied(params["embed"], x)
+    else:
+        logits = L.unembed(params["lm_head"], x)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def cache_decl(cfg: ModelConfig, batch: int, seq_len: int, *,
+               force_swa: bool = False):
+    dt = cfg.dtype
+    out = []
+    for kind in cfg.pattern:
+        kind = effective_kind(kind, force_swa)
+        if kind in ("attn", "attn_swa", "cross"):
+            out.append(B.attn_cache_decl(cfg, cfg.n_rep, batch, seq_len,
+                                         kind, dt))
+        elif kind == "mamba":
+            out.append(B.mamba_cache_decl(cfg, cfg.n_rep, batch, dt))
+        elif kind == "mlstm":
+            out.append(B.mlstm_cache_decl(cfg, cfg.n_rep, batch, dt))
+        elif kind == "slstm":
+            out.append(B.slstm_cache_decl(cfg, cfg.n_rep, batch, dt))
+        else:
+            out.append({})
+    return list(out)
+
+
+_DECODE = {
+    "attn": functools.partial(B.attn_decode, kind="attn"),
+    "attn_swa": functools.partial(B.attn_decode, kind="attn_swa"),
+    "cross": functools.partial(B.attn_decode, kind="cross"),
+    "mlp": B.mlp_decode,
+    "moe": B.moe_decode,
+    "mamba": B.mamba_decode,
+    "mlstm": B.mlstm_decode,
+    "slstm": B.slstm_decode,
+}
+
+
+def decode_step(params, cache, tokens: jax.Array, pos: jax.Array,
+                cfg: ModelConfig, mesh, *, tp: str,
+                force_swa: bool = False) -> Tuple[jax.Array, Any]:
+    """tokens [B] -> (logits [B,V] f32, new cache). pos: scalar int32."""
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+
+    def superblock(carry, xs):
+        x = carry
+        blk_params, blk_cache = xs
+        new_cache = []
+        for i, kind in enumerate(cfg.pattern):
+            ek = effective_kind(kind, force_swa)
+            p = params["shared"].get(str(i)) or blk_params[i]
+            fn = _DECODE[ek]
+            if ek in ("attn", "attn_swa", "cross"):
+                x, c = fn(p, x, blk_cache[i], pos, cfg, mesh, tp=tp)
+            else:
+                x, c = fn(p, x, blk_cache[i], pos, cfg, mesh)
+            new_cache.append(c)
+        return x, list(new_cache)
+
+    x, new_cache = jax.lax.scan(superblock, x, (params["blocks"], cache))
+    x = L.rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = L.unembed_tied(params["embed"], x)
+    else:
+        logits = L.unembed(params["lm_head"], x)
+    return logits, new_cache

@@ -1,0 +1,96 @@
+"""LaneGCN-lite: trajectory prediction model for the Argoverse-style task.
+
+Mirrors the paper's LaneGCN structure at reduced scale:
+  * ActorNet: 1D CNN + FPN-ish feature extractor over the 2s history.
+  * MapNet: graph conv over lane-node polylines (adjacency given).
+  * FusionNet: actor<->map attention fusion.
+  * Header: regress the 3s future at 10Hz (30 x 2 offsets).
+
+Metric: ADE (average displacement error), as in the paper's Fig. 12.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import declare
+
+HIST, FUT = 20, 30  # 2s history, 3s future @ 10Hz
+D = 64
+
+
+def _lin(cin, cout):
+    return {"w": declare((cin, cout), (None, None), init="scaled"),
+            "b": declare((cout,), (None,), init="zeros")}
+
+
+def _apply_lin(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _conv1d_decl(cin, cout, k=3):
+    return {"w": declare((k, cin, cout), (None, None, None), init="scaled"),
+            "b": declare((cout,), (None,), init="zeros")}
+
+
+def _conv1d(p, x):  # x [B,T,C]
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (1,), "SAME", dimension_numbers=("NWC", "WIO", "NWC"))
+    return y + p["b"]
+
+
+def lanegcn_decl(num_map_nodes: int = 64):
+    return {
+        "actor": {
+            "c1": _conv1d_decl(2, D), "c2": _conv1d_decl(D, D),
+            "c3": _conv1d_decl(D, D),
+        },
+        "map": {
+            "in": _lin(4, D), "g1": _lin(D, D), "g2": _lin(D, D),
+        },
+        "fusion": {
+            "q": _lin(D, D), "k": _lin(D, D), "v": _lin(D, D),
+            "o": _lin(D, D),
+        },
+        "head": _lin(D, FUT * 2),
+    }
+
+
+def lanegcn_apply(params, batch) -> jax.Array:
+    """batch: hist [B,HIST,2], map_feats [B,M,4], map_adj [B,M,M].
+
+    Returns predicted future offsets [B,FUT,2].
+    """
+    hist, mfeat, adj = batch["hist"], batch["map_feats"], batch["map_adj"]
+    a = params["actor"]
+    x = jax.nn.relu(_conv1d(a["c1"], hist))
+    x = jax.nn.relu(_conv1d(a["c2"], x)) + x
+    x = jax.nn.relu(_conv1d(a["c3"], x)) + x
+    actor = x[:, -1]                                   # [B,D]
+
+    m = params["map"]
+    h = jax.nn.relu(_apply_lin(m["in"], mfeat))        # [B,M,D]
+    deg = jnp.maximum(adj.sum(-1, keepdims=True), 1.0)
+    h = jax.nn.relu(_apply_lin(m["g1"], (adj @ h) / deg)) + h
+    h = jax.nn.relu(_apply_lin(m["g2"], (adj @ h) / deg)) + h
+
+    f = params["fusion"]
+    q = _apply_lin(f["q"], actor)[:, None]             # [B,1,D]
+    k = _apply_lin(f["k"], h)
+    v = _apply_lin(f["v"], h)
+    att = jax.nn.softmax((q * k).sum(-1) / jnp.sqrt(D), axis=-1)  # [B,M]
+    fused = jnp.einsum("bm,bmd->bd", att, v)
+    actor = actor + jax.nn.relu(_apply_lin(f["o"], fused))
+
+    out = _apply_lin(params["head"], actor)
+    return out.reshape(-1, FUT, 2)
+
+
+def lanegcn_loss(params, batch) -> jax.Array:
+    pred = lanegcn_apply(params, batch)
+    return jnp.mean(jnp.sum((pred - batch["fut"]) ** 2, axis=-1))
+
+
+def lanegcn_ade(params, batch) -> jax.Array:
+    pred = lanegcn_apply(params, batch)
+    return jnp.mean(jnp.linalg.norm(pred - batch["fut"], axis=-1))

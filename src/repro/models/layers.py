@@ -1,0 +1,163 @@
+"""Shared layer primitives: norms, RoPE, embeddings, MLPs.
+
+Every init function returns a pytree of `Declared` leaves; every apply
+function is a plain function over materialized (or abstract) params.
+Logical sharding axes ride on the declarations (see sharding/rules.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import declare
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_decl(dim: int, axis: str = "embed"):
+    return {"scale": declare((dim,), (axis,), init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_decl(dim: int, axis: str = "embed"):
+    return {"scale": declare((dim,), (axis,), init="ones"),
+            "bias": declare((dim,), (axis,), init="zeros")}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., T, ..., D] with T at axis 1 (or scalar pos for decode).
+
+    x: [B, T, H..., D]; positions: [T] or scalar.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = jnp.asarray(positions, jnp.float32)
+    ang = pos[..., None] * freq  # [T, half] or [half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # align: T (if present) sits at x axis 1; trailing dim is `half`;
+    # every other axis broadcasts.
+    shape = [1] * x.ndim
+    shape[-1] = half
+    if pos.ndim > 0:
+        shape[1] = pos.shape[0]
+    cos = cos.reshape(shape)
+    sin = sin.reshape(shape)
+    x1, x2 = x[..., :half], x[..., half: 2 * half]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([y1, y2, x[..., 2 * half:]], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope_positions(t: int, offset: int = 0) -> jax.Array:
+    return offset + jnp.arange(t)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_decl(vocab: int, dim: int):
+    return {"table": declare((vocab, dim), ("vocab", "embed"),
+                             init="normal", scale=0.02)}
+
+
+def embed(p, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed_decl(vocab: int, dim: int):
+    return {"w": declare((dim, vocab), ("embed", "vocab"))}
+
+
+def unembed(p, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,dv->...v", x, p["w"],
+                      preferred_element_type=jnp.float32)
+
+
+def unembed_tied(embed_params, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,vd->...v", x, embed_params["table"],
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_decl(dim: int, ff: int, gated: bool = True):
+    d = {"w_up": declare((dim, ff), ("embed", "mlp")),
+         "w_down": declare((ff, dim), ("mlp", "embed"))}
+    if gated:
+        d["w_gate"] = declare((dim, ff), ("embed", "mlp"))
+    return d
+
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+def mlp(p, x, act: str = "silu"):
+    up = jnp.einsum("...d,df->...f", x, p["w_up"])
+    if "w_gate" in p:
+        up = _act(act, jnp.einsum("...d,df->...f", x, p["w_gate"])) * up
+    else:
+        up = _act(act, up)
+    return jnp.einsum("...f,fd->...d", up, p["w_down"])
+
+
+def linear_decl(d_in: int, d_out: int, axes=("embed", "out"), bias=False):
+    d = {"w": declare((d_in, d_out), axes)}
+    if bias:
+        d["b"] = declare((d_out,), (axes[1],), init="zeros")
+    return d
+
+
+def linear(p, x):
+    y = jnp.einsum("...i,io->...o", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """logits [..., V] (f32), labels int [...]. Mean over unmasked tokens."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

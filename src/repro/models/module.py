@@ -1,0 +1,91 @@
+"""Minimal functional parameter system (no flax/haiku).
+
+A model declares its parameters once as a pytree of `Declared` leaves
+(shape + logical axes + initializer). From that single declaration we derive:
+
+* `materialize(rng, tree)`  -> randomly initialized params (real arrays)
+* `abstract(tree)`          -> jax.ShapeDtypeStruct pytree (dry-run, no alloc)
+* `axes_of(tree)`           -> pytree of logical-axes tuples (for sharding)
+
+All apply() functions are plain functions over these pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Declared:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | scaled (fan_in)
+    scale: float = 1.0
+    dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"shape {self.shape} and axes {self.axes} rank mismatch")
+
+
+def declare(shape, axes, init: str = "scaled", scale: float = 1.0,
+            dtype=jnp.float32) -> Declared:
+    return Declared(tuple(shape), tuple(axes), init, scale, jnp.dtype(dtype))
+
+
+def _is_decl(x) -> bool:
+    return isinstance(x, Declared)
+
+
+def _init_leaf(rng: jax.Array, d: Declared) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "normal":
+        return (d.scale * jax.random.normal(rng, d.shape)).astype(d.dtype)
+    if d.init == "scaled":  # truncated-normal fan-in scaling
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.truncated_normal(
+            rng, -2.0, 2.0, d.shape)).astype(d.dtype)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def materialize(rng: jax.Array, tree):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_decl)
+    rngs = jax.random.split(rng, len(leaves))
+    out = [_init_leaf(r, d) for r, d in zip(rngs, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(tree):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+        tree, is_leaf=_is_decl)
+
+
+def axes_of(tree):
+    return jax.tree.map(lambda d: d.axes, tree, is_leaf=_is_decl)
+
+
+def param_count(tree) -> int:
+    return sum(
+        int(math.prod(d.shape))
+        for d in jax.tree.leaves(tree, is_leaf=_is_decl))
+
+
+def param_bytes(tree) -> int:
+    return sum(
+        int(math.prod(d.shape)) * d.dtype.itemsize
+        for d in jax.tree.leaves(tree, is_leaf=_is_decl))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if hasattr(x, "astype") else x, tree)

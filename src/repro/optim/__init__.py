@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    adam, momentum, sgd, cosine_schedule, linear_warmup,
+)

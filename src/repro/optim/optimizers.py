@@ -1,0 +1,92 @@
+"""Minimal functional optimizers (no optax).
+
+Each factory returns (init_fn, update_fn):
+  state = init_fn(params)
+  new_params, new_state = update_fn(params, grads, state, step)
+Learning rates may be floats or schedule callables step -> lr.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr_at(lr: Schedule, step) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.asarray(lr)
+
+
+def sgd(lr: Schedule = 0.1):
+    def init(params):
+        return ()
+
+    def update(params, grads, state, step=0):
+        eta = _lr_at(lr, step)
+        new = jax.tree.map(lambda p, g: (p - eta * g).astype(p.dtype),
+                           params, grads)
+        return new, state
+
+    return init, update
+
+
+def momentum(lr: Schedule = 0.1, beta: float = 0.9):
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(params, grads, state, step=0):
+        eta = _lr_at(lr, step)
+        new_m = jax.tree.map(lambda m, g: beta * m + g, state, grads)
+        new = jax.tree.map(lambda p, m: (p - eta * m).astype(p.dtype),
+                           params, new_m)
+        return new, new_m
+
+    return init, update
+
+
+def adam(lr: Schedule = 1e-3, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8):
+    def init(params):
+        z = lambda: jax.tree.map(  # noqa: E731
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": z(), "v": z()}
+
+    def update(params, grads, state, step=0):
+        eta = _lr_at(lr, step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)),
+            state["v"], grads)
+        mhat = jax.tree.map(lambda m: m / (1 - b1 ** t), m)
+        vhat = jax.tree.map(lambda v: v / (1 - b2 ** t), v)
+        new = jax.tree.map(
+            lambda p, mh, vh: (p - eta * mh / (jnp.sqrt(vh) + eps)
+                               ).astype(p.dtype),
+            params, mhat, vhat)
+        return new, {"m": m, "v": v}
+
+    return init, update
+
+
+def linear_warmup(peak: float, warmup_steps: int) -> Callable:
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        return peak * jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+    return f
+
+
+def cosine_schedule(peak: float, total_steps: int,
+                    warmup_steps: int = 0, floor: float = 0.0) -> Callable:
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak * jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+        frac = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(math.pi * frac))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return f

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (  # noqa: F401
+    LogicalRules,
+    default_rules,
+    spec_for,
+    tree_specs,
+    shardings_for_tree,
+)
+from repro.sharding.policy import attention_tp_mode  # noqa: F401

@@ -1,0 +1,24 @@
+"""Per-architecture tensor-parallel policy.
+
+Head-sharded TP needs the query-head count to divide the model-axis size.
+When it does not (minitron 24H, llama4 40H, whisper 12H, xlstm 4H on a
+16-way model axis) we fall back to row-parallel projections: QKV sharded on
+the input (d_model) dim with a psum, attention core replicated across the
+model axis (batch-sharded only), O-projection column-sharded on input.
+"""
+from __future__ import annotations
+
+
+def attention_tp_mode(num_heads: int, model_parallel: int) -> str:
+    if model_parallel <= 1:
+        return "head"
+    return "head" if num_heads % model_parallel == 0 else "row"
+
+
+def kv_shardable(num_kv_heads: int, model_parallel: int) -> bool:
+    return model_parallel > 1 and num_kv_heads % model_parallel == 0
+
+
+def pad_vocab(vocab_size: int, multiple: int = 128) -> int:
+    r = vocab_size % multiple
+    return vocab_size if r == 0 else vocab_size + (multiple - r)

@@ -1,0 +1,124 @@
+"""Logical-axis -> mesh-axis sharding rules (t5x-style).
+
+Every parameter/activation in the model zoo is annotated with *logical* axis
+names ("vocab", "embed", "heads", "mlp", ...). A LogicalRules table maps those
+names to physical mesh axes ("data", "model", "pod", or None). This keeps the
+model definitions mesh-agnostic: the dry-run, the trainer, and the hillclimb
+variants only swap rule tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalRules:
+    """Mapping from logical axis name to mesh axis (or None = replicate)."""
+
+    table: Mapping[str, Optional[str]]
+
+    def mesh_axis(self, logical: Optional[str]) -> Optional[str]:
+        if logical is None:
+            return None
+        if logical not in self.table:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        return self.table[logical]
+
+    def spec(self, logical_axes: Sequence[Optional[str]]) -> P:
+        return P(*[self.mesh_axis(a) for a in logical_axes])
+
+    def override(self, **kv: Optional[str]) -> "LogicalRules":
+        t = dict(self.table)
+        t.update(kv)
+        return LogicalRules(t)
+
+
+# Batch-like axes map to the data axis (and pod axis when present: handled by
+# `data_axes` below, which folds ("pod","data") into a tuple spec entry).
+_DEFAULT_TABLE: Mapping[str, Optional[str]] = {
+    # activations
+    "batch": "data",
+    "vehicle": "data",     # per-vehicle param replicas in the VFL round
+    "seq": None,
+    "cache_seq": "model",   # decode caches: sequence dim sharded (flash-decode)
+    # params
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,      # replicated: kv head counts rarely divide TP degree
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "layers": None,        # stacked-scan leading axis
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv_k": None,
+    "frames": None,
+    "patches": None,
+    "classes": None,
+    "row_in": "model",        # row-parallel TP: shard the input dim
+    "row_head_dim": "model",  # row TP: shard head_dim on the O-projection
+    "ssm_state": None,
+    "out": None,
+}
+
+
+def fsdp_rules(multi_pod: bool = False) -> LogicalRules:
+    """Variant for archs too large for per-vehicle replicas: additionally
+    shard the d_model ("embed") param dim over the data axis (ZeRO-style;
+    GSPMD all-gathers each scanned layer's weights on use)."""
+    return default_rules(multi_pod).override(embed="data")
+
+
+def default_rules(multi_pod: bool = False) -> LogicalRules:
+    table = dict(_DEFAULT_TABLE)
+    if multi_pod:
+        # batch-like axes shard over both pod and data axes
+        table["batch"] = ("pod", "data")  # type: ignore[assignment]
+        table["vehicle"] = ("pod", "data")  # type: ignore[assignment]
+    return LogicalRules(table)
+
+
+def spec_for(rules: LogicalRules, logical_axes: Sequence[Optional[str]]) -> P:
+    entries = []
+    for a in logical_axes:
+        m = rules.table.get(a) if a is not None else None
+        if a is not None and a not in rules.table:
+            raise KeyError(f"unknown logical axis {a!r}")
+        entries.append(m)
+    return P(*entries)
+
+
+def tree_specs(rules: LogicalRules, axes_tree) -> "jax.tree_util.PyTreeDef":
+    """Map a pytree of logical-axes tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: spec_for(rules, axes),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) or x is None,
+    )
+
+
+def shardings_for_tree(mesh: Mesh, specs_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def data_axis_names(mesh: Mesh) -> Tuple[str, ...]:
+    """All mesh axes that carry batch/vehicle parallelism."""
+    names = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+    return names or (mesh.axis_names[0],)
+
+
+def num_vehicles(mesh: Mesh) -> int:
+    n = 1
+    for name in data_axis_names(mesh):
+        n *= mesh.shape[name]
+    return n

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# Tests run with the real single CPU device (the dry-run sets its own 512
+# fake devices in a subprocess); keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def single_mesh():
+    return jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))

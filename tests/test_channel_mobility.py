@@ -1,0 +1,70 @@
+"""Channel model + mobility invariants (incl. hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.channel.mobility import (ManhattanParams, in_coverage,
+                                    init_mobility, rollout_positions,
+                                    step_mobility)
+from repro.channel.v2x import ChannelParams, channel_gain, pathloss_db, rate_dt
+
+CH = ChannelParams()
+
+
+def test_pathloss_monotone_in_distance():
+    d = jnp.linspace(10.0, 800.0, 100)
+    los = jnp.ones_like(d, bool)
+    pl = pathloss_db(d, CH, los, jnp.zeros_like(los), jnp.zeros_like(d))
+    assert bool(jnp.all(jnp.diff(pl) > 0))
+
+
+def test_nlos_worse_than_los():
+    d = jnp.full((16,), 200.0)
+    z = jnp.zeros((16,))
+    pl_los = pathloss_db(d, CH, jnp.ones(16, bool), z > 1, z)
+    pl_nlos = pathloss_db(d, CH, jnp.zeros(16, bool), z > 1, z)
+    assert bool(jnp.all(pl_nlos > pl_los))
+
+
+def test_gain_zero_outside_coverage():
+    d = jnp.array([50.0, 500.0, 900.0])
+    g = channel_gain(jax.random.key(0), d, CH,
+                     in_range=jnp.array([True, False, False]))
+    assert float(g[0]) > 0 and float(g[1]) == 0 and float(g[2]) == 0
+
+
+def test_rate_increasing_in_power():
+    g = jnp.float32(1e-11)
+    p = jnp.linspace(0.0, 0.3, 32)
+    r = rate_dt(p, g, CH)
+    assert bool(jnp.all(jnp.diff(r) > 0))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.floats(1.0, 25.0))
+def test_mobility_stays_on_grid_and_in_bounds(seed, vmax):
+    prm = ManhattanParams(v_max=vmax)
+    st_ = init_mobility(jax.random.key(seed), 8, prm)
+    _, traj = rollout_positions(jax.random.key(seed + 1), st_, prm, 30, 0.1)
+    pos = np.asarray(traj)
+    assert (pos >= -1e-3).all() and (pos <= prm.extent + 1e-3).all()
+    # every position lies on a street: one coordinate ~ multiple of block
+    off = np.minimum(pos % prm.block, prm.block - pos % prm.block)
+    assert (off.min(axis=-1) < 1.0 + vmax * 0.1).all()
+
+
+def test_zero_speed_is_stationary():
+    prm = ManhattanParams(v_max=0.0)
+    st_ = init_mobility(jax.random.key(0), 4, prm)
+    st2 = step_mobility(jax.random.key(1), st_, prm, 0.1)
+    # v_max=0 floors speeds at 1e-3 m/s to keep RNG shapes static
+    np.testing.assert_allclose(np.asarray(st_["pos"]),
+                               np.asarray(st2["pos"]), atol=1e-2)
+
+
+def test_in_coverage_radius():
+    prm = ManhattanParams()
+    pos = jnp.array([[500.0, 500.0], [500.0, 950.0]])
+    cov = in_coverage(pos, prm)
+    assert bool(cov[0]) and not bool(cov[1])

@@ -1,0 +1,86 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fedavg_agg.ops import fedavg_agg_tpu
+from repro.kernels.flash_attention.ops import flash_attention_tpu
+from repro.kernels.ssd_scan.ops import ssd_scan_tpu
+from repro.kernels.veds_score.ops import veds_dt_score_tpu
+
+KEY = jax.random.key(0)
+
+
+@pytest.mark.parametrize("t,s,h,kv,d,causal,window,dtype", [
+    (128, 128, 4, 2, 32, True, None, jnp.float32),
+    (256, 256, 4, 4, 64, True, 64, jnp.float32),
+    (64, 256, 8, 2, 32, False, None, jnp.float32),
+    (100, 200, 4, 1, 16, True, None, jnp.float32),
+    (128, 128, 2, 2, 64, True, None, jnp.bfloat16),
+])
+def test_flash_attention(t, s, h, kv, d, causal, window, dtype):
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (2, t, h, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (2, s, kv, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (2, s, kv, d), dtype)
+    off = s - t if causal else 0
+    a = flash_attention_tpu(q, k, v, causal=causal, window=window,
+                            block_q=64, block_kv=64, q_offset=off)
+    b = flash_attention_tpu(q, k, v, causal=causal, window=window,
+                            force_ref=True, q_offset=off)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("bh,t,p,n,chunk,dtype", [
+    (4, 64, 16, 8, 16, jnp.float32),
+    (6, 96, 32, 16, 32, jnp.float32),
+    (2, 40, 8, 4, 16, jnp.float32),   # ragged T -> pad path
+    (2, 64, 16, 8, 32, jnp.bfloat16),
+])
+def test_ssd_scan(bh, t, p, n, chunk, dtype):
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (bh, t, p), dtype)
+    b = jax.random.normal(jax.random.fold_in(KEY, 5), (bh, t, n), dtype)
+    c = jax.random.normal(jax.random.fold_in(KEY, 6), (bh, t, n), dtype)
+    la = -jax.nn.softplus(
+        jax.random.normal(jax.random.fold_in(KEY, 7), (bh, t))).astype(
+            jnp.float32)
+    y1 = ssd_scan_tpu(v, b, c, la, chunk=chunk)
+    y2 = ssd_scan_tpu(v, b, c, la, force_ref=True)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 5e-4
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("v,l,block", [(4, 1000, 256), (8, 4096, 512),
+                                       (2, 37, 64)])
+def test_fedavg_agg(v, l, block):
+    x = jax.random.normal(jax.random.fold_in(KEY, 8), (v, l))
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 9), (v,)))
+    w = w * (jax.random.uniform(jax.random.fold_in(KEY, 10), (v,)) > 0.3)
+    old = jax.random.normal(jax.random.fold_in(KEY, 11), (l,))
+    a = fedavg_agg_tpu(x, w, old, block_l=block)
+    b = fedavg_agg_tpu(x, w, old, force_ref=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_fedavg_all_failed_keeps_old():
+    x = jax.random.normal(jax.random.fold_in(KEY, 12), (4, 100))
+    old = jax.random.normal(jax.random.fold_in(KEY, 13), (100,))
+    out = fedavg_agg_tpu(x, jnp.zeros(4), old, block_l=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(old))
+
+
+@pytest.mark.parametrize("c,block", [(100, 32), (256, 256), (17, 8)])
+def test_veds_score(c, block):
+    g = jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 14), (c,))) * 1e-11
+    q = jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 15), (c,))) * 0.1
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 16), (c,))) * 1e-7
+    e = jax.random.bernoulli(jax.random.fold_in(KEY, 17), 0.8, (c,))
+    kw = dict(V=0.2, kappa=0.1, bw=20e6, noise=8e-14, p_max=0.3)
+    outs_k = veds_dt_score_tpu(g, q, w, e, block_c=block, **kw)
+    outs_r = veds_dt_score_tpu(g, q, w, e, force_ref=True, **kw)
+    for a, b in zip(outs_k, outs_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,81 @@
+"""Solver correctness: Prop-1 closed form, the interior-point P4 solver vs
+scipy SLSQP, plus hypothesis property tests on feasibility."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.optimize import minimize
+
+from repro.core.solver import dt_power_opt, solve_p4
+
+
+def test_dt_power_is_argmax():
+    """Closed form beats a dense grid search of the DT objective."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        cw = abs(rng.normal(1.0, 1.0)) + 1e-3
+        q = abs(rng.normal(0.1, 0.1)) + 1e-3
+        gain = abs(rng.normal(1e-11, 1e-11)) + 1e-13
+        noise, pmax = 8e-14, 0.3
+        p_star = float(dt_power_opt(jnp.float32(cw), jnp.float32(q),
+                                    jnp.float32(gain), noise, pmax))
+        grid = np.linspace(0.0, pmax, 4001)
+        f = cw * np.log1p(gain * grid / noise) - q * grid
+        assert f[np.argmin(np.abs(grid - p_star))] >= f.max() - 1e-4 * (
+            abs(f.max()) + 1e-9)
+
+
+def _rand_instance(rng, n):
+    a = np.abs(rng.normal(0, 5, n))
+    a[rng.random(n) < 0.3] = 0
+    a[0] = abs(rng.normal(0, 5)) + 0.1
+    q = np.abs(rng.normal(0, 0.1, n)) + 1e-3
+    g_min = a[0] * (1 + abs(rng.normal(1, 1)))
+    d = a.copy()
+    d[0] = a[0] - g_min
+    return a, q, d, np.full(n, 0.3), abs(rng.normal(0.5, 0.5)) + 0.01
+
+
+def test_p4_vs_scipy():
+    rng = np.random.default_rng(1)
+    gaps = []
+    for _ in range(25):
+        n = 1 + rng.integers(1, 8)
+        a, q, d, pmax, cw = _rand_instance(rng, n)
+        _, v_j = solve_p4(jnp.float32(cw), jnp.asarray(a, jnp.float32),
+                          jnp.asarray(q, jnp.float32),
+                          jnp.asarray(d, jnp.float32),
+                          jnp.asarray(pmax, jnp.float32))
+        f = lambda p: -(cw * np.log1p(a @ p) - q @ p)  # noqa: E731
+        cons = [{"type": "ineq", "fun": lambda p: -d @ p}]
+        best = None
+        for _ in range(3):
+            x0 = rng.random(n) * 0.05
+            r = minimize(f, x0, bounds=[(0, 0.3)] * n, constraints=cons,
+                         method="SLSQP")
+            if r.success and (best is None or r.fun < best.fun):
+                best = r
+        v_s = max(-best.fun if best else 0.0, 0.0)
+        if v_s > 1e-6:
+            gaps.append(abs(float(v_j) - v_s) / v_s)
+    gaps = np.array(gaps)
+    # scheduling only needs candidate ranking: mean gap small, tail bounded
+    assert gaps.mean() < 0.05, gaps
+    assert np.percentile(gaps, 90) < 0.15, gaps
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 9), st.integers(0, 10_000))
+def test_p4_always_feasible(n, seed):
+    """Property: the solver's output always satisfies box + decodability."""
+    rng = np.random.default_rng(seed)
+    a, q, d, pmax, cw = _rand_instance(rng, n)
+    p, val = solve_p4(jnp.float32(cw), jnp.asarray(a, jnp.float32),
+                      jnp.asarray(q, jnp.float32),
+                      jnp.asarray(d, jnp.float32),
+                      jnp.asarray(pmax, jnp.float32))
+    p = np.asarray(p)
+    assert (p >= -1e-6).all() and (p <= 0.3 + 1e-6).all()
+    assert d @ p <= 1e-5
+    assert float(val) >= -1e-6  # never worse than not transmitting

@@ -1,0 +1,92 @@
+"""System-level properties of the VEDS scheduler and its baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.channel.mobility import ManhattanParams
+from repro.channel.v2x import ChannelParams
+from repro.core.baselines import SCHEDULERS
+from repro.core.lyapunov import VedsParams, psi, sigmoid_weight
+from repro.core.scenario import ScenarioParams, make_round
+
+MOB = ManhattanParams(v_max=10.0)
+CH = ChannelParams()
+PRM = VedsParams(alpha=2.0, V=0.2, Q=1e7, slot=0.1)
+SC = ScenarioParams(n_sov=6, n_opv=6, n_slots=40)
+
+
+@pytest.fixture(scope="module")
+def rounds():
+    mk = jax.jit(lambda k: make_round(k, SC, MOB, CH, PRM))
+    return [mk(jax.random.key(s)) for s in range(3)]
+
+
+@pytest.fixture(scope="module")
+def outcomes(rounds):
+    out = {}
+    for name, fn in SCHEDULERS.items():
+        run = jax.jit(lambda r, fn=fn: fn(r, PRM, CH))
+        out[name] = [run(r) for r in rounds]
+    return out
+
+
+def test_optimal_upper_bounds_all(outcomes):
+    for name in ("veds", "v2i_only", "madca", "sa"):
+        for o, opt in zip(outcomes[name], outcomes["optimal"]):
+            assert int(o["n_success"]) <= int(opt["n_success"])
+
+
+def test_veds_beats_v2i_only_on_average(outcomes):
+    v = np.mean([float(o["n_success"]) for o in outcomes["veds"]])
+    b = np.mean([float(o["n_success"]) for o in outcomes["v2i_only"]])
+    assert v >= b
+
+
+def test_success_iff_zeta_reaches_q(outcomes):
+    for o in outcomes["veds"]:
+        np.testing.assert_array_equal(
+            np.asarray(o["success"]),
+            np.asarray(o["zeta"]) >= PRM.Q)
+
+
+def test_veds_uses_cooperation(outcomes):
+    assert sum(int(o["n_cot_slots"]) for o in outcomes["veds"]) > 0
+    for o in outcomes["v2i_only"]:
+        assert int(o["n_cot_slots"]) == 0
+
+
+def test_energy_bounded_violation(outcomes, rounds):
+    """Thm 2: budget violation exists but is bounded (soft constraint)."""
+    for o, r in zip(outcomes["veds"], rounds):
+        overshoot = np.asarray(o["energy_sov"]) - np.asarray(r.e_sov)
+        assert overshoot.max() < 0.2  # J; bounded by sqrt(2 T^2 Phi) scale
+
+
+def test_sigmoid_weight_monotone():
+    prm = PRM
+    z = jnp.linspace(0.0, prm.Q, 64)
+    w = sigmoid_weight(z, prm)
+    assert bool(jnp.all(jnp.diff(w) >= -1e-12))
+
+
+def test_psi_decreasing_in_alpha():
+    vals = [psi(VedsParams(alpha=a)) for a in (0.5, 1.0, 2.0, 5.0, 10.0)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+    assert all(0 < v <= 1.0 + 1e-9 for v in vals)
+
+
+def test_more_slots_never_hurts():
+    """Property: with more slots, VEDS completes at least as many uploads."""
+    mk_s = jax.jit(lambda k: make_round(
+        k, ScenarioParams(n_sov=6, n_opv=6, n_slots=20), MOB, CH, PRM))
+    mk_l = jax.jit(lambda k: make_round(
+        k, ScenarioParams(n_sov=6, n_opv=6, n_slots=60), MOB, CH, PRM))
+    run = jax.jit(lambda r: SCHEDULERS["veds"](r, PRM, CH))
+    wins = 0
+    for s in range(3):
+        short = int(run(mk_s(jax.random.key(s)))["n_success"])
+        # same seed: the first 20 slots of the long scenario share mobility
+        long_ = int(run(mk_l(jax.random.key(s)))["n_success"])
+        wins += int(long_ >= short)
+    assert wins >= 2  # allow one channel-randomness exception
