@@ -10,9 +10,9 @@ import numpy as np
 
 from repro.channel.mobility import ManhattanParams
 from repro.channel.v2x import ChannelParams
-from repro.core.baselines import SCHEDULERS
+from repro.core.baselines import get_scheduler
 from repro.core.lyapunov import VedsParams
-from repro.core.scenario import ScenarioParams, make_round
+from repro.core.scenario import ScenarioParams, make_round_batch
 
 
 def time_call(fn: Callable, *args, reps: int = 3) -> float:
@@ -31,19 +31,18 @@ def mean_success(scheduler: str, *, v_max: float = 10.0, alpha: float = 2.0,
                  V: float = 0.2, rounds: int = 8, n_sov: int = 8,
                  n_opv: int = 8, n_slots: int = 60, q_bits: float = 1e7,
                  seed: int = 0) -> Dict[str, float]:
+    """Mean outcomes over `rounds` independent rounds, scheduled as one
+    batched [B = rounds] dispatch."""
     mob = ManhattanParams(v_max=v_max)
     ch = ChannelParams()
     prm = VedsParams(alpha=alpha, V=V, Q=q_bits, slot=0.1)
     sc = ScenarioParams(n_sov=n_sov, n_opv=n_opv, n_slots=n_slots)
-    fn = SCHEDULERS[scheduler]
-    mk = jax.jit(lambda k: make_round(k, sc, mob, ch, prm))
-    run = jax.jit(lambda r: fn(r, prm, ch))
-    succ, e_sov, e_opv = [], [], []
-    for r in range(rounds):
-        out = run(mk(jax.random.key(seed * 1000 + r)))
-        succ.append(float(out["n_success"]))
-        e_sov.append(float(jnp.sum(out["energy_sov"])))
-        e_opv.append(float(jnp.sum(out["energy_opv"])))
-    return {"n_success": float(np.mean(succ)),
-            "energy": float(np.mean(e_sov) + np.mean(e_opv)),
+    sched = get_scheduler(scheduler)
+    mk = jax.jit(lambda k: make_round_batch(k, sc, mob, ch, prm, rounds,
+                                            hetero_fleet=False))
+    run = jax.jit(lambda r: sched.solve_round(r, prm, ch))
+    out = run(mk(jax.random.key(seed)))
+    return {"n_success": float(jnp.mean(out["n_success"])),
+            "energy": float(jnp.mean(out["energy_sov"].sum(-1))
+                            + jnp.mean(out["energy_opv"].sum(-1))),
             "runner": run, "maker": mk}

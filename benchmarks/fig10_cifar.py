@@ -1,5 +1,5 @@
 """Figs. 10/11: FL test accuracy on the CIFAR-like task, iid and non-iid,
-VEDS vs benchmarks (synthetic substitute dataset; DESIGN.md §6)."""
+VEDS vs benchmarks (synthetic substitute dataset; DESIGN.md §8)."""
 from __future__ import annotations
 
 import jax

@@ -1,5 +1,5 @@
 """Fig. 12: trajectory-prediction ADE on the Argoverse-like task,
-VEDS vs benchmarks (synthetic kinematic substitute; DESIGN.md §6)."""
+VEDS vs benchmarks (synthetic kinematic substitute; DESIGN.md §8)."""
 from __future__ import annotations
 
 import jax

@@ -18,6 +18,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=15)
     ap.add_argument("--scheduler", default="veds")
+    ap.add_argument("--round-batch", type=int, default=5,
+                    help="rounds scheduled per batched XLA dispatch")
     ap.add_argument("--iid", action="store_true")
     ap.add_argument("--noise", type=float, default=2.0)
     args = ap.parse_args()
@@ -29,7 +31,8 @@ def main():
     client_data = [{"x": x[i], "y": y[i]} for i in parts]
 
     params = materialize(jax.random.fold_in(key, 3), cnn_decl())
-    sim = FLSimConfig(rounds=args.rounds, scheduler=args.scheduler)
+    sim = FLSimConfig(rounds=args.rounds, scheduler=args.scheduler,
+                      round_batch=args.round_batch)
     eval_fn = jax.jit(lambda p: cnn_accuracy(p, {"x": xt, "y": yt}))
     hist = run_fl(jax.random.fold_in(key, 4), params,
                   lambda p, b: cnn_loss(p, b), client_data, sim,

@@ -28,11 +28,13 @@ _DIRS = jnp.array([[1.0, 0.0], [-1.0, 0.0], [0.0, 1.0], [0.0, -1.0]])
 
 
 def init_mobility(key: jax.Array, n: int, prm: ManhattanParams,
-                  near_rsu: bool = True):
+                  near_rsu: bool = True, rsu_xy: jax.Array | None = None):
     """Returns state dict: pos [n,2] on the grid, dir [n], speed [n].
 
     near_rsu: sample initial positions within ~coverage of the RSU (the
     paper's SOVs/OPVs are vehicles inside the coverage area at round start).
+    rsu_xy: optional traced [2] RSU position overriding `prm.rsu_xy` — this
+    is how `make_round_batch` vmaps cells with independent RSU placements.
     """
     k1, k2, k3, k4 = jax.random.split(key, 4)
     n_lines = int(prm.extent // prm.block) + 1
@@ -40,7 +42,8 @@ def init_mobility(key: jax.Array, n: int, prm: ManhattanParams,
     offset = jax.random.uniform(k2, (n,), minval=0.0, maxval=prm.extent)
     if near_rsu:
         r = 0.8 * prm.coverage
-        cx, cy = prm.rsu_xy
+        cx, cy = (prm.rsu_xy if rsu_xy is None
+                  else (rsu_xy[0], rsu_xy[1]))
         lo_l = jnp.floor(jnp.maximum(cx - r, 0.0) / prm.block)
         hi_l = jnp.ceil(jnp.minimum(cx + r, prm.extent) / prm.block)
         line = jnp.clip(line, lo_l, hi_l)

@@ -1,10 +1,13 @@
 """VEDS core: the paper's primary contribution.
 
-Scheduler (Algorithms 1/2), derivative-based drift-plus-penalty machinery,
-convex solvers (Prop. 1 closed form + interior-point P4), scenario builder,
-and the four benchmark schedulers from Section VI.
+Scheduler protocol (Algorithms 1/2 + the four Section VI benchmarks, all
+batch-native over a leading [B] cell axis), derivative-based
+drift-plus-penalty machinery, convex solvers (Prop. 1 closed form +
+interior-point P4), and the single-cell/batched scenario builders.
 """
 from repro.core.lyapunov import VedsParams, sigmoid_shifted, sigmoid_weight  # noqa: F401
+from repro.core.scheduler import RoundOutputs, Scheduler  # noqa: F401
 from repro.core.veds import RoundInputs, veds_round, solve_slot  # noqa: F401
-from repro.core.baselines import SCHEDULERS  # noqa: F401
-from repro.core.scenario import ScenarioParams, make_round  # noqa: F401
+from repro.core.baselines import SCHEDULERS, get_scheduler  # noqa: F401
+from repro.core.scenario import (ScenarioParams, make_round,  # noqa: F401
+                                 make_round_batch)

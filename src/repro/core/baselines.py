@@ -1,4 +1,4 @@
-"""Benchmark schedulers from the paper's Section VI.
+"""Benchmark schedulers from the paper's Section VI, batch-native.
 
 1) Optimal        — every SOV in coverage uploads successfully (upper bound).
 2) V2I-only       — VEDS with OPVs disabled (special case of our algorithm).
@@ -9,95 +9,181 @@
 4) SA [26]        — static: ranks SOVs by their *initial* channel state and
                     round-robins the slots in that fixed order at max power,
                     ignoring mobility and fast fading.
+
+Every scheduler implements the `Scheduler` protocol: `solve_round` takes
+`RoundInputs` with or without a leading `[B]` cell axis and returns a
+`RoundOutputs` of matching batchedness. The whole batch is one XLA program
+— no Python loop over cells.
 """
 from __future__ import annotations
 
-from typing import Dict
+import dataclasses
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.channel.v2x import ChannelParams
 from repro.core import lyapunov as lyp
+from repro.core.scheduler import RoundOutputs, Scheduler
 from repro.core.veds import RoundInputs, veds_round
 
 
+def _unbatch(out: RoundOutputs, batched: bool) -> RoundOutputs:
+    return out if batched else jax.tree.map(lambda x: x[0], out)
+
+
+def _valid_sov(rb: RoundInputs) -> jax.Array:
+    if rb.valid_sov is not None:
+        return rb.valid_sov
+    return jnp.ones(rb.g_sr.shape[::2], bool)               # [B,S]
+
+
 def optimal_round(rnd: RoundInputs, prm: lyp.VedsParams,
-                  ch: ChannelParams) -> Dict[str, jax.Array]:
-    in_cov = jnp.ones(rnd.g_sr.shape[1], bool)  # every SOV succeeds
-    return {"success": in_cov, "n_success": in_cov.sum(),
-            "zeta": jnp.where(in_cov, prm.Q, 0.0),
-            "energy_sov": rnd.e_cp, "energy_opv": jnp.zeros(rnd.e_opv.shape),
-            "n_cot_slots": jnp.zeros((), jnp.int32),
-            "n_dt_slots": jnp.zeros((), jnp.int32)}
+                  ch: ChannelParams) -> RoundOutputs:
+    batched = rnd.batched
+    rb = rnd.with_batch_axis()
+    B = rb.g_sr.shape[0]
+    success = _valid_sov(rb)                                # all real SOVs
+    out = RoundOutputs(
+        success=success, n_success=success.sum(-1),
+        zeta=jnp.where(success, prm.Q, 0.0),
+        energy_sov=rb.e_cp, energy_opv=jnp.zeros(rb.e_opv.shape),
+        n_cot_slots=jnp.zeros((B,), jnp.int32),
+        n_dt_slots=jnp.zeros((B,), jnp.int32))
+    return _unbatch(out, batched)
 
 
 def v2i_only_round(rnd: RoundInputs, prm: lyp.VedsParams,
-                   ch: ChannelParams) -> Dict[str, jax.Array]:
+                   ch: ChannelParams) -> RoundOutputs:
     return veds_round(rnd, prm, ch, enable_cot=False)
 
 
+def _take_m(x: jax.Array, m: jax.Array) -> jax.Array:
+    """Gather x[b, m[b]] for every cell b: x [B,S], m [B] -> [B]."""
+    return jnp.take_along_axis(x, m[:, None], axis=-1)[:, 0]
+
+
 def madca_round(rnd: RoundInputs, prm: lyp.VedsParams,
-                ch: ChannelParams) -> Dict[str, jax.Array]:
-    T, S = rnd.g_sr.shape
+                ch: ChannelParams) -> RoundOutputs:
+    batched = rnd.batched
+    rb = rnd.with_batch_axis()
+    B, T, S = rb.g_sr.shape
+    valid = _valid_sov(rb)
+    rows = jnp.arange(B)
 
     def body(st, t):
-        zeta, e_left = st
-        g = rnd.g_sr[t]
-        eligible = (rnd.t_cp <= t.astype(jnp.float32) * prm.slot) \
-            & (zeta < prm.Q) & (g > 0) & (e_left > 0)
+        zeta, e_left = st                                   # [B,S]
+        g = rb.g_sr[:, t]
+        eligible = (rb.t_cp <= t.astype(jnp.float32) * prm.slot) \
+            & (zeta < prm.Q) & (g > 0) & (e_left > 0) & valid
         score = jnp.where(eligible, g, -1.0)
-        m = jnp.argmax(score)
-        any_e = score[m] > 0
+        m = jnp.argmax(score, axis=-1)                      # [B]
+        any_e = _take_m(score, m) > 0
         # success-probability greedy: full power while budget lasts
-        p = jnp.minimum(ch.p_max, e_left[m] / prm.slot)
+        p = jnp.minimum(ch.p_max, _take_m(e_left, m) / prm.slot)
         p = jnp.where(any_e, p, 0.0)
-        rate = ch.bandwidth * jnp.log2(1.0 + p * g[m] / ch.noise_power)
+        rate = ch.bandwidth * jnp.log2(
+            1.0 + p * _take_m(g, m) / ch.noise_power)
         z = prm.slot * rate
-        zeta = zeta.at[m].add(jnp.where(any_e, z, 0.0))
-        e_left = e_left.at[m].add(-jnp.where(any_e, prm.slot * p, 0.0))
+        zeta = zeta.at[rows, m].add(jnp.where(any_e, z, 0.0))
+        e_left = e_left.at[rows, m].add(-jnp.where(any_e, prm.slot * p, 0.0))
         return (zeta, e_left), prm.slot * p * any_e
 
-    zeta0 = jnp.zeros((S,))
-    e0 = jnp.maximum(rnd.e_sov - rnd.e_cp, 0.0)
+    zeta0 = jnp.zeros((B, S))
+    e0 = jnp.maximum(rb.e_sov - rb.e_cp, 0.0)
     (zeta, e_left), e_cm = jax.lax.scan(body, (zeta0, e0), jnp.arange(T))
-    success = zeta >= prm.Q
-    return {"success": success, "n_success": success.sum(), "zeta": zeta,
-            "energy_sov": (e0 - e_left) + rnd.e_cp,
-            "energy_opv": jnp.zeros(rnd.e_opv.shape),
-            "n_cot_slots": jnp.zeros((), jnp.int32),
-            "n_dt_slots": (e_cm > 0).sum()}
+    success = (zeta >= prm.Q) & valid
+    out = RoundOutputs(
+        success=success, n_success=success.sum(-1), zeta=zeta,
+        energy_sov=(e0 - e_left) + rb.e_cp,
+        energy_opv=jnp.zeros(rb.e_opv.shape),
+        n_cot_slots=jnp.zeros((B,), jnp.int32),
+        n_dt_slots=(e_cm > 0).sum(0))
+    return _unbatch(out, batched)
 
 
 def sa_round(rnd: RoundInputs, prm: lyp.VedsParams,
-             ch: ChannelParams) -> Dict[str, jax.Array]:
-    T, S = rnd.g_sr.shape
-    order = jnp.argsort(-rnd.g_sr[0])      # initial channel ranking
+             ch: ChannelParams) -> RoundOutputs:
+    batched = rnd.batched
+    rb = rnd.with_batch_axis()
+    B, T, S = rb.g_sr.shape
+    valid = _valid_sov(rb)
+    # initial ranking; padded vehicles sort strictly last so the rotation
+    # below only cycles the real fleet
+    order = jnp.argsort(jnp.where(valid, -rb.g_sr[:, 0], jnp.inf), axis=-1)
+    n_real = jnp.maximum(valid.sum(-1), 1)                  # [B]
+    rows = jnp.arange(B)
 
-    def body(zeta, t):
-        m = order[t % S]
-        g = rnd.g_sr[t, m]
-        ok = (rnd.t_cp[m] <= t.astype(jnp.float32) * prm.slot) \
-            & (zeta[m] < prm.Q) & (g > 0)
+    def body(st, t):
+        zeta, e_vec = st                                    # [B,S]
+        m = jnp.take_along_axis(order, (t % n_real)[:, None],
+                                axis=-1)[:, 0]              # [B]
+        g = _take_m(rb.g_sr[:, t], m)
+        ok = (_take_m(rb.t_cp, m) <= t.astype(jnp.float32) * prm.slot) \
+            & (_take_m(zeta, m) < prm.Q) & (g > 0) & _take_m(valid, m)
         rate = ch.bandwidth * jnp.log2(1.0 + ch.p_max * g / ch.noise_power)
         z = jnp.where(ok, prm.slot * rate, 0.0)
-        return zeta.at[m].add(z), prm.slot * ch.p_max * ok
+        zeta = zeta.at[rows, m].add(z)
+        # attribute transmit energy to the vehicle actually scheduled
+        e_vec = e_vec.at[rows, m].add(prm.slot * ch.p_max * ok)
+        return (zeta, e_vec), ok
 
-    zeta, e_cm = jax.lax.scan(body, jnp.zeros((S,)), jnp.arange(T))
-    success = zeta >= prm.Q
+    (zeta, e_vec), oks = jax.lax.scan(
+        body, (jnp.zeros((B, S)), jnp.zeros((B, S))), jnp.arange(T))
+    success = (zeta >= prm.Q) & valid
     # energy: max power whenever scheduled (may violate budgets; that is the
-    # point of the comparison in Fig. 9)
-    return {"success": success, "n_success": success.sum(), "zeta": zeta,
-            "energy_sov": rnd.e_cp + jnp.zeros((S,)) + e_cm.sum() / S,
-            "energy_opv": jnp.zeros(rnd.e_opv.shape),
-            "n_cot_slots": jnp.zeros((), jnp.int32),
-            "n_dt_slots": (e_cm > 0).sum()}
+    # point of the comparison in Fig. 9), per-SOV attribution
+    out = RoundOutputs(
+        success=success, n_success=success.sum(-1), zeta=zeta,
+        energy_sov=rb.e_cp + e_vec,
+        energy_opv=jnp.zeros(rb.e_opv.shape),
+        n_cot_slots=jnp.zeros((B,), jnp.int32),
+        n_dt_slots=oks.sum(0))
+    return _unbatch(out, batched)
 
 
-SCHEDULERS = {
-    "veds": veds_round,
-    "optimal": optimal_round,
-    "v2i_only": v2i_only_round,
-    "madca": madca_round,
-    "sa": sa_round,
+@dataclasses.dataclass(frozen=True)
+class VedsScheduler:
+    """Algorithm 2, optionally without V2V cooperation (V2I-only)."""
+    name: str = "veds"
+    enable_cot: bool = True
+    use_kernel: bool = True
+
+    def solve_round(self, rnd: RoundInputs, prm: lyp.VedsParams,
+                    ch: ChannelParams) -> RoundOutputs:
+        return veds_round(rnd, prm, ch, enable_cot=self.enable_cot,
+                          use_kernel=self.use_kernel)
+
+    def __call__(self, rnd, prm, ch) -> RoundOutputs:
+        return self.solve_round(rnd, prm, ch)
+
+
+@dataclasses.dataclass(frozen=True)
+class FnScheduler:
+    """Adapter turning a bare round function into a `Scheduler`."""
+    name: str
+    fn: Callable = dataclasses.field(hash=False, compare=False)
+
+    def solve_round(self, rnd: RoundInputs, prm: lyp.VedsParams,
+                    ch: ChannelParams) -> RoundOutputs:
+        return self.fn(rnd, prm, ch)
+
+    def __call__(self, rnd, prm, ch) -> RoundOutputs:
+        return self.solve_round(rnd, prm, ch)
+
+
+SCHEDULERS: Dict[str, Scheduler] = {
+    "veds": VedsScheduler(),
+    "optimal": FnScheduler("optimal", optimal_round),
+    "v2i_only": VedsScheduler(name="v2i_only", enable_cot=False),
+    "madca": FnScheduler("madca", madca_round),
+    "sa": FnScheduler("sa", sa_round),
 }
+
+
+def get_scheduler(name: str) -> Scheduler:
+    if name not in SCHEDULERS:
+        raise KeyError(f"unknown scheduler {name!r}; "
+                       f"have {sorted(SCHEDULERS)}")
+    return SCHEDULERS[name]

@@ -3,11 +3,16 @@
 This is the simulation substrate behind every paper figure: a fleet of
 vehicles on the Manhattan grid; per round, the first S in-coverage vehicles
 are SOVs (they hold data and train) and the next U are OPVs (relays).
+
+`make_round` builds one cell ([T, ...] layout); `make_round_batch` rolls
+out B cells with independent RSU placements, heterogeneous fleet sizes via
+padding + validity masks, and per-cell energy/clock draws — the batched
+[B, T, ...] layout every scheduler consumes in one XLA program.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,16 +45,16 @@ def compute_model(sc: ScenarioParams) -> Tuple[float, float]:
     return t_cp, e_cp
 
 
-def make_round(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
-               ch: ChannelParams, prm: VedsParams) -> RoundInputs:
-    """One round's gains/budgets. Vehicles: [0:S] SOVs, [S:S+U] OPVs."""
+def _cell_fields(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
+                 ch: ChannelParams, prm: VedsParams,
+                 rsu_xy: jax.Array) -> Dict[str, jax.Array]:
+    """One cell's gains/budgets around a (possibly traced) RSU position."""
     S, U, T = sc.n_sov, sc.n_opv, sc.n_slots
     k_mob, k_ch, k_e, k_cp = jax.random.split(key, 4)
-    st = init_mobility(k_mob, S + U, mob)
+    st = init_mobility(k_mob, S + U, mob, rsu_xy=rsu_xy)
     _, traj = rollout_positions(jax.random.fold_in(k_mob, 1), st, mob, T,
                                 prm.slot)                       # [T,N,2]
-    rsu = jnp.asarray(mob.rsu_xy)
-    d_rsu = jnp.linalg.norm(traj - rsu, axis=-1)                # [T,N]
+    d_rsu = jnp.linalg.norm(traj - rsu_xy, axis=-1)             # [T,N]
     cov = d_rsu <= mob.coverage
     d_sov_opv = jnp.linalg.norm(
         traj[:, :S, None, :] - traj[:, None, S:, :], axis=-1)   # [T,S,U]
@@ -67,5 +72,61 @@ def make_round(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
     e_sov = jax.random.uniform(k_e, (S,), minval=sc.e_min, maxval=sc.e_max)
     e_opv = jax.random.uniform(jax.random.fold_in(k_e, 1), (U,),
                                minval=sc.e_min, maxval=sc.e_max)
-    return RoundInputs(g_sr=g_sr, g_or=g_or, g_so=g_so, t_cp=t_cp,
-                       e_cp=e_cp, e_sov=e_sov, e_opv=e_opv)
+    return dict(g_sr=g_sr, g_or=g_or, g_so=g_so, t_cp=t_cp,
+                e_cp=e_cp, e_sov=e_sov, e_opv=e_opv)
+
+
+def make_round(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
+               ch: ChannelParams, prm: VedsParams) -> RoundInputs:
+    """One round's gains/budgets. Vehicles: [0:S] SOVs, [S:S+U] OPVs."""
+    return RoundInputs(**_cell_fields(key, sc, mob, ch, prm,
+                                      jnp.asarray(mob.rsu_xy)))
+
+
+def make_round_batch(key: jax.Array, sc: ScenarioParams,
+                     mob: ManhattanParams, ch: ChannelParams,
+                     prm: VedsParams, batch: int, *,
+                     hetero_fleet: bool = True,
+                     rsu_xy: Optional[jax.Array] = None) -> RoundInputs:
+    """B cells in one batched RoundInputs ([B, T, ...] layout).
+
+    Each cell gets an independent RSU placement (uniform over the central
+    half of the road network unless `rsu_xy` [B,2] is given), independent
+    mobility/channel/energy/clock draws, and — with `hetero_fleet` — a
+    heterogeneous fleet size: cell b has s_b in [ceil(S/2), S] real SOVs
+    and u_b in [ceil(U/2), U] real OPVs, the rest being padding. Padded
+    vehicles carry zero gains, zero budgets and `valid_*` False, so every
+    scheduler ignores them and `n_success` counts only real SOVs.
+    """
+    B = int(batch)
+    S, U = sc.n_sov, sc.n_opv
+    k_cell, k_rsu, k_s, k_u = jax.random.split(key, 4)
+    if rsu_xy is None:
+        rsu = jax.random.uniform(k_rsu, (B, 2), minval=0.25 * mob.extent,
+                                 maxval=0.75 * mob.extent)
+    else:
+        rsu = jnp.broadcast_to(jnp.asarray(rsu_xy, jnp.float32), (B, 2))
+    keys = jax.random.split(k_cell, B)
+    fields = jax.vmap(
+        lambda k, r: _cell_fields(k, sc, mob, ch, prm, r))(keys, rsu)
+
+    if hetero_fleet:
+        s_cnt = jax.random.randint(k_s, (B,), (S + 1) // 2, S + 1)
+        u_cnt = jax.random.randint(k_u, (B,), (U + 1) // 2, U + 1)
+        valid_sov = jnp.arange(S)[None] < s_cnt[:, None]        # [B,S]
+        valid_opv = jnp.arange(U)[None] < u_cnt[:, None]        # [B,U]
+    else:
+        valid_sov = jnp.ones((B, S), bool)
+        valid_opv = jnp.ones((B, U), bool)
+
+    vs, vo = valid_sov[:, None, :], valid_opv[:, None, :]       # [B,1,·]
+    return RoundInputs(
+        g_sr=fields["g_sr"] * vs,
+        g_or=fields["g_or"] * vo,
+        g_so=fields["g_so"] * (valid_sov[:, None, :, None]
+                               & valid_opv[:, None, None, :]),
+        t_cp=fields["t_cp"] * valid_sov,
+        e_cp=fields["e_cp"] * valid_sov,
+        e_sov=fields["e_sov"] * valid_sov,
+        e_opv=fields["e_opv"] * valid_opv,
+        valid_sov=valid_sov, valid_opv=valid_opv)

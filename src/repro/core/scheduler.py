@@ -1,0 +1,78 @@
+"""Scheduler protocol and the batched round-output container.
+
+Every scheduler in the repo — VEDS (Algorithms 1/2) and the Section VI
+benchmarks — implements `Scheduler`: a named object whose `solve_round`
+maps `RoundInputs` to `RoundOutputs`. Rounds may carry a leading batch
+axis `B` (independent RSU cells, or independent rounds of one cell); a
+scheduler must accept both the single-cell layout (`g_sr: [T, S]`) and
+the batched layout (`g_sr: [B, T, S]`) and return outputs of matching
+batchedness. See DESIGN.md §2 for the full layout contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Protocol, runtime_checkable
+
+import jax
+
+from repro.channel.v2x import ChannelParams
+from repro.core.lyapunov import VedsParams
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RoundOutputs:
+    """Per-round scheduling outcome. Unbatched / batched field shapes:
+
+      success     [S]  / [B, S]   which SOVs uploaded the full model
+      n_success   []   / [B]      successful aggregations in the cell
+      zeta        [S]  / [B, S]   delivered bits at round end
+      energy_sov  [S]  / [B, S]   total SOV energy (compute + transmit) [J]
+      energy_opv  [U]  / [B, U]   total OPV relay energy [J]
+      n_cot_slots []   / [B]      slots spent on cooperative transmission
+      n_dt_slots  []   / [B]      slots spent on direct transmission
+    """
+    success: jax.Array
+    n_success: jax.Array
+    zeta: jax.Array
+    energy_sov: jax.Array
+    energy_opv: jax.Array
+    n_cot_slots: jax.Array
+    n_dt_slots: jax.Array
+
+    # dict-style access for legacy call-sites (`out["n_success"]`)
+    def __getitem__(self, name: str) -> jax.Array:
+        return getattr(self, name)
+
+    def keys(self) -> Iterator[str]:
+        return iter(f.name for f in dataclasses.fields(self))
+
+    @property
+    def batched(self) -> bool:
+        return self.success.ndim == 2
+
+    @property
+    def batch_size(self) -> int:
+        return self.success.shape[0] if self.batched else 1
+
+    def cell(self, b: int) -> "RoundOutputs":
+        """Slice one cell out of a batched output."""
+        if not self.batched:
+            return self
+        return jax.tree.map(lambda x: x[b], self)
+
+
+@runtime_checkable
+class Scheduler(Protocol):
+    """A named round scheduler. Implementations are frozen dataclasses so
+    they hash/compare by config and can be closed over by `jax.jit`."""
+
+    name: str
+
+    def solve_round(self, rnd, prm: VedsParams,
+                    ch: ChannelParams) -> RoundOutputs:
+        ...
+
+    def __call__(self, rnd, prm: VedsParams,
+                 ch: ChannelParams) -> RoundOutputs:
+        ...

@@ -1,28 +1,42 @@
-"""V2V-Enhanced Dynamic Scheduling (VEDS) — Algorithms 1 and 2.
+"""V2V-Enhanced Dynamic Scheduling (VEDS) — Algorithms 1 and 2, batched.
 
 The paper's Algorithm 1 loops over SOVs, then over OPV prefixes, solving a
 small convex program per candidate with CVX. Here every candidate is solved
 in parallel (vmap over the [S] DT candidates and the [S, U] COT candidates),
-and the whole round is one `lax.scan` over slots — a single XLA program.
+the whole round is one `lax.scan` over slots, and a leading batch axis `B`
+(independent RSU cells) rides through the entire program — B rounds are one
+XLA dispatch.
 
-Round inputs (precomputed from mobility + channel draws):
-  g_sr [T, S]   SOV->RSU power gains per slot (0 outside coverage)
-  g_or [T, U]   OPV->RSU gains
-  g_so [T, S, U] SOV->OPV gains
-  t_cp [S]      local-update latency [s];  e_cp [S] its energy [J]
-  e_sov [S], e_opv [U] energy budgets [J]
+Round inputs (precomputed from mobility + channel draws), single-cell
+layout on the left, batched layout on the right:
+  g_sr [T, S]    / [B, T, S]    SOV->RSU power gains per slot (0 = no link)
+  g_or [T, U]    / [B, T, U]    OPV->RSU gains
+  g_so [T, S, U] / [B, T, S, U] SOV->OPV gains
+  t_cp [S]       / [B, S]       local-update latency [s]
+  e_cp [S]       / [B, S]       local-update energy [J]
+  e_sov [S], e_opv [U]  (+ [B]) energy budgets [J]
+  valid_sov/valid_opv           optional padding masks for heterogeneous
+                                fleets (None = all vehicles real)
+
+DT candidate scoring (Prop. 1 + objective (21a)) is routed through the
+`veds_score` Pallas kernel: the [B, S] candidate grid is flattened into the
+kernel's tiled 1-D candidate layout. `use_kernel=False` keeps the pure-jnp
+reference path, which tests check against the kernel (see DESIGN.md §6).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+import functools
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.channel.v2x import ChannelParams
 from repro.core import lyapunov as lyp
+from repro.core.scheduler import RoundOutputs
 from repro.core.solver import dt_power_opt, solve_p4
+from repro.kernels.veds_score.ops import veds_dt_score_tpu
 
 LN2 = 0.6931471805599453
 NEG = -1e30
@@ -38,25 +52,59 @@ class RoundInputs:
     e_cp: jax.Array
     e_sov: jax.Array
     e_opv: jax.Array
+    valid_sov: Optional[jax.Array] = None
+    valid_opv: Optional[jax.Array] = None
+
+    @property
+    def batched(self) -> bool:
+        return self.g_sr.ndim == 3
+
+    @property
+    def batch_size(self) -> int:
+        return self.g_sr.shape[0] if self.batched else 1
+
+    def with_batch_axis(self) -> "RoundInputs":
+        """Add a leading B=1 axis to every field (no-op when batched)."""
+        if self.batched:
+            return self
+        return jax.tree.map(lambda x: x[None], self)
+
+    def cell(self, b: int) -> "RoundInputs":
+        """Slice one cell out of a batched round."""
+        if not self.batched:
+            return self
+        return jax.tree.map(lambda x: x[b], self)
 
 
 def _dt_candidates(w, qs, g_sr, eligible, prm: lyp.VedsParams,
-                   ch: ChannelParams):
-    """Closed-form DT (Prop. 1) for all SOVs. Returns (y [S], p [S], z [S])."""
+                   ch: ChannelParams, use_kernel: bool = True):
+    """Closed-form DT (Prop. 1) for the whole [B, S] candidate grid.
+
+    Returns (y, p, z), each [B, S]. With `use_kernel` the grid is flattened
+    into the Pallas kernel's 1-D tiled candidate layout (interpret mode off
+    TPU); otherwise the pure-jnp reference math runs. Both zero p/z on
+    ineligible candidates and pin their objective to NEG.
+    """
+    if use_kernel:
+        y, p, z = veds_dt_score_tpu(
+            g_sr, qs, w, eligible, V=prm.V, kappa=prm.slot,
+            bw=ch.bandwidth, noise=ch.noise_power, p_max=ch.p_max)
+        return y, p, z
     cw = prm.V * w * prm.slot * ch.bandwidth / LN2
     q_eff = jnp.maximum(qs * prm.slot, 1e-9)
     p = dt_power_opt(cw, q_eff, g_sr, ch.noise_power, ch.p_max)
     rate = ch.bandwidth * jnp.log2(1.0 + p * g_sr / ch.noise_power)
     z = prm.slot * rate
     y = prm.V * w * z - qs * prm.slot * p
-    y = jnp.where(eligible & (g_sr > 0), y, NEG)
-    return y, p, z
+    valid = eligible & (g_sr > 0)
+    return (jnp.where(valid, y, NEG), jnp.where(valid, p, 0.0),
+            jnp.where(valid, z, 0.0))
 
 
 def _cot_candidates(w, qs, qu, g_sr, g_or, g_so, eligible,
                     prm: lyp.VedsParams, ch: ChannelParams):
-    """P4 for every (SOV m, prefix size i). Proposition 2: only prefixes of
-    OPVs sorted by h_{m,n} descending need be enumerated.
+    """P4 for every (SOV m, prefix size i) of one cell. Proposition 2: only
+    prefixes of OPVs sorted by h_{m,n} descending need be enumerated.
 
     Returns y [S,U], p_m [S,U], p_opv [S,U,U] (in *sorted* OPV order),
     order [S,U], z [S,U].
@@ -108,32 +156,15 @@ def _cot_candidates(w, qs, qu, g_sr, g_or, g_so, eligible,
     return y, p_all[..., 0], p_all[..., 1:], order, z
 
 
-def solve_slot(t: jax.Array, state: Dict[str, jax.Array], rnd: RoundInputs,
-               prm: lyp.VedsParams, ch: ChannelParams, *,
-               enable_cot: bool = True):
-    """Algorithm 1 for slot t. state: zeta [S], qs [S], qu [U].
+def _select_slot(y_dt, p_dt, z_dt, y_cot, pm_cot, po_cot, order, z_cot,
+                 prm: lyp.VedsParams):
+    """Pick the slot's transmission for one cell (Algorithm 1 lines 9-13).
 
-    Returns decision dict + per-vehicle (z, e_sov_cm, e_opv_cm).
+    Inputs are the candidate tables of a single cell: y_dt/p_dt/z_dt [S],
+    y_cot/pm_cot/z_cot [S,U], po_cot [S,U,U], order [S,U].
     """
-    S = rnd.g_sr.shape[1]
-    U = rnd.g_or.shape[1]
-    zeta, qs, qu = state["zeta"], state["qs"], state["qu"]
-    g_sr, g_or, g_so = rnd.g_sr[t], rnd.g_or[t], rnd.g_so[t]
-    w = lyp.sigmoid_weight(zeta, prm)
-    eligible = (rnd.t_cp <= t.astype(jnp.float32) * prm.slot) \
-        & (zeta < prm.Q)
-
-    y_dt, p_dt, z_dt = _dt_candidates(w, qs, g_sr, eligible, prm, ch)
-    if enable_cot:
-        y_cot, pm_cot, po_cot, order, z_cot = _cot_candidates(
-            w, qs, qu, g_sr, g_or, g_so, eligible, prm, ch)
-    else:
-        y_cot = jnp.full((S, U), NEG)
-        pm_cot = jnp.zeros((S, U))
-        po_cot = jnp.zeros((S, U, U))
-        order = jnp.broadcast_to(jnp.arange(U)[None], (S, U))
-        z_cot = jnp.zeros((S, U))
-
+    S = y_dt.shape[0]
+    U = y_cot.shape[1]
     best_dt = jnp.argmax(y_dt)
     y_dt_best = y_dt[best_dt]
     flat = y_cot.reshape(-1)
@@ -165,6 +196,44 @@ def solve_slot(t: jax.Array, state: Dict[str, jax.Array], rnd: RoundInputs,
     e_opv_sorted = prm.slot / 2 * p_sched
     e_opv_cot = jnp.zeros((U,)).at[order[m_cot]].add(e_opv_sorted)
     e_opv_vec = jnp.where(use_cot, e_opv_cot, e_opv_vec)
+    return m_sel, use_dt, use_cot, z_vec, e_sov_vec, e_opv_vec
+
+
+def solve_slot(t: jax.Array, state: Dict[str, jax.Array], rnd: RoundInputs,
+               prm: lyp.VedsParams, ch: ChannelParams, *,
+               enable_cot: bool = True, use_kernel: bool = True):
+    """Algorithm 1 for slot t, batch-native. `rnd` must be batched; state
+    leaves carry the batch axis: zeta [B,S], qs [B,S], qu [B,U].
+
+    Returns decision dict + per-vehicle (z, e_sov_cm, e_opv_cm), all [B,...].
+    """
+    B, _, S = rnd.g_sr.shape
+    U = rnd.g_or.shape[-1]
+    zeta, qs, qu = state["zeta"], state["qs"], state["qu"]
+    g_sr, g_or, g_so = rnd.g_sr[:, t], rnd.g_or[:, t], rnd.g_so[:, t]
+    w = lyp.sigmoid_weight(zeta, prm)
+    eligible = (rnd.t_cp <= t.astype(jnp.float32) * prm.slot) \
+        & (zeta < prm.Q)
+    if rnd.valid_sov is not None:
+        eligible &= rnd.valid_sov
+
+    y_dt, p_dt, z_dt = _dt_candidates(w, qs, g_sr, eligible, prm, ch,
+                                      use_kernel=use_kernel)
+    if enable_cot:
+        y_cot, pm_cot, po_cot, order, z_cot = jax.vmap(
+            _cot_candidates,
+            in_axes=(0, 0, 0, 0, 0, 0, 0, None, None))(
+                w, qs, qu, g_sr, g_or, g_so, eligible, prm, ch)
+    else:
+        y_cot = jnp.full((B, S, U), NEG)
+        pm_cot = jnp.zeros((B, S, U))
+        po_cot = jnp.zeros((B, S, U, U))
+        order = jnp.broadcast_to(jnp.arange(U)[None, None], (B, S, U))
+        z_cot = jnp.zeros((B, S, U))
+
+    m_sel, use_dt, use_cot, z_vec, e_sov_vec, e_opv_vec = jax.vmap(
+        functools.partial(_select_slot, prm=prm))(
+            y_dt, p_dt, z_dt, y_cot, pm_cot, po_cot, order, z_cot)
 
     new_state = {
         "zeta": lyp.update_zeta(zeta, z_vec, prm),
@@ -181,25 +250,37 @@ def solve_slot(t: jax.Array, state: Dict[str, jax.Array], rnd: RoundInputs,
 
 
 def veds_round(rnd: RoundInputs, prm: lyp.VedsParams, ch: ChannelParams, *,
-               enable_cot: bool = True):
-    """Algorithm 2: scan slots, return success mask + diagnostics."""
-    T, S = rnd.g_sr.shape
-    U = rnd.g_or.shape[1]
-    state = {"zeta": jnp.zeros((S,)), "qs": jnp.zeros((S,)),
-             "qu": jnp.zeros((U,)), "T": jnp.asarray(float(T))}
+               enable_cot: bool = True,
+               use_kernel: bool = True) -> RoundOutputs:
+    """Algorithm 2: scan slots, return success mask + diagnostics.
+
+    Accepts single-cell or batched rounds; outputs match the input layout.
+    """
+    batched = rnd.batched
+    rb = rnd.with_batch_axis()
+    B, T, S = rb.g_sr.shape
+    U = rb.g_or.shape[-1]
+    state = {"zeta": jnp.zeros((B, S)), "qs": jnp.zeros((B, S)),
+             "qu": jnp.zeros((B, U)), "T": jnp.asarray(float(T))}
 
     def body(st, t):
-        st, info = solve_slot(t, st, rnd, prm, ch, enable_cot=enable_cot)
+        st, info = solve_slot(t, st, rb, prm, ch, enable_cot=enable_cot,
+                              use_kernel=use_kernel)
         return st, info
 
     state, infos = jax.lax.scan(body, state, jnp.arange(T))
     success = state["zeta"] >= prm.Q
-    return {
-        "success": success,
-        "n_success": success.sum(),
-        "zeta": state["zeta"],
-        "energy_sov": infos["e_sov"].sum(0) + rnd.e_cp,
-        "energy_opv": infos["e_opv"].sum(0),
-        "n_cot_slots": infos["use_cot"].sum(),
-        "n_dt_slots": infos["use_dt"].sum(),
-    }
+    if rb.valid_sov is not None:
+        success &= rb.valid_sov
+    out = RoundOutputs(
+        success=success,
+        n_success=success.sum(-1),
+        zeta=state["zeta"],
+        energy_sov=infos["e_sov"].sum(0) + rb.e_cp,
+        energy_opv=infos["e_opv"].sum(0),
+        n_cot_slots=infos["use_cot"].sum(0),
+        n_dt_slots=infos["use_dt"].sum(0),
+    )
+    if not batched:
+        out = jax.tree.map(lambda x: x[0], out)
+    return out

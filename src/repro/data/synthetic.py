@@ -1,4 +1,4 @@
-"""Deterministic synthetic data generators (offline substitutes; DESIGN.md §6).
+"""Deterministic synthetic data generators (offline substitutes; DESIGN.md §8).
 
 * CIFAR-like: 10-class 32x32x3 images = class prototype mixed into random
   structure + noise, so a small CNN genuinely learns (acc well above chance),

@@ -4,7 +4,13 @@
 (vehicles currently in coverage), U others relay as OPVs. One local SGD step
 per round (eq. 2), success decided by the chosen scheduler, aggregation by
 (11). For one local step, FedAvg of models == FedSGD of gradients, which is
-how we batch clients efficiently (vmap over per-client grads).
+how we batch clients: one vmapped gradient call over the stacked per-client
+minibatches per round.
+
+With `round_batch = B > 1`, scenario generation and scheduling run for B
+independent rounds per dispatch (`make_round_batch` + one batched
+`solve_round`), amortizing XLA dispatch across the whole block; the model
+update then consumes the B success masks round by round.
 """
 from __future__ import annotations
 
@@ -17,9 +23,10 @@ import numpy as np
 
 from repro.channel.mobility import ManhattanParams
 from repro.channel.v2x import ChannelParams
-from repro.core.baselines import SCHEDULERS
+from repro.core.baselines import get_scheduler
 from repro.core.lyapunov import VedsParams
-from repro.core.scenario import ScenarioParams, make_round
+from repro.core.scenario import (ScenarioParams, make_round,
+                                 make_round_batch)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +36,7 @@ class FLSimConfig:
     n_opv: int = 10
     n_slots: int = 60
     rounds: int = 50
+    round_batch: int = 1         # rounds scheduled per XLA dispatch (B)
     batch_size: int = 32
     lr: float = 0.05
     scheduler: str = "veds"
@@ -52,11 +60,17 @@ def run_fl(key: jax.Array, params, loss_fn: Callable,
     prm = VedsParams(alpha=sim.alpha, V=sim.V, Q=sim.q_bits, slot=0.1)
     sc = ScenarioParams(n_sov=sim.n_sov, n_opv=sim.n_opv,
                         n_slots=sim.n_slots, batch_size=sim.batch_size)
-    sched = SCHEDULERS[sim.scheduler]
+    sched = get_scheduler(sim.scheduler)
+    B = max(1, sim.round_batch)
 
-    mk_round = jax.jit(lambda k: make_round(k, sc, mob, ch, prm))
-    run_sched = jax.jit(lambda r: sched(r, prm, ch))
-    grad_fn = jax.jit(jax.grad(loss_fn))
+    if B == 1:
+        mk_round = jax.jit(lambda k: make_round(k, sc, mob, ch, prm))
+    else:
+        mk_round = jax.jit(lambda k: make_round_batch(
+            k, sc, mob, ch, prm, B, hetero_fleet=False))
+    run_sched = jax.jit(lambda r: sched.solve_round(r, prm, ch))
+    # all S per-client gradients in one vmapped call (FedSGD batching)
+    vgrad_fn = jax.jit(jax.vmap(jax.grad(loss_fn), in_axes=(None, 0)))
 
     @jax.jit
     def apply_update(params, grads_stack, mask, weights):
@@ -74,33 +88,37 @@ def run_fl(key: jax.Array, params, loss_fn: Callable,
     rng = np.random.default_rng(sim.seed)
     history = {"round": [], "time": [], "n_success": [], "metric": []}
     sim_time = 0.0
-    for r in range(sim.rounds):
-        k_r = jax.random.fold_in(key, r)
-        rnd = mk_round(k_r)
-        out = run_sched(rnd)
-        mask = jnp.asarray(out["success"], jnp.float32)
+    for r0 in range(0, sim.rounds, B):
+        n_block = min(B, sim.rounds - r0)
+        k_r = jax.random.fold_in(key, r0)
+        out = run_sched(mk_round(k_r))
+        for j in range(n_block):
+            r = r0 + j
+            cell = out.cell(j) if B > 1 else out
+            mask = jnp.asarray(cell.success, jnp.float32)
 
-        sel = rng.choice(sim.n_clients, size=sim.n_sov, replace=False)
-        grads = []
-        weights = []
-        for ci in sel:
-            data = client_data[ci]
-            n = data["x"].shape[0] if "x" in data else \
-                next(iter(data.values())).shape[0]
-            idx = rng.choice(n, size=min(sim.batch_size, n), replace=False)
-            mb = {k: v[idx] for k, v in data.items()}
-            grads.append(grad_fn(params, mb))
-            weights.append(float(n))
-        grads_stack = jax.tree.map(lambda *g: jnp.stack(g), *grads)
-        params = apply_update(params, grads_stack, mask,
-                              jnp.asarray(weights, jnp.float32))
+            sel = rng.choice(sim.n_clients, size=sim.n_sov, replace=False)
+            mbs = []
+            weights = []
+            for ci in sel:
+                data = client_data[ci]
+                n = data["x"].shape[0] if "x" in data else \
+                    next(iter(data.values())).shape[0]
+                idx = rng.choice(n, size=sim.batch_size,
+                                 replace=n < sim.batch_size)
+                mbs.append({k: v[idx] for k, v in data.items()})
+                weights.append(float(n))
+            mb_stack = jax.tree.map(lambda *x: jnp.stack(x), *mbs)
+            grads_stack = vgrad_fn(params, mb_stack)
+            params = apply_update(params, grads_stack, mask,
+                                  jnp.asarray(weights, jnp.float32))
 
-        sim_time += sim.n_slots * prm.slot
-        if eval_fn is not None and (r % eval_every == 0 or
-                                    r == sim.rounds - 1):
-            m = float(eval_fn(params))
-            history["round"].append(r)
-            history["time"].append(sim_time)
-            history["n_success"].append(int(out["n_success"]))
-            history["metric"].append(m)
+            sim_time += sim.n_slots * prm.slot
+            if eval_fn is not None and (r % eval_every == 0 or
+                                        r == sim.rounds - 1):
+                m = float(eval_fn(params))
+                history["round"].append(r)
+                history["time"].append(sim_time)
+                history["n_success"].append(int(cell.n_success))
+                history["metric"].append(m)
     return history

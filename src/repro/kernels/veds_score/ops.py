@@ -1,4 +1,9 @@
-"""Jit'd wrapper for the DT scoring kernel."""
+"""Jit'd wrapper for the DT scoring kernel.
+
+Accepts candidate grids of any shape — the scheduler's batched [B, S]
+grid included — by flattening into the kernel's tiled 1-D candidate
+layout and restoring the shape on the way out.
+"""
 from __future__ import annotations
 
 import functools
@@ -20,6 +25,9 @@ def veds_dt_score_tpu(g, q, w, e, *, V, kappa, bw, noise, p_max,
     if force_ref:
         return veds_dt_score_ref(g, q, w, e, V=V, kappa=kappa, bw=bw,
                                  noise=noise, p_max=p_max)
-    return veds_dt_score_pallas(g, q, w, e, V=V, kappa=kappa, bw=bw,
+    shape = g.shape
+    flat = [x.reshape(-1) for x in (g, q, w, e)]
+    outs = veds_dt_score_pallas(*flat, V=V, kappa=kappa, bw=bw,
                                 noise=noise, p_max=p_max, block_c=block_c,
                                 interpret=not _on_tpu())
+    return tuple(o.reshape(shape) for o in outs)

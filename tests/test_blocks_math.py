@@ -3,7 +3,11 @@ vs naive recurrences, rope isometry, MoE capacity accounting."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra; pip install -r "
+                    "requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.registry import get_smoke_config
 from repro.models import layers as L

@@ -9,6 +9,11 @@ import textwrap
 
 import pytest
 
+from conftest import requires_mesh_api
+
+# subprocess device farms + full compiles; needs the new mesh APIs
+pytestmark = [pytest.mark.slow, requires_mesh_api]
+
 
 def _run(src: str, timeout: int = 1200) -> str:
     env = dict(os.environ)

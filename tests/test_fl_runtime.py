@@ -8,6 +8,9 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+from conftest import requires_mesh_api
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.data.synthetic import lm_batch, partition_labels
@@ -111,6 +114,8 @@ _DISTRIBUTED = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
+@requires_mesh_api
 def test_vfl_round_distributed_subprocess():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

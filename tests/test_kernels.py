@@ -84,3 +84,40 @@ def test_veds_score(c, block):
     for a, b in zip(outs_k, outs_r):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("b,s,block", [(1, 8, 8), (4, 8, 16), (16, 24, 128),
+                                       (7, 13, 64)])
+def test_veds_score_matches_dt_candidates(b, s, block):
+    """Kernel (interpret) vs the scheduler's jnp reference math on batched
+    [B, S] candidate grids, incl. the eligible/g_sr==0 masking edges."""
+    from repro.channel.v2x import ChannelParams
+    from repro.core.lyapunov import VedsParams
+    from repro.core.veds import _dt_candidates, NEG
+
+    ch = ChannelParams()
+    prm = VedsParams(alpha=2.0, V=0.2, Q=1e7, slot=0.1)
+    g = jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 20),
+                                  (b, s))) * 1e-11
+    # masking edge cases: dead links and an all-ineligible cell
+    g = g * (jax.random.uniform(jax.random.fold_in(KEY, 21), (b, s)) > 0.25)
+    q = jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 22), (b, s))) * 0.1
+    zeta = jax.random.uniform(jax.random.fold_in(KEY, 23), (b, s),
+                              maxval=prm.Q)
+    from repro.core.lyapunov import sigmoid_weight
+    w = sigmoid_weight(zeta, prm)
+    e = jax.random.bernoulli(jax.random.fold_in(KEY, 24), 0.7, (b, s))
+    e = e.at[0].set(False)
+
+    ref = _dt_candidates(w, q, g, e, prm, ch, use_kernel=False)
+    kern = jax.jit(lambda *a: _dt_candidates(
+        *a, prm, ch, use_kernel=True))(w, q, g, e)
+    for a_, b_ in zip(kern, ref):
+        assert a_.shape == (b, s)
+        np.testing.assert_allclose(np.asarray(a_), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-6)
+    # ineligible / dead-link candidates are pinned to NEG with zero p/z
+    dead = ~(np.asarray(e) & (np.asarray(g) > 0))
+    assert (np.asarray(kern[0])[dead] == NEG).all()
+    assert not np.asarray(kern[1])[dead].any()
+    assert not np.asarray(kern[2])[dead].any()

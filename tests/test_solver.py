@@ -4,8 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from scipy.optimize import minimize
+
+pytest.importorskip("hypothesis", reason="dev extra; pip install -r "
+                    "requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+from scipy.optimize import minimize  # noqa: E402
 
 from repro.core.solver import dt_power_opt, solve_p4
 

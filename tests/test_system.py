@@ -22,37 +22,44 @@ from repro.data.synthetic import make_trajectory_batch
 @pytest.fixture(scope="module")
 def cifar_setup():
     key = jax.random.key(0)
-    x, y = cifar_like_dataset(jax.random.fold_in(key, 1), 1500, noise=0.8)
+    x, y = cifar_like_dataset(jax.random.fold_in(key, 1), 1200, noise=0.8)
     xt, yt = cifar_like_dataset(jax.random.fold_in(key, 2), 256, noise=0.8)
-    parts = partition_labels(np.asarray(y), 40, iid=True)
+    parts = partition_labels(np.asarray(y), 30, iid=True)
     data = [{"x": x[i], "y": y[i]} for i in parts]
     return key, data, xt, yt
 
 
-def _train(key, data, xt, yt, scheduler, rounds=20):
+def _train(key, data, xt, yt, scheduler, rounds=20, round_batch=4):
     params = materialize(jax.random.fold_in(key, 3), cnn_decl())
-    sim = FLSimConfig(rounds=rounds, scheduler=scheduler, n_slots=40,
-                      n_sov=8, n_opv=8)
+    sim = FLSimConfig(n_clients=30, rounds=rounds, scheduler=scheduler,
+                      n_slots=30, n_sov=6, n_opv=6,
+                      round_batch=round_batch)
     eval_fn = jax.jit(lambda p: cnn_accuracy(p, {"x": xt, "y": yt}))
     return run_fl(jax.random.fold_in(key, 4), params,
                   lambda p, b: cnn_loss(p, b), data, sim,
                   eval_fn=eval_fn, eval_every=4)
 
 
-def test_fl_learns_with_veds(cifar_setup):
+@pytest.fixture(scope="module")
+def veds_history(cifar_setup):
     key, data, xt, yt = cifar_setup
-    hist = _train(key, data, xt, yt, "veds")
-    assert hist["metric"][-1] > 0.3  # well above 0.1 chance
-    assert sum(hist["n_success"]) > 0
+    return _train(key, data, xt, yt, "veds")
 
 
-def test_veds_at_least_as_many_uploads_as_v2i(cifar_setup):
+@pytest.mark.slow
+def test_fl_learns_with_veds(veds_history):
+    assert veds_history["metric"][-1] > 0.3  # well above 0.1 chance
+    assert sum(veds_history["n_success"]) > 0
+
+
+@pytest.mark.slow
+def test_veds_at_least_as_many_uploads_as_v2i(cifar_setup, veds_history):
     key, data, xt, yt = cifar_setup
-    h_veds = _train(key, data, xt, yt, "veds")
     h_v2i = _train(key, data, xt, yt, "v2i_only")
-    assert sum(h_veds["n_success"]) >= sum(h_v2i["n_success"])
+    assert sum(veds_history["n_success"]) >= sum(h_v2i["n_success"])
 
 
+@pytest.mark.slow
 def test_lanegcn_learns():
     key = jax.random.key(1)
     train = make_trajectory_batch(jax.random.fold_in(key, 1), 256)
