@@ -7,6 +7,11 @@ Python loop over the jitted B=1 scheduler. The DT scheduling hot path
 grid per slot) and MADCA are dispatch-bound at B=1, so batching them wins
 an order of magnitude; full VEDS with COT is dominated by the per-candidate
 interior-point solves and is reported for context.
+
+`stream_sweep` carries the streaming story (DESIGN.md §9): a whole
+R-round training run's scheduling as ONE `lax.scan` program
+(`stream_rounds`, fresh-fleet mode) against the blocked `round_batch=1`
+path — R Python-loop dispatches of scenario generation + scheduling.
 """
 from __future__ import annotations
 
@@ -18,6 +23,7 @@ from repro.channel.v2x import ChannelParams
 from repro.core.baselines import get_scheduler
 from repro.core.lyapunov import VedsParams
 from repro.core.scenario import ScenarioParams, make_round, make_round_batch
+from repro.core.streaming import StreamConfig, stream_rounds
 
 
 def run(rounds: int = 6, speeds=(0.0, 5.0, 10.0, 15.0, 20.0, 25.0)):
@@ -44,21 +50,52 @@ def b_sweep(Bs=(1, 8, 64), schedulers=("v2i_only", "madca"), *,
     mob, ch = ManhattanParams(), ChannelParams()
     prm = VedsParams(alpha=2.0, V=0.2, Q=1e7, slot=0.1)
     sc = ScenarioParams(n_sov=n_sov, n_opv=n_opv, n_slots=n_slots)
+    # scenario generation is scheduler-independent: build the rounds once
+    mk1 = jax.jit(lambda k: make_round(k, sc, mob, ch, prm))
+    rnds_all = [mk1(jax.random.key(i)) for i in range(max(Bs))]
+    rb_by_B = {B: jax.jit(lambda k, B=B: make_round_batch(
+        k, sc, mob, ch, prm, B, hetero_fleet=False))(jax.random.key(0))
+        for B in Bs}
     rows = []
     for name in schedulers:
         sched = get_scheduler(name)
         run_sched = jax.jit(lambda r, s=sched: s.solve_round(r, prm, ch))
-        mk1 = jax.jit(lambda k: make_round(k, sc, mob, ch, prm))
         for B in Bs:
-            rnds = [mk1(jax.random.key(i)) for i in range(B)]
+            rnds = rnds_all[:B]
             t_loop = 1e-6 * time_call(
                 lambda: [run_sched(r) for r in rnds])
-            rb = jax.jit(lambda k, B=B: make_round_batch(
-                k, sc, mob, ch, prm, B, hetero_fleet=False))(
-                    jax.random.key(0))
-            t_batch = 1e-6 * time_call(run_sched, rb)
+            t_batch = 1e-6 * time_call(run_sched, rb_by_B[B])
             rows.append((name, B, B / t_loop, B / t_batch,
                          t_loop / t_batch))
+    return rows
+
+
+def stream_sweep(R: int = 50, schedulers=("v2i_only", "madca"), *,
+                 n_sov: int = 8, n_opv: int = 8, n_slots: int = 40):
+    """Streaming one-dispatch R-round rollout vs the blocked round_batch=1
+    loop (R dispatches of scenario gen + scheduling, the seed's run_fl
+    path). Returns rows (scheduler, R, blocked_rps, stream_rps, speedup).
+    """
+    mob, ch = ManhattanParams(), ChannelParams()
+    prm = VedsParams(alpha=2.0, V=0.2, Q=1e7, slot=0.1)
+    sc = ScenarioParams(n_sov=n_sov, n_opv=n_opv, n_slots=n_slots)
+    key = jax.random.key(0)
+    # scheduler-independent per-round generator, compiled once
+    mk1 = jax.jit(lambda k: make_round_batch(
+        k, sc, mob, ch, prm, 1, hetero_fleet=False))
+    rows = []
+    for name in schedulers:
+        sched = get_scheduler(name)
+        run1 = jax.jit(lambda r, s=sched: s.solve_round(r, prm, ch))
+        cfg = StreamConfig(n_rounds=R, batch=1, fresh_fleet=True)
+        run_s = jax.jit(lambda k, s=sched, c=cfg: stream_rounds(
+            k, s, sc, mob, ch, prm, c))
+        t_blocked = 1e-6 * time_call(
+            lambda: [run1(mk1(jax.random.fold_in(key, r)))
+                     for r in range(R)])
+        t_stream = 1e-6 * time_call(run_s, key)
+        rows.append((name, R, R / t_blocked, R / t_stream,
+                     t_blocked / t_stream))
     return rows
 
 
@@ -69,14 +106,19 @@ def main(csv=True):
     frac = veds5 / max(opt5, 1e-9)
     brows = b_sweep()
     b64 = max(r[4] for r in brows if r[1] == max(b[1] for b in brows))
+    srows = stream_sweep()
+    s50 = max(r[4] for r in srows)
     if csv:
         print(f"fig4_speed,{us:.0f},veds_frac_of_optimal_v5={frac:.3f},"
-              f"b64_speedup={b64:.1f}")
+              f"b64_speedup={b64:.1f},stream_r50_speedup={s50:.1f}")
     for v, name, s in rows:
         print(f"#  v={v:5.1f}  {name:10s} n_success={s:.2f}")
     for name, B, rps_loop, rps_batch, speedup in brows:
         print(f"#  B={B:3d}  {name:10s} loop={rps_loop:8.1f} rounds/s  "
               f"batched={rps_batch:9.1f} rounds/s  speedup={speedup:5.1f}x")
+    for name, R, rps_blocked, rps_stream, speedup in srows:
+        print(f"#  R={R:3d}  {name:10s} blocked={rps_blocked:7.1f} rounds/s"
+              f"  stream={rps_stream:9.1f} rounds/s  speedup={speedup:5.1f}x")
     return frac
 
 

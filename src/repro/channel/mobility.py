@@ -105,3 +105,22 @@ def rollout_positions(key: jax.Array, state, prm: ManhattanParams,
     keys = jax.random.split(key, n_steps)
     state, traj = jax.lax.scan(body, state, keys)
     return state, traj
+
+
+def rollout_segments(key: jax.Array, state, prm: ManhattanParams,
+                     n_segments: int, n_steps: int, dt: float):
+    """Resumable multi-segment rollout: `n_segments` back-to-back blocks of
+    `n_steps` slots each, as one nested scan.
+
+    Returns (final state, traj [n_segments, n_steps, N, 2]). The final
+    state is exactly what another `rollout_positions`/`rollout_segments`
+    call would continue from — vehicles keep driving across segment (i.e.
+    FL round) boundaries instead of being re-initialized, which is what
+    makes the streaming engine's trajectories time-correlated.
+    """
+    def seg(carry, k):
+        st, traj = rollout_positions(k, carry, prm, n_steps, dt)
+        return st, traj
+    keys = jax.random.split(key, n_segments)
+    state, traj = jax.lax.scan(seg, state, keys)
+    return state, traj

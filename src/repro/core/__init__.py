@@ -6,8 +6,11 @@ drift-plus-penalty machinery, convex solvers (Prop. 1 closed form +
 interior-point P4), and the single-cell/batched scenario builders.
 """
 from repro.core.lyapunov import VedsParams, sigmoid_shifted, sigmoid_weight  # noqa: F401
-from repro.core.scheduler import RoundOutputs, Scheduler  # noqa: F401
+from repro.core.scheduler import RoundOutputs, Scheduler, SchedulerCarry  # noqa: F401
 from repro.core.veds import RoundInputs, veds_round, solve_slot  # noqa: F401
 from repro.core.baselines import SCHEDULERS, get_scheduler  # noqa: F401
-from repro.core.scenario import (ScenarioParams, make_round,  # noqa: F401
-                                 make_round_batch)
+from repro.core.scenario import (FleetState, ScenarioParams,  # noqa: F401
+                                 fleet_round, init_fleet, make_round,
+                                 make_round_batch, rollout_rounds)
+from repro.core.streaming import (StreamConfig, StreamResult,  # noqa: F401
+                                  stream_rounds)

@@ -14,23 +14,27 @@ Every scheduler implements the `Scheduler` protocol: `solve_round` takes
 `RoundInputs` with or without a leading `[B]` cell axis and returns a
 `RoundOutputs` of matching batchedness. The whole batch is one XLA program
 — no Python loop over cells.
+
+All four benchmarks also honor the optional `SchedulerCarry`: although
+only VEDS *decides* with the virtual queues, every scheduler *accounts*
+its energy through eqs. (19)-(20), so a streaming rollout can compare
+cumulative budget violation across schedulers on equal footing. With
+`carry=None` the queues start at zero and the scheduling decisions are
+bit-for-bit the seed's.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.channel.v2x import ChannelParams
 from repro.core import lyapunov as lyp
-from repro.core.scheduler import RoundOutputs, Scheduler
+from repro.core.scheduler import (RoundOutputs, Scheduler, SchedulerCarry,
+                                  init_queues, unbatch as _unbatch)
 from repro.core.veds import RoundInputs, veds_round
-
-
-def _unbatch(out: RoundOutputs, batched: bool) -> RoundOutputs:
-    return out if batched else jax.tree.map(lambda x: x[0], out)
 
 
 def _valid_sov(rb: RoundInputs) -> jax.Array:
@@ -39,24 +43,29 @@ def _valid_sov(rb: RoundInputs) -> jax.Array:
     return jnp.ones(rb.g_sr.shape[::2], bool)               # [B,S]
 
 
-def optimal_round(rnd: RoundInputs, prm: lyp.VedsParams,
-                  ch: ChannelParams) -> RoundOutputs:
+def optimal_round(rnd: RoundInputs, prm: lyp.VedsParams, ch: ChannelParams,
+                  carry: Optional[SchedulerCarry] = None) -> RoundOutputs:
     batched = rnd.batched
     rb = rnd.with_batch_axis()
     B = rb.g_sr.shape[0]
     success = _valid_sov(rb)                                # all real SOVs
+    qs0, qu0 = init_queues(rb, carry)
+    # communication is free in the upper bound: T slots of (19)/(20) with
+    # e_cm = 0 collapse to the closed-form relaxation
     out = RoundOutputs(
         success=success, n_success=success.sum(-1),
         zeta=jnp.where(success, prm.Q, 0.0),
         energy_sov=rb.e_cp, energy_opv=jnp.zeros(rb.e_opv.shape),
         n_cot_slots=jnp.zeros((B,), jnp.int32),
-        n_dt_slots=jnp.zeros((B,), jnp.int32))
+        n_dt_slots=jnp.zeros((B,), jnp.int32),
+        carry=SchedulerCarry(qs=lyp.relax_queue(qs0, rb.e_sov - rb.e_cp),
+                             qu=lyp.relax_queue(qu0, rb.e_opv)))
     return _unbatch(out, batched)
 
 
-def v2i_only_round(rnd: RoundInputs, prm: lyp.VedsParams,
-                   ch: ChannelParams) -> RoundOutputs:
-    return veds_round(rnd, prm, ch, enable_cot=False)
+def v2i_only_round(rnd: RoundInputs, prm: lyp.VedsParams, ch: ChannelParams,
+                   carry: Optional[SchedulerCarry] = None) -> RoundOutputs:
+    return veds_round(rnd, prm, ch, enable_cot=False, carry=carry)
 
 
 def _take_m(x: jax.Array, m: jax.Array) -> jax.Array:
@@ -64,16 +73,17 @@ def _take_m(x: jax.Array, m: jax.Array) -> jax.Array:
     return jnp.take_along_axis(x, m[:, None], axis=-1)[:, 0]
 
 
-def madca_round(rnd: RoundInputs, prm: lyp.VedsParams,
-                ch: ChannelParams) -> RoundOutputs:
+def madca_round(rnd: RoundInputs, prm: lyp.VedsParams, ch: ChannelParams,
+                carry: Optional[SchedulerCarry] = None) -> RoundOutputs:
     batched = rnd.batched
     rb = rnd.with_batch_axis()
     B, T, S = rb.g_sr.shape
     valid = _valid_sov(rb)
     rows = jnp.arange(B)
+    qs0, qu0 = init_queues(rb, carry)
 
     def body(st, t):
-        zeta, e_left = st                                   # [B,S]
+        zeta, e_left, qs = st                               # [B,S]
         g = rb.g_sr[:, t]
         eligible = (rb.t_cp <= t.astype(jnp.float32) * prm.slot) \
             & (zeta < prm.Q) & (g > 0) & (e_left > 0) & valid
@@ -87,24 +97,30 @@ def madca_round(rnd: RoundInputs, prm: lyp.VedsParams,
             1.0 + p * _take_m(g, m) / ch.noise_power)
         z = prm.slot * rate
         zeta = zeta.at[rows, m].add(jnp.where(any_e, z, 0.0))
-        e_left = e_left.at[rows, m].add(-jnp.where(any_e, prm.slot * p, 0.0))
-        return (zeta, e_left), prm.slot * p * any_e
+        e_cm_vec = jnp.zeros((B, S)).at[rows, m].add(
+            jnp.where(any_e, prm.slot * p, 0.0))
+        e_left = e_left - e_cm_vec
+        qs = lyp.update_queue_sov(qs, e_cm_vec, rb.e_sov, rb.e_cp,
+                                  jnp.asarray(float(T)))
+        return (zeta, e_left, qs), e_cm_vec.sum(-1)
 
     zeta0 = jnp.zeros((B, S))
     e0 = jnp.maximum(rb.e_sov - rb.e_cp, 0.0)
-    (zeta, e_left), e_cm = jax.lax.scan(body, (zeta0, e0), jnp.arange(T))
+    (zeta, e_left, qs), e_cm = jax.lax.scan(
+        body, (zeta0, e0, qs0), jnp.arange(T))
     success = (zeta >= prm.Q) & valid
     out = RoundOutputs(
         success=success, n_success=success.sum(-1), zeta=zeta,
         energy_sov=(e0 - e_left) + rb.e_cp,
         energy_opv=jnp.zeros(rb.e_opv.shape),
         n_cot_slots=jnp.zeros((B,), jnp.int32),
-        n_dt_slots=(e_cm > 0).sum(0))
+        n_dt_slots=(e_cm > 0).sum(0),
+        carry=SchedulerCarry(qs=qs, qu=lyp.relax_queue(qu0, rb.e_opv)))
     return _unbatch(out, batched)
 
 
-def sa_round(rnd: RoundInputs, prm: lyp.VedsParams,
-             ch: ChannelParams) -> RoundOutputs:
+def sa_round(rnd: RoundInputs, prm: lyp.VedsParams, ch: ChannelParams,
+             carry: Optional[SchedulerCarry] = None) -> RoundOutputs:
     batched = rnd.batched
     rb = rnd.with_batch_axis()
     B, T, S = rb.g_sr.shape
@@ -114,9 +130,10 @@ def sa_round(rnd: RoundInputs, prm: lyp.VedsParams,
     order = jnp.argsort(jnp.where(valid, -rb.g_sr[:, 0], jnp.inf), axis=-1)
     n_real = jnp.maximum(valid.sum(-1), 1)                  # [B]
     rows = jnp.arange(B)
+    qs0, qu0 = init_queues(rb, carry)
 
     def body(st, t):
-        zeta, e_vec = st                                    # [B,S]
+        zeta, e_vec, qs = st                                # [B,S]
         m = jnp.take_along_axis(order, (t % n_real)[:, None],
                                 axis=-1)[:, 0]              # [B]
         g = _take_m(rb.g_sr[:, t], m)
@@ -126,11 +143,15 @@ def sa_round(rnd: RoundInputs, prm: lyp.VedsParams,
         z = jnp.where(ok, prm.slot * rate, 0.0)
         zeta = zeta.at[rows, m].add(z)
         # attribute transmit energy to the vehicle actually scheduled
-        e_vec = e_vec.at[rows, m].add(prm.slot * ch.p_max * ok)
-        return (zeta, e_vec), ok
+        e_cm_vec = jnp.zeros((B, S)).at[rows, m].add(
+            prm.slot * ch.p_max * ok)
+        e_vec = e_vec + e_cm_vec
+        qs = lyp.update_queue_sov(qs, e_cm_vec, rb.e_sov, rb.e_cp,
+                                  jnp.asarray(float(T)))
+        return (zeta, e_vec, qs), ok
 
-    (zeta, e_vec), oks = jax.lax.scan(
-        body, (jnp.zeros((B, S)), jnp.zeros((B, S))), jnp.arange(T))
+    (zeta, e_vec, qs), oks = jax.lax.scan(
+        body, (jnp.zeros((B, S)), jnp.zeros((B, S)), qs0), jnp.arange(T))
     success = (zeta >= prm.Q) & valid
     # energy: max power whenever scheduled (may violate budgets; that is the
     # point of the comparison in Fig. 9), per-SOV attribution
@@ -139,7 +160,8 @@ def sa_round(rnd: RoundInputs, prm: lyp.VedsParams,
         energy_sov=rb.e_cp + e_vec,
         energy_opv=jnp.zeros(rb.e_opv.shape),
         n_cot_slots=jnp.zeros((B,), jnp.int32),
-        n_dt_slots=oks.sum(0))
+        n_dt_slots=oks.sum(0),
+        carry=SchedulerCarry(qs=qs, qu=lyp.relax_queue(qu0, rb.e_opv)))
     return _unbatch(out, batched)
 
 
@@ -151,12 +173,13 @@ class VedsScheduler:
     use_kernel: bool = True
 
     def solve_round(self, rnd: RoundInputs, prm: lyp.VedsParams,
-                    ch: ChannelParams) -> RoundOutputs:
+                    ch: ChannelParams,
+                    carry: Optional[SchedulerCarry] = None) -> RoundOutputs:
         return veds_round(rnd, prm, ch, enable_cot=self.enable_cot,
-                          use_kernel=self.use_kernel)
+                          use_kernel=self.use_kernel, carry=carry)
 
-    def __call__(self, rnd, prm, ch) -> RoundOutputs:
-        return self.solve_round(rnd, prm, ch)
+    def __call__(self, rnd, prm, ch, carry=None) -> RoundOutputs:
+        return self.solve_round(rnd, prm, ch, carry)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,11 +189,12 @@ class FnScheduler:
     fn: Callable = dataclasses.field(hash=False, compare=False)
 
     def solve_round(self, rnd: RoundInputs, prm: lyp.VedsParams,
-                    ch: ChannelParams) -> RoundOutputs:
-        return self.fn(rnd, prm, ch)
+                    ch: ChannelParams,
+                    carry: Optional[SchedulerCarry] = None) -> RoundOutputs:
+        return self.fn(rnd, prm, ch, carry)
 
-    def __call__(self, rnd, prm, ch) -> RoundOutputs:
-        return self.solve_round(rnd, prm, ch)
+    def __call__(self, rnd, prm, ch, carry=None) -> RoundOutputs:
+        return self.solve_round(rnd, prm, ch, carry)
 
 
 SCHEDULERS: Dict[str, Scheduler] = {

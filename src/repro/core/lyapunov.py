@@ -56,3 +56,14 @@ def update_queue_opv(q: jax.Array, e_cm: jax.Array, e_cons: jax.Array,
 def update_zeta(zeta: jax.Array, z: jax.Array, prm: VedsParams) -> jax.Array:
     """Eq. (17): delivered bits, saturated at Q."""
     return jnp.minimum(zeta + z, prm.Q)
+
+
+def relax_queue(q: jax.Array, e_net: jax.Array) -> jax.Array:
+    """T zero-transmission steps of (19)/(20) in closed form.
+
+    With e_cm = 0 every slot, iterating q <- max(q - e_net / T, 0) for T
+    slots collapses to max(q - e_net, 0) when e_net >= 0 (monotone descent,
+    single clip) and to q - e_net when e_net < 0 (monotone ascent, the max
+    never binds). Both cases are `maximum(q - e_net, 0)` since q >= 0.
+    """
+    return jnp.maximum(q - e_net, 0.0)

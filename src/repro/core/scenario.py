@@ -7,12 +7,20 @@ are SOVs (they hold data and train) and the next U are OPVs (relays).
 `make_round` builds one cell ([T, ...] layout); `make_round_batch` rolls
 out B cells with independent RSU placements, heterogeneous fleet sizes via
 padding + validity masks, and per-cell energy/clock draws — the batched
-[B, T, ...] layout every scheduler consumes in one XLA program.
+[B, T, ...] layout every scheduler consumes in one XLA program. Both draw
+an *independent* fleet per call.
+
+The streaming engine instead threads a persistent `FleetState`
+round-to-round: `init_fleet` seeds a pool of vehicles per cell,
+`fleet_round` drives them for one round's worth of slots and re-selects
+SOVs/OPVs from the vehicles in coverage (padding + `valid_*` masks when
+fewer than S/U qualify), and `rollout_rounds` scans that into an
+`[R, B, T, ...]` block of time-correlated rounds. See DESIGN.md §9.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -130,3 +138,159 @@ def make_round_batch(key: jax.Array, sc: ScenarioParams,
         e_sov=fields["e_sov"] * valid_sov,
         e_opv=fields["e_opv"] * valid_opv,
         valid_sov=valid_sov, valid_opv=valid_opv)
+
+
+# ---------------------------------------------------------------------------
+# Persistent fleets for the streaming multi-round engine (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FleetState:
+    """Per-cell vehicle pool threaded round-to-round by the streaming
+    engine. N is the pool size (>= S + U); all fields are batched [B, ...].
+
+      pos [B,N,2], dir [B,N], speed [B,N]  mobility state (resumable)
+      jitter [B,N]     persistent clock-speed heterogeneity (0.8..1.2)
+      allowance [B,N]  per-round energy budget draw [J] (e_min..e_max)
+      energy [B,N]     residual battery [J]; +inf when not tracked
+      queue [B,N]      per-vehicle virtual energy queue (eqs. 19-20),
+                       gathered into the scheduler carry for whichever
+                       role the vehicle plays this round
+      rsu_xy [B,2]     static RSU placement per cell
+    """
+    pos: jax.Array
+    dir: jax.Array
+    speed: jax.Array
+    jitter: jax.Array
+    allowance: jax.Array
+    energy: jax.Array
+    queue: jax.Array
+    rsu_xy: jax.Array
+
+    @property
+    def batch_size(self) -> int:
+        return self.pos.shape[0]
+
+    @property
+    def n_vehicles(self) -> int:
+        return self.pos.shape[1]
+
+
+class FleetSelection(NamedTuple):
+    """Round role assignment: fleet indices of this round's SOVs/OPVs."""
+    sov_idx: jax.Array   # [B, S]
+    opv_idx: jax.Array   # [B, U]
+
+
+def init_fleet(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
+               batch: int, *, n_fleet: Optional[int] = None,
+               rsu_xy: Optional[jax.Array] = None,
+               energy_horizon: Optional[float] = None) -> FleetState:
+    """Seed B persistent vehicle pools of `n_fleet` vehicles each.
+
+    `energy_horizon = H` gives every vehicle a battery of H rounds' worth
+    of its per-round allowance; None disables battery tracking (+inf).
+    RSU placements are drawn like `make_round_batch`'s unless given.
+    """
+    B = int(batch)
+    N = int(n_fleet) if n_fleet is not None else 2 * (sc.n_sov + sc.n_opv)
+    if N < sc.n_sov + sc.n_opv:
+        raise ValueError(f"n_fleet={N} < S + U = {sc.n_sov + sc.n_opv}")
+    k_cell, k_rsu, k_j, k_a = jax.random.split(key, 4)
+    if rsu_xy is None:
+        rsu = jax.random.uniform(k_rsu, (B, 2), minval=0.25 * mob.extent,
+                                 maxval=0.75 * mob.extent)
+    else:
+        rsu = jnp.broadcast_to(jnp.asarray(rsu_xy, jnp.float32), (B, 2))
+    st = jax.vmap(lambda k, r: init_mobility(k, N, mob, rsu_xy=r))(
+        jax.random.split(k_cell, B), rsu)
+    jitter = jax.random.uniform(k_j, (B, N), minval=0.8, maxval=1.2)
+    allowance = jax.random.uniform(k_a, (B, N), minval=sc.e_min,
+                                   maxval=sc.e_max)
+    energy = (jnp.full((B, N), jnp.inf) if energy_horizon is None
+              else allowance * float(energy_horizon))
+    return FleetState(pos=st["pos"], dir=st["dir"], speed=st["speed"],
+                      jitter=jitter, allowance=allowance, energy=energy,
+                      queue=jnp.zeros((B, N)), rsu_xy=rsu)
+
+
+def _fleet_cell_round(key: jax.Array, pos, d, speed, jitter, allowance,
+                      energy, rsu_xy, sc: ScenarioParams,
+                      mob: ManhattanParams, ch: ChannelParams,
+                      prm: VedsParams):
+    """One cell, one round: drive the pool T slots, select roles by
+    coverage at round start, draw channels for the selected vehicles."""
+    S, U, T = sc.n_sov, sc.n_opv, sc.n_slots
+    k_mob, k_ch = jax.random.split(key)
+    st, traj = rollout_positions(k_mob, {"pos": pos, "dir": d,
+                                         "speed": speed}, mob, T, prm.slot)
+    # coverage-driven re-selection: in-coverage vehicles first (stable sort
+    # keeps index order, so vehicles keep their role while they stay in
+    # coverage); the first S are SOVs, the next U are OPVs
+    cov0 = jnp.linalg.norm(pos - rsu_xy, axis=-1) <= mob.coverage
+    order = jnp.argsort(jnp.where(cov0, 0, 1), stable=True)
+    sov_idx, opv_idx = order[:S], order[S:S + U]
+    valid_sov, valid_opv = cov0[sov_idx], cov0[opv_idx]
+
+    traj_s, traj_u = traj[:, sov_idx], traj[:, opv_idx]     # [T,S,2]/[T,U,2]
+    d_rsu_s = jnp.linalg.norm(traj_s - rsu_xy, axis=-1)     # [T,S]
+    d_rsu_u = jnp.linalg.norm(traj_u - rsu_xy, axis=-1)     # [T,U]
+    cov_s = (d_rsu_s <= mob.coverage) & valid_sov[None]
+    cov_u = (d_rsu_u <= mob.coverage) & valid_opv[None]
+    d_so = jnp.linalg.norm(traj_s[:, :, None] - traj_u[:, None], axis=-1)
+
+    ks = jax.random.split(k_ch, 3)
+    g_sr = channel_gain(ks[0], d_rsu_s, ch, in_range=cov_s)
+    g_or = channel_gain(ks[1], d_rsu_u, ch, in_range=cov_u)
+    g_so = channel_gain(ks[2], d_so, ch) \
+        * (valid_sov[None, :, None] & valid_opv[None, None, :])
+
+    t_cp_s, e_cp_s = compute_model(sc)
+    jit_s = jitter[sov_idx]
+    budget = jnp.minimum(allowance, jnp.maximum(energy, 0.0))
+    rnd = RoundInputs(
+        g_sr=g_sr, g_or=g_or, g_so=g_so,
+        t_cp=(t_cp_s / jit_s) * valid_sov,
+        e_cp=(e_cp_s * jit_s ** 2) * valid_sov,
+        e_sov=budget[sov_idx] * valid_sov,
+        e_opv=budget[opv_idx] * valid_opv,
+        valid_sov=valid_sov, valid_opv=valid_opv)
+    return st, rnd, sov_idx, opv_idx
+
+
+def fleet_round(key: jax.Array, fleet: FleetState, sc: ScenarioParams,
+                mob: ManhattanParams, ch: ChannelParams,
+                prm: VedsParams) -> Tuple[FleetState, RoundInputs,
+                                          FleetSelection]:
+    """Advance every cell's pool one round and build the batched
+    RoundInputs for the selected SOVs/OPVs. Queue/energy fields of the
+    returned FleetState are untouched — the streaming engine scatters the
+    scheduler's outputs back (see `repro.core.streaming`)."""
+    B = fleet.batch_size
+    keys = jax.random.split(key, B)
+    st, rnd, sov_idx, opv_idx = jax.vmap(
+        lambda k, p, d, s, j, a, e, r: _fleet_cell_round(
+            k, p, d, s, j, a, e, r, sc, mob, ch, prm))(
+        keys, fleet.pos, fleet.dir, fleet.speed, fleet.jitter,
+        fleet.allowance, fleet.energy, fleet.rsu_xy)
+    new_fleet = dataclasses.replace(fleet, pos=st["pos"], dir=st["dir"],
+                                    speed=st["speed"])
+    return new_fleet, rnd, FleetSelection(sov_idx, opv_idx)
+
+
+def rollout_rounds(key: jax.Array, fleet: FleetState, sc: ScenarioParams,
+                   mob: ManhattanParams, ch: ChannelParams, prm: VedsParams,
+                   n_rounds: int) -> Tuple[FleetState, RoundInputs,
+                                           FleetSelection]:
+    """R resumable rounds of one persistent fleet, as one scan: returns
+    (final fleet, RoundInputs [R, B, T, ...], FleetSelection [R, B, ...]).
+
+    This is the scenario-layer view of the streaming engine — scheduling
+    not included (use `repro.core.streaming.stream_rounds` to fuse it)."""
+    def body(fl, k):
+        fl, rnd, sel = fleet_round(k, fl, sc, mob, ch, prm)
+        return fl, (rnd, sel)
+    fleet, (rnds, sels) = jax.lax.scan(
+        body, fleet, jax.random.split(key, n_rounds))
+    return fleet, rnds, sels

@@ -7,16 +7,60 @@ axis `B` (independent RSU cells, or independent rounds of one cell); a
 scheduler must accept both the single-cell layout (`g_sr: [T, S]`) and
 the batched layout (`g_sr: [B, T, S]`) and return outputs of matching
 batchedness. See DESIGN.md §2 for the full layout contract.
+
+The paper's optimization is *long-term*: the drift-plus-penalty virtual
+energy queues (eqs. 19-20) track cumulative budget violation across
+rounds, not within one. `solve_round` therefore takes an optional
+`SchedulerCarry` (the queues at round start) and every `RoundOutputs`
+reports the queues at round end in `.carry`, so a multi-round rollout
+can thread them (see DESIGN.md §9). `carry=None` starts the queues at
+zero — the seed's single-round semantics, bit-for-bit.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Protocol, runtime_checkable
+from typing import Iterator, Optional, Protocol, runtime_checkable
 
 import jax
+import jax.numpy as jnp
 
 from repro.channel.v2x import ChannelParams
 from repro.core.lyapunov import VedsParams
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SchedulerCarry:
+    """Virtual energy queues threaded round-to-round (eqs. 19-20).
+
+      qs  [S] / [B, S]   per-SOV queue [J]
+      qu  [U] / [B, U]   per-OPV queue [J]
+    """
+    qs: jax.Array
+    qu: jax.Array
+
+    @staticmethod
+    def zeros(rnd) -> "SchedulerCarry":
+        """Fresh queues matching `rnd`'s fleet shape (seed semantics)."""
+        return SchedulerCarry(qs=jnp.zeros(rnd.e_sov.shape),
+                              qu=jnp.zeros(rnd.e_opv.shape))
+
+
+def init_queues(rnd, carry: Optional[SchedulerCarry]):
+    """Round-start queues (qs0, qu0) broadcast to `rnd`'s fleet shape.
+
+    The single place the carry-is-None => zero-queues convention lives;
+    every scheduler implementation routes through it.
+    """
+    carry = carry if carry is not None else SchedulerCarry.zeros(rnd)
+    return (jnp.broadcast_to(carry.qs, rnd.e_sov.shape),
+            jnp.broadcast_to(carry.qu, rnd.e_opv.shape))
+
+
+def unbatch(out: "RoundOutputs", batched: bool) -> "RoundOutputs":
+    """Strip the canonical B=1 axis when the caller's round was unbatched
+    — the one exit-path counterpart of `RoundInputs.with_batch_axis`."""
+    return out if batched else jax.tree.map(lambda x: x[0], out)
 
 
 @jax.tree_util.register_dataclass
@@ -31,6 +75,7 @@ class RoundOutputs:
       energy_opv  [U]  / [B, U]   total OPV relay energy [J]
       n_cot_slots []   / [B]      slots spent on cooperative transmission
       n_dt_slots  []   / [B]      slots spent on direct transmission
+      carry       SchedulerCarry  virtual queues at round end (or None)
     """
     success: jax.Array
     n_success: jax.Array
@@ -39,13 +84,16 @@ class RoundOutputs:
     energy_opv: jax.Array
     n_cot_slots: jax.Array
     n_dt_slots: jax.Array
+    carry: Optional[SchedulerCarry] = None
 
     # dict-style access for legacy call-sites (`out["n_success"]`)
     def __getitem__(self, name: str) -> jax.Array:
         return getattr(self, name)
 
     def keys(self) -> Iterator[str]:
-        return iter(f.name for f in dataclasses.fields(self))
+        """Array diagnostic fields (the legacy dict view; `carry` excluded)."""
+        return iter(f.name for f in dataclasses.fields(self)
+                    if f.name != "carry")
 
     @property
     def batched(self) -> bool:
@@ -65,14 +113,19 @@ class RoundOutputs:
 @runtime_checkable
 class Scheduler(Protocol):
     """A named round scheduler. Implementations are frozen dataclasses so
-    they hash/compare by config and can be closed over by `jax.jit`."""
+    they hash/compare by config and can be closed over by `jax.jit`.
+
+    `carry` is the optional queue state at round start; every output
+    reports the round-end queues in `.carry` regardless, so streaming
+    rollouts can thread them and single-round callers can ignore them.
+    """
 
     name: str
 
-    def solve_round(self, rnd, prm: VedsParams,
-                    ch: ChannelParams) -> RoundOutputs:
+    def solve_round(self, rnd, prm: VedsParams, ch: ChannelParams,
+                    carry: Optional[SchedulerCarry] = None) -> RoundOutputs:
         ...
 
-    def __call__(self, rnd, prm: VedsParams,
-                 ch: ChannelParams) -> RoundOutputs:
+    def __call__(self, rnd, prm: VedsParams, ch: ChannelParams,
+                 carry: Optional[SchedulerCarry] = None) -> RoundOutputs:
         ...

@@ -1,0 +1,139 @@
+"""Streaming multi-round rollout engine: R x B rounds as ONE lax.scan.
+
+The paper's stochastic optimization is *long-term*: vehicles drive
+continuously through RSU coverage while the drift-plus-penalty virtual
+energy queues (eqs. 19-20) track cumulative budget violation across
+rounds. The blocked path (`make_round_batch` -> `solve_round` per round,
+host-side Python loop) re-draws an independent fleet every round and
+resets the queues, so no cross-round dynamics exist and every round pays
+an XLA dispatch.
+
+`stream_rounds` fuses the whole training run into one compiled program:
+each scan step advances the persistent `FleetState` (mobility + residual
+energy + per-vehicle virtual queues), re-selects SOVs/OPVs by coverage,
+draws channels, runs the scheduler with the carried queues, and scatters
+queue/energy updates back into the fleet. Two axes of configuration:
+
+  fresh_fleet   True  -> re-draw an independent fleet per round with the
+                         blocked path's exact per-round RNG schedule
+                         (`fold_in(key, r)` -> `make_round_batch`); with
+                         `carry_queues=False` this reproduces the blocked
+                         results while paying ONE dispatch for R rounds.
+                False -> thread one persistent fleet (time-correlated
+                         trajectories, coverage-driven re-selection).
+  carry_queues  True  -> virtual queues persist round-to-round (the
+                         long-term energy constraint is actually
+                         long-term). False -> queues reset each round
+                         (seed semantics, default).
+
+See DESIGN.md §9 for the layout and carry contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.channel.mobility import ManhattanParams
+from repro.channel.v2x import ChannelParams
+from repro.core.lyapunov import VedsParams
+from repro.core.scenario import (FleetState, ScenarioParams, fleet_round,
+                                 init_fleet, make_round_batch)
+from repro.core.scheduler import RoundOutputs, Scheduler, SchedulerCarry
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Static configuration of a streaming rollout (closed over by jit)."""
+    n_rounds: int = 50
+    batch: int = 1                  # B parallel cells per round
+    carry_queues: bool = False      # thread eqs. (19)-(20) across rounds
+    fresh_fleet: bool = False       # blocked-parity mode (see module doc)
+    hetero_fleet: bool = False      # fresh-fleet mode: pad fleets per cell
+    n_fleet: Optional[int] = None   # persistent pool size (default 2(S+U))
+    energy_horizon: Optional[float] = None  # battery, in rounds of budget
+
+
+class StreamResult(NamedTuple):
+    """One streaming rollout's results.
+
+      outputs  RoundOutputs stacked [R, B, ...] (`.carry` stacked too —
+               the per-round virtual-queue trace comes for free)
+      fleet    final FleetState (None in fresh-fleet mode)
+      carry    final round's queue state [B, S]/[B, U]
+    """
+    outputs: RoundOutputs
+    fleet: Optional[FleetState]
+    carry: SchedulerCarry
+
+
+def _zero_carry(sc: ScenarioParams, B: int) -> SchedulerCarry:
+    return SchedulerCarry(qs=jnp.zeros((B, sc.n_sov)),
+                          qu=jnp.zeros((B, sc.n_opv)))
+
+
+def stream_rounds(key: jax.Array, sched: Scheduler, sc: ScenarioParams,
+                  mob: ManhattanParams, ch: ChannelParams, prm: VedsParams,
+                  cfg: StreamConfig,
+                  fleet: Optional[FleetState] = None) -> StreamResult:
+    """Roll out `cfg.n_rounds` FL rounds of `cfg.batch` cells as one
+    `lax.scan` XLA program. Resumable: pass the returned `fleet` (and
+    seed the queues via `fleet.queue`) to continue a rollout.
+    """
+    B = int(cfg.batch)
+    R = int(cfg.n_rounds)
+    if cfg.fresh_fleet:
+        return _stream_fresh(key, sched, sc, mob, ch, prm, cfg, B, R)
+    if fleet is None:
+        fleet = init_fleet(jax.random.fold_in(key, 0xF1EE7), sc, mob, B,
+                           n_fleet=cfg.n_fleet,
+                           energy_horizon=cfg.energy_horizon)
+
+    def body(fl: FleetState, k):
+        fl, rnd, sel = fleet_round(k, fl, sc, mob, ch, prm)
+        rows = jnp.arange(B)[:, None]
+        qs_old = jnp.take_along_axis(fl.queue, sel.sov_idx, axis=1)
+        qu_old = jnp.take_along_axis(fl.queue, sel.opv_idx, axis=1)
+        c_in = (SchedulerCarry(qs=qs_old, qu=qu_old)
+                if cfg.carry_queues else None)
+        out = sched.solve_round(rnd, prm, ch, c_in)
+        # scatter the round-end queues back to the fleet slots that played
+        # this round (padded selections keep their old queue), and drain
+        # the residual batteries by the energy actually spent
+        queue = fl.queue
+        if cfg.carry_queues:
+            queue = queue.at[rows, sel.sov_idx].set(
+                jnp.where(rnd.valid_sov, out.carry.qs, qs_old))
+            queue = queue.at[rows, sel.opv_idx].set(
+                jnp.where(rnd.valid_opv, out.carry.qu, qu_old))
+        energy = fl.energy.at[rows, sel.sov_idx].add(
+            -jnp.where(rnd.valid_sov, out.energy_sov, 0.0))
+        energy = energy.at[rows, sel.opv_idx].add(
+            -jnp.where(rnd.valid_opv, out.energy_opv, 0.0))
+        fl = dataclasses.replace(fl, queue=queue,
+                                 energy=jnp.maximum(energy, 0.0))
+        return fl, out
+
+    fleet, outs = jax.lax.scan(body, fleet, jax.random.split(key, R))
+    return StreamResult(outputs=outs, fleet=fleet,
+                        carry=jax.tree.map(lambda x: x[-1], outs.carry))
+
+
+def _stream_fresh(key, sched, sc, mob, ch, prm, cfg: StreamConfig,
+                  B: int, R: int) -> StreamResult:
+    """Fresh-fleet mode: round r draws `make_round_batch(fold_in(key, r))`
+    — the blocked dispatch path's exact RNG schedule — inside the scan, so
+    `carry_queues=False` reproduces the blocked results in one dispatch.
+    With `carry_queues=True` the queue identity is positional (SOV slot i
+    of round r carries to slot i of round r+1)."""
+    def body(c: SchedulerCarry, r):
+        rnd = make_round_batch(jax.random.fold_in(key, r), sc, mob, ch,
+                               prm, B, hetero_fleet=cfg.hetero_fleet)
+        out = sched.solve_round(rnd, prm, ch,
+                                c if cfg.carry_queues else None)
+        return out.carry, out
+
+    carry, outs = jax.lax.scan(body, _zero_carry(sc, B), jnp.arange(R))
+    return StreamResult(outputs=outs, fleet=None, carry=carry)

@@ -34,7 +34,8 @@ import jax.numpy as jnp
 
 from repro.channel.v2x import ChannelParams
 from repro.core import lyapunov as lyp
-from repro.core.scheduler import RoundOutputs
+from repro.core.scheduler import (RoundOutputs, SchedulerCarry, init_queues,
+                                  unbatch)
 from repro.core.solver import dt_power_opt, solve_p4
 from repro.kernels.veds_score.ops import veds_dt_score_tpu
 
@@ -250,18 +251,23 @@ def solve_slot(t: jax.Array, state: Dict[str, jax.Array], rnd: RoundInputs,
 
 
 def veds_round(rnd: RoundInputs, prm: lyp.VedsParams, ch: ChannelParams, *,
-               enable_cot: bool = True,
-               use_kernel: bool = True) -> RoundOutputs:
+               enable_cot: bool = True, use_kernel: bool = True,
+               carry: Optional[SchedulerCarry] = None) -> RoundOutputs:
     """Algorithm 2: scan slots, return success mask + diagnostics.
 
     Accepts single-cell or batched rounds; outputs match the input layout.
+    `carry` seeds the virtual energy queues (eqs. 19-20) with their state
+    from previous rounds — the long-term constraint the drift-plus-penalty
+    machinery is built for; None starts them at zero (seed semantics). The
+    round-end queues always come back in `RoundOutputs.carry`.
     """
     batched = rnd.batched
     rb = rnd.with_batch_axis()
     B, T, S = rb.g_sr.shape
     U = rb.g_or.shape[-1]
-    state = {"zeta": jnp.zeros((B, S)), "qs": jnp.zeros((B, S)),
-             "qu": jnp.zeros((B, U)), "T": jnp.asarray(float(T))}
+    qs0, qu0 = init_queues(rb, carry)
+    state = {"zeta": jnp.zeros((B, S)), "qs": qs0,
+             "qu": qu0, "T": jnp.asarray(float(T))}
 
     def body(st, t):
         st, info = solve_slot(t, st, rb, prm, ch, enable_cot=enable_cot,
@@ -280,7 +286,6 @@ def veds_round(rnd: RoundInputs, prm: lyp.VedsParams, ch: ChannelParams, *,
         energy_opv=infos["e_opv"].sum(0),
         n_cot_slots=infos["use_cot"].sum(0),
         n_dt_slots=infos["use_dt"].sum(0),
+        carry=SchedulerCarry(qs=state["qs"], qu=state["qu"]),
     )
-    if not batched:
-        out = jax.tree.map(lambda x: x[0], out)
-    return out
+    return unbatch(out, batched)

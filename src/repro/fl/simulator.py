@@ -8,9 +8,18 @@ how we batch clients: one vmapped gradient call over the stacked per-client
 minibatches per round.
 
 With `round_batch = B > 1`, scenario generation and scheduling run for B
-independent rounds per dispatch (`make_round_batch` + one batched
-`solve_round`), amortizing XLA dispatch across the whole block; the model
-update then consumes the B success masks round by round.
+rounds per dispatch: the block is a vmapped stack of the *same* per-round
+draws the B = 1 path makes (`fold_in(key, r)` per round), so the history
+is identical for every `round_batch` — the knob only amortizes XLA
+dispatch. A trailing partial block schedules exactly the remaining rounds,
+never a padded batch.
+
+With `streaming = True`, the whole run's scheduling is ONE compiled
+program (`repro.core.streaming.stream_rounds`): a persistent fleet drives
+through coverage round-to-round, the virtual energy queues carry
+(`carry_queues`), and client sampling moves on-device via `jax.random`
+(a permutation per round + uniform minibatch draws) instead of the host
+NumPy generator.
 """
 from __future__ import annotations
 
@@ -25,8 +34,8 @@ from repro.channel.mobility import ManhattanParams
 from repro.channel.v2x import ChannelParams
 from repro.core.baselines import get_scheduler
 from repro.core.lyapunov import VedsParams
-from repro.core.scenario import (ScenarioParams, make_round,
-                                 make_round_batch)
+from repro.core.scenario import ScenarioParams, make_round
+from repro.core.streaming import StreamConfig, stream_rounds
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +54,14 @@ class FLSimConfig:
     V: float = 0.2
     q_bits: float = 1e7
     seed: int = 0
+    streaming: bool = False      # one-scan rollout + on-device sampling
+    carry_queues: bool = True    # streaming: thread eqs. (19)-(20)
+    n_fleet: int = 0             # streaming: pool size (0 -> 2 (S + U))
+
+
+def _client_size(data: Dict[str, jax.Array]) -> int:
+    return data["x"].shape[0] if "x" in data else \
+        next(iter(data.values())).shape[0]
 
 
 def run_fl(key: jax.Array, params, loss_fn: Callable,
@@ -53,7 +70,9 @@ def run_fl(key: jax.Array, params, loss_fn: Callable,
            eval_every: int = 5) -> Dict[str, list]:
     """Generic FL loop. client_data: per-client dict of arrays.
 
-    Returns history: round, sim_time, n_success, eval metric.
+    Returns history: round, sim_time, n_success, eval metric, plus
+    `scheduled_rounds` — the total number of rounds actually scheduled
+    (== sim.rounds: trailing partial blocks are trimmed, not padded).
     """
     mob = ManhattanParams(v_max=sim.v_max)
     ch = ChannelParams()
@@ -61,14 +80,6 @@ def run_fl(key: jax.Array, params, loss_fn: Callable,
     sc = ScenarioParams(n_sov=sim.n_sov, n_opv=sim.n_opv,
                         n_slots=sim.n_slots, batch_size=sim.batch_size)
     sched = get_scheduler(sim.scheduler)
-    B = max(1, sim.round_batch)
-
-    if B == 1:
-        mk_round = jax.jit(lambda k: make_round(k, sc, mob, ch, prm))
-    else:
-        mk_round = jax.jit(lambda k: make_round_batch(
-            k, sc, mob, ch, prm, B, hetero_fleet=False))
-    run_sched = jax.jit(lambda r: sched.solve_round(r, prm, ch))
     # all S per-client gradients in one vmapped call (FedSGD batching)
     vgrad_fn = jax.jit(jax.vmap(jax.grad(loss_fn), in_axes=(None, 0)))
 
@@ -85,40 +96,93 @@ def run_fl(key: jax.Array, params, loss_fn: Callable,
         return jax.tree.map(lambda p, g: p - sim.lr * ok * clip * g,
                             params, avg)
 
-    rng = np.random.default_rng(sim.seed)
-    history = {"round": [], "time": [], "n_success": [], "metric": []}
+    history = {"round": [], "time": [], "n_success": [], "metric": [],
+               "scheduled_rounds": 0}
     sim_time = 0.0
-    for r0 in range(0, sim.rounds, B):
-        n_block = min(B, sim.rounds - r0)
-        k_r = jax.random.fold_in(key, r0)
-        out = run_sched(mk_round(k_r))
-        for j in range(n_block):
-            r = r0 + j
-            cell = out.cell(j) if B > 1 else out
-            mask = jnp.asarray(cell.success, jnp.float32)
 
-            sel = rng.choice(sim.n_clients, size=sim.n_sov, replace=False)
-            mbs = []
-            weights = []
-            for ci in sel:
-                data = client_data[ci]
-                n = data["x"].shape[0] if "x" in data else \
-                    next(iter(data.values())).shape[0]
+    if sim.streaming:
+        masks, n_succ, sel, mb_u = _streaming_schedule(key, sim, sc, mob,
+                                                       ch, prm, sched)
+        rng = None
+    else:
+        rng = np.random.default_rng(sim.seed)
+
+    def round_step(r, mask, n_success, sel_r, mb_u_r, params):
+        nonlocal sim_time
+        mbs, weights = [], []
+        for s, ci in enumerate(sel_r):
+            data = client_data[int(ci)]
+            n = _client_size(data)
+            if mb_u_r is None:                       # host-RNG contract
                 idx = rng.choice(n, size=sim.batch_size,
                                  replace=n < sim.batch_size)
-                mbs.append({k: v[idx] for k, v in data.items()})
-                weights.append(float(n))
-            mb_stack = jax.tree.map(lambda *x: jnp.stack(x), *mbs)
-            grads_stack = vgrad_fn(params, mb_stack)
-            params = apply_update(params, grads_stack, mask,
-                                  jnp.asarray(weights, jnp.float32))
+            else:                                    # on-device uniforms
+                idx = np.minimum((mb_u_r[s] * n).astype(np.int64), n - 1)
+            mbs.append({k: v[idx] for k, v in data.items()})
+            weights.append(float(n))
+        mb_stack = jax.tree.map(lambda *x: jnp.stack(x), *mbs)
+        grads_stack = vgrad_fn(params, mb_stack)
+        params = apply_update(params, grads_stack, mask,
+                              jnp.asarray(weights, jnp.float32))
+        sim_time += sim.n_slots * prm.slot
+        if eval_fn is not None and (r % eval_every == 0 or
+                                    r == sim.rounds - 1):
+            history["round"].append(r)
+            history["time"].append(sim_time)
+            history["n_success"].append(n_success)
+            history["metric"].append(float(eval_fn(params)))
+        return params
 
-            sim_time += sim.n_slots * prm.slot
-            if eval_fn is not None and (r % eval_every == 0 or
-                                        r == sim.rounds - 1):
-                m = float(eval_fn(params))
-                history["round"].append(r)
-                history["time"].append(sim_time)
-                history["n_success"].append(int(cell.n_success))
-                history["metric"].append(m)
+    if sim.streaming:
+        for r in range(sim.rounds):
+            params = round_step(r, masks[r], int(n_succ[r]), sel[r],
+                                mb_u[r], params)
+        history["scheduled_rounds"] = sim.rounds
+        return history
+
+    B = max(1, sim.round_batch)
+    mk_round = jax.jit(lambda k: make_round(k, sc, mob, ch, prm))
+    # a block vmap-stacks the per-round cells, so cell j of the block is
+    # bit-for-bit round r0 + j of the B = 1 path; the last (possibly
+    # partial) block stacks exactly the remaining rounds
+    mk_block = jax.jit(jax.vmap(mk_round))
+    run_sched = jax.jit(lambda r: sched.solve_round(r, prm, ch))
+    for r0 in range(0, sim.rounds, B):
+        n_block = min(B, sim.rounds - r0)
+        keys = jnp.stack([jax.random.fold_in(key, r)
+                          for r in range(r0, r0 + n_block)])
+        out = run_sched(mk_block(keys) if B > 1 else mk_round(keys[0]))
+        history["scheduled_rounds"] += n_block
+        for j in range(n_block):
+            cell = out.cell(j) if B > 1 else out
+            mask = jnp.asarray(cell.success, jnp.float32)
+            sel_r = rng.choice(sim.n_clients, size=sim.n_sov,
+                               replace=False)
+            params = round_step(r0 + j, mask, int(cell.n_success), sel_r,
+                                None, params)
     return history
+
+
+def _streaming_schedule(key, sim: FLSimConfig, sc, mob, ch, prm, sched):
+    """One compiled program for the whole run's scheduling + on-device
+    client sampling. Returns (masks [R,S], n_success [R], sel [R,S],
+    mb_u [R,S,batch]) as host arrays."""
+    R = sim.rounds
+    cfg = StreamConfig(n_rounds=R, batch=1,
+                       carry_queues=sim.carry_queues,
+                       n_fleet=sim.n_fleet or None)
+    k_sched, k_sel, k_mb = jax.random.split(key, 3)
+
+    @jax.jit
+    def program(k_sched, k_sel, k_mb):
+        res = stream_rounds(k_sched, sched, sc, mob, ch, prm, cfg)
+        sel = jax.vmap(
+            lambda k: jax.random.permutation(k, sim.n_clients)[:sim.n_sov]
+        )(jax.random.split(k_sel, R))                       # [R,S]
+        mb_u = jax.random.uniform(k_mb, (R, sim.n_sov, sim.batch_size))
+        return (res.outputs.success[:, 0].astype(jnp.float32),
+                res.outputs.n_success[:, 0], sel, mb_u)
+
+    masks, n_succ, sel, mb_u = program(k_sched, k_sel, k_mb)
+    return (np.asarray(masks), np.asarray(n_succ), np.asarray(sel),
+            np.asarray(mb_u))

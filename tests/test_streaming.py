@@ -1,0 +1,309 @@
+"""Streaming multi-round rollout engine (DESIGN.md §9).
+
+Covers the carry contract on `solve_round`, fresh-fleet parity with the
+blocked `make_round_batch` -> `solve_round` path, persistent-fleet
+coverage re-selection, resumability, and the cross-round virtual-queue
+dynamics (growth under an infeasible energy budget, stability under a
+feasible one).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.channel.mobility import ManhattanParams, rollout_positions
+from repro.channel.v2x import ChannelParams
+from repro.core.baselines import SCHEDULERS, get_scheduler
+from repro.core.lyapunov import VedsParams
+from repro.core.scenario import (FleetState, ScenarioParams, fleet_round,
+                                 init_fleet, make_round_batch,
+                                 rollout_rounds)
+from repro.core.scheduler import SchedulerCarry
+from repro.core.streaming import StreamConfig, StreamResult, stream_rounds
+
+MOB = ManhattanParams(v_max=10.0)
+CH = ChannelParams()
+PRM = VedsParams(alpha=2.0, V=0.2, Q=1e7, slot=0.1)
+SC = ScenarioParams(n_sov=4, n_opv=3, n_slots=10)
+KEY = jax.random.key(0)
+
+
+@pytest.fixture(scope="module")
+def runners():
+    """One jitted solve_round per scheduler, shared across the module so
+    equal-shaped calls (blocked parity references, carry contracts) reuse
+    the same compiled programs."""
+    return {name: jax.jit(
+        lambda r, c=None, s=get_scheduler(name): s.solve_round(
+            r, PRM, CH, c)) for name in SCHEDULERS}
+
+
+# ---- carry contract on solve_round -------------------------------------
+
+@pytest.mark.parametrize("name", sorted(SCHEDULERS))
+def test_zero_carry_matches_no_carry(name, runners):
+    """carry=None and carry=zeros are the same program (seed parity)."""
+    rb = jax.jit(lambda k: make_round_batch(k, SC, MOB, CH, PRM, 3))(KEY)
+    out0 = runners[name](rb)
+    outz = runners[name](rb, SchedulerCarry.zeros(rb))
+    np.testing.assert_array_equal(np.asarray(out0.success),
+                                  np.asarray(outz.success))
+    for f in ("zeta", "energy_sov", "energy_opv"):
+        np.testing.assert_allclose(np.asarray(out0[f]),
+                                   np.asarray(outz[f]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out0.carry.qs),
+                               np.asarray(outz.carry.qs), rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["veds", "sa"])   # dataclass + Fn adapter
+def test_carry_roundtrips_shape_and_batchedness(name, runners):
+    rb = jax.jit(lambda k: make_round_batch(k, SC, MOB, CH, PRM, 3))(KEY)
+    out = runners[name](rb)
+    assert out.carry.qs.shape == (3, SC.n_sov)
+    assert out.carry.qu.shape == (3, SC.n_opv)
+    # unbatched rounds give unbatched carries
+    out1 = runners[name](rb.cell(0))
+    assert out1.carry.qs.shape == (SC.n_sov,)
+    # and feed back in
+    out2 = runners[name](rb.cell(0), out1.carry)
+    assert out2.carry.qs.shape == (SC.n_sov,)
+
+
+# ---- fresh-fleet streaming parity with the blocked path ----------------
+
+@pytest.mark.parametrize("name", sorted(SCHEDULERS))
+@pytest.mark.parametrize("B", [1, 3])
+def test_stream_fresh_matches_blocked(name, B, runners):
+    """Satellite: streaming with carry_queues=False + fresh fleets
+    reproduces make_round_batch -> solve_round round-for-round."""
+    R = 4
+    sched = get_scheduler(name)
+    cfg = StreamConfig(n_rounds=R, batch=B, fresh_fleet=True)
+    res = jax.jit(lambda k: stream_rounds(
+        k, sched, SC, MOB, CH, PRM, cfg))(KEY)
+    assert isinstance(res, StreamResult) and res.fleet is None
+    mk = jax.jit(lambda k: make_round_batch(k, SC, MOB, CH, PRM, B,
+                                            hetero_fleet=False))
+    for r in range(R):
+        ref = runners[name](mk(jax.random.fold_in(KEY, r)))
+        got = jax.tree.map(lambda x: x[r], res.outputs)
+        np.testing.assert_array_equal(np.asarray(got.success),
+                                      np.asarray(ref.success),
+                                      err_msg=f"{name}/B{B}/round{r}")
+        np.testing.assert_allclose(np.asarray(got.zeta),
+                                   np.asarray(ref.zeta),
+                                   rtol=2e-5, atol=PRM.Q * 1e-5)
+        np.testing.assert_allclose(np.asarray(got.energy_sov),
+                                   np.asarray(ref.energy_sov),
+                                   rtol=2e-5, atol=1e-7)
+
+
+@pytest.mark.slow
+def test_stream_fresh_r50_one_dispatch_matches_blocked(runners):
+    """Acceptance: a one-dispatch R=50 streaming rollout matches the
+    blocked per-round path — success masks bit-for-bit, floats to fp32
+    tolerance. (Deep version of the R=4 quick-lane parity above.)"""
+    R = 50
+    sched = get_scheduler("madca")
+    cfg = StreamConfig(n_rounds=R, batch=1, fresh_fleet=True)
+    res = jax.jit(lambda k: stream_rounds(
+        k, sched, SC, MOB, CH, PRM, cfg))(KEY)
+    run = runners["madca"]
+    mk = jax.jit(lambda k: make_round_batch(k, SC, MOB, CH, PRM, 1,
+                                            hetero_fleet=False))
+    succ = np.asarray(res.outputs.success)
+    zeta = np.asarray(res.outputs.zeta)
+    for r in range(R):
+        ref = run(mk(jax.random.fold_in(KEY, r)))
+        np.testing.assert_array_equal(succ[r], np.asarray(ref.success))
+        np.testing.assert_allclose(zeta[r], np.asarray(ref.zeta),
+                                   rtol=2e-5, atol=PRM.Q * 1e-5)
+
+
+# ---- persistent fleets -------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fleet():
+    return init_fleet(jax.random.key(1), SC, MOB, 2)
+
+
+def test_init_fleet_layout(fleet):
+    N = 2 * (SC.n_sov + SC.n_opv)
+    assert isinstance(fleet, FleetState)
+    assert fleet.batch_size == 2 and fleet.n_vehicles == N
+    assert fleet.pos.shape == (2, N, 2)
+    assert fleet.queue.shape == (2, N)
+    assert bool(jnp.all(fleet.queue == 0))
+    assert bool(jnp.all(jnp.isinf(fleet.energy)))    # no battery by default
+    b = init_fleet(jax.random.key(2), SC, MOB, 2, energy_horizon=5.0)
+    np.testing.assert_allclose(np.asarray(b.energy),
+                               np.asarray(b.allowance) * 5.0, rtol=1e-6)
+    with pytest.raises(ValueError):
+        init_fleet(jax.random.key(3), SC, MOB, 1, n_fleet=3)
+
+
+def test_fleet_round_selection_and_masks(fleet):
+    fl2, rnd, sel = jax.jit(lambda k, f: fleet_round(
+        k, f, SC, MOB, CH, PRM))(jax.random.key(4), fleet)
+    assert rnd.g_sr.shape == (2, SC.n_slots, SC.n_sov)
+    # roles are disjoint fleet slots
+    both = np.concatenate([np.asarray(sel.sov_idx),
+                           np.asarray(sel.opv_idx)], axis=1)
+    for b in range(2):
+        assert len(set(both[b])) == both.shape[1]
+    # valid == selected vehicle in coverage at round start
+    cov = np.linalg.norm(np.asarray(fleet.pos)
+                         - np.asarray(fleet.rsu_xy)[:, None], axis=-1) \
+        <= MOB.coverage
+    for b in range(2):
+        np.testing.assert_array_equal(
+            np.asarray(rnd.valid_sov)[b], cov[b][np.asarray(sel.sov_idx)[b]])
+    # padded roles carry no gains/budgets
+    vs = np.asarray(rnd.valid_sov)
+    assert not np.asarray(rnd.g_sr)[~np.broadcast_to(
+        vs[:, None], rnd.g_sr.shape)].any()
+    assert not np.asarray(rnd.e_sov)[~vs].any()
+    # the pool kept driving
+    assert (np.asarray(fl2.pos) != np.asarray(fleet.pos)).any()
+
+
+def test_rollout_segments_matches_sequential_rollouts():
+    """mobility-layer resumability: one nested scan == repeated
+    rollout_positions calls threading the returned state."""
+    from repro.channel.mobility import init_mobility, rollout_segments
+    st0 = init_mobility(jax.random.key(11), 6, MOB)
+    key = jax.random.key(12)
+    st_seg, traj = rollout_segments(key, st0, MOB, 3, 8, PRM.slot)
+    assert traj.shape == (3, 8, 6, 2)
+    st = st0
+    for r, k in enumerate(jax.random.split(key, 3)):
+        st, block = rollout_positions(k, st, MOB, 8, PRM.slot)
+        np.testing.assert_allclose(np.asarray(block),
+                                   np.asarray(traj[r]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(st["pos"]),
+                               np.asarray(st_seg["pos"]), rtol=1e-6)
+
+
+@pytest.mark.slow
+def test_rollout_rounds_is_resumable_scan(fleet):
+    """One R=4 scan == a Python loop of fleet_round over the same keys:
+    the mobility state is genuinely threaded, not re-initialized."""
+    R = 4
+    key = jax.random.key(5)
+    fl_s, rnds, sels = jax.jit(lambda k, f: rollout_rounds(
+        k, f, SC, MOB, CH, PRM, R))(key, fleet)
+    assert rnds.g_sr.shape == (R, 2, SC.n_slots, SC.n_sov)
+    fl = fleet
+    for r, k in enumerate(jax.random.split(key, R)):
+        fl, rnd, sel = fleet_round(k, fl, SC, MOB, CH, PRM)
+        np.testing.assert_allclose(
+            np.asarray(rnd.g_sr), np.asarray(rnds.g_sr[r]),
+            rtol=2e-5, atol=0, err_msg=f"round {r}")
+        np.testing.assert_array_equal(np.asarray(sel.sov_idx),
+                                      np.asarray(sels.sov_idx[r]))
+    np.testing.assert_allclose(np.asarray(fl.pos), np.asarray(fl_s.pos),
+                               rtol=1e-6)
+
+
+def test_trajectories_time_correlated(fleet):
+    """Successive rounds of one fleet are continuous in space (the whole
+    point vs fresh fleets): positions move at most v_max * slot per step
+    across the round boundary."""
+    _, rnds, sels = rollout_rounds(jax.random.key(6), fleet, SC, MOB, CH,
+                                   PRM, 2)
+    # reconstruct: end of round 0 and start of round 1 for the pool is not
+    # directly exposed, so check via the fleet state instead
+    fl = fleet
+    fl1, _, _ = fleet_round(jax.random.key(7), fl, SC, MOB, CH, PRM)
+    step = np.linalg.norm(np.asarray(fl1.pos) - np.asarray(fl.pos),
+                          axis=-1)
+    assert step.max() <= MOB.v_max * PRM.slot * SC.n_slots + 1e-3
+
+
+def test_stream_persistent_scatters_queues_and_energy():
+    cfg = StreamConfig(n_rounds=3, batch=2, carry_queues=True,
+                       energy_horizon=8.0)
+    res = jax.jit(lambda k: stream_rounds(
+        k, get_scheduler("sa"), SC, MOB, CH, PRM, cfg))(KEY)
+    assert res.outputs.success.shape == (3, 2, SC.n_sov)
+    assert res.fleet is not None
+    # SA burns p_max whenever scheduled -> some queue must have built up
+    assert float(res.fleet.queue.max()) > 0
+    # batteries drained but never negative
+    assert float(res.fleet.energy.min()) >= 0
+    assert float(res.fleet.energy.min()) < float(
+        (res.fleet.allowance * 8.0).max())
+    # the queue trace comes back stacked per round
+    assert res.outputs.carry.qs.shape == (3, 2, SC.n_sov)
+
+
+@pytest.mark.slow
+def test_stream_resumes_from_returned_fleet():
+    """A host-side replay of the scan body over the same per-round keys
+    reproduces one 4-round stream — queue and mobility state genuinely
+    thread through the returned FleetState."""
+    cfg4 = StreamConfig(n_rounds=4, batch=1, carry_queues=True)
+    key = jax.random.key(8)
+    fleet0 = init_fleet(jax.random.key(9), SC, MOB, 1)
+    r4 = stream_rounds(key, get_scheduler("sa"), SC, MOB, CH, PRM, cfg4,
+                       fleet=fleet0)
+    # stream_rounds(R) scans over split(key, R); replay the same per-round
+    # subkeys through a host-side loop of the scan body
+    fleet = fleet0
+    outs = []
+    for k in jax.random.split(key, 4):
+        fl, rnd, sel = fleet_round(k, fleet, SC, MOB, CH, PRM)
+        qs = jnp.take_along_axis(fl.queue, sel.sov_idx, axis=1)
+        qu = jnp.take_along_axis(fl.queue, sel.opv_idx, axis=1)
+        out = get_scheduler("sa").solve_round(rnd, PRM, CH,
+                                              SchedulerCarry(qs, qu))
+        rows = jnp.arange(1)[:, None]
+        queue = fl.queue.at[rows, sel.sov_idx].set(
+            jnp.where(rnd.valid_sov, out.carry.qs, qs))
+        queue = queue.at[rows, sel.opv_idx].set(
+            jnp.where(rnd.valid_opv, out.carry.qu, qu))
+        fleet = dataclasses.replace(fl, queue=queue)
+        outs.append(out)
+    for r in range(4):
+        np.testing.assert_allclose(
+            np.asarray(outs[r].zeta), np.asarray(r4.outputs.zeta[r]),
+            rtol=2e-5, atol=PRM.Q * 1e-5, err_msg=f"round {r}")
+    np.testing.assert_allclose(np.asarray(fleet.queue),
+                               np.asarray(r4.fleet.queue),
+                               rtol=2e-5, atol=1e-7)
+
+
+# ---- cross-round queue dynamics (acceptance) ---------------------------
+
+def test_queues_grow_under_infeasible_budget():
+    """SA spends kappa * p_max per scheduled slot against a budget orders
+    of magnitude smaller: the carried queues must strictly increase."""
+    sc = ScenarioParams(n_sov=4, n_opv=3, n_slots=10,
+                        e_min=1e-4, e_max=2e-4)
+    cfg = StreamConfig(n_rounds=6, batch=1, fresh_fleet=True,
+                       carry_queues=True)
+    res = jax.jit(lambda k: stream_rounds(
+        k, get_scheduler("sa"), sc, MOB, CH, PRM, cfg))(KEY)
+    q = np.asarray(res.outputs.carry.qs).mean(axis=(1, 2))   # [R]
+    assert (np.diff(q) > 0).all(), q
+    assert q[-1] > 5 * q[0]
+
+
+def test_queues_stable_under_feasible_budget():
+    """With a budget comfortably above anything VEDS can spend
+    (T kappa p_max << e_min), the carried queues stay pinned near zero.
+    Uses v2i_only — VEDS' queue machinery without the COT candidate
+    solves, so the streaming program compiles fast in the quick lane."""
+    sc = ScenarioParams(n_sov=4, n_opv=3, n_slots=10,
+                        e_min=0.5, e_max=1.0)
+    cfg = StreamConfig(n_rounds=6, batch=1, fresh_fleet=True,
+                       carry_queues=True)
+    res = jax.jit(lambda k: stream_rounds(
+        k, get_scheduler("v2i_only"), sc, MOB, CH, PRM, cfg))(KEY)
+    q = np.asarray(res.outputs.carry.qs)                     # [R,1,S]
+    assert q.max() < 1e-3, q.max()
+    # no round-over-round buildup
+    per_round = q.mean(axis=(1, 2))
+    assert per_round[-1] <= per_round[0] + 1e-6
