@@ -12,10 +12,27 @@ interior-point solves and is reported for context.
 R-round training run's scheduling as ONE `lax.scan` program
 (`stream_rounds`, fresh-fleet mode) against the blocked `round_batch=1`
 path — R Python-loop dispatches of scenario generation + scheduling.
+`cot_stream_sweep` extends it to full VEDS+COT: `round_chunk` batches
+the P4 interior-point candidate solves across rounds inside the scan.
+
+`fused_sweep` carries the fused-engine story (DESIGN.md §10): a whole
+FL training run — scheduling + minibatch gather + local SGD +
+aggregation — as one program (`run_fl(streaming=True)`, fused) against
+the host-gather streaming path (one-dispatch scheduling, per-round host
+loop for gather + update).
+
+`--smoke` runs every sweep at tiny shapes and emits one JSON line — the
+CI quick lane uses it to catch perf-path regressions (imports, shapes,
+jit contracts) without paying benchmark-scale runtimes.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import math
+
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import mean_success, time_call
 from repro.channel.mobility import ManhattanParams
@@ -99,28 +116,139 @@ def stream_sweep(R: int = 50, schedulers=("v2i_only", "madca"), *,
     return rows
 
 
-def main(csv=True):
-    rows, us = run()
-    veds5 = [r[2] for r in rows if r[1] == "veds" and r[0] == 5.0][0]
-    opt5 = [r[2] for r in rows if r[1] == "optimal" and r[0] == 5.0][0]
+def cot_stream_sweep(R: int = 20, round_chunk: int = 10, *,
+                     n_sov: int = 4, n_opv: int = 4, n_slots: int = 20):
+    """Full VEDS+COT streaming (ROADMAP open item): `round_chunk` rounds
+    of P4 interior-point candidate solves batched per scan step against
+    the blocked per-round loop. Returns one row
+    (scheduler, R, blocked_rps, stream_rps, speedup)."""
+    mob, ch = ManhattanParams(), ChannelParams()
+    prm = VedsParams(alpha=2.0, V=0.2, Q=1e7, slot=0.1)
+    sc = ScenarioParams(n_sov=n_sov, n_opv=n_opv, n_slots=n_slots)
+    key = jax.random.key(0)
+    sched = get_scheduler("veds")
+    mk1 = jax.jit(lambda k: make_round_batch(
+        k, sc, mob, ch, prm, 1, hetero_fleet=False))
+    run1 = jax.jit(lambda r: sched.solve_round(r, prm, ch))
+    cfg = StreamConfig(n_rounds=R, batch=1, fresh_fleet=True,
+                       round_chunk=round_chunk)
+    run_s = jax.jit(lambda k: stream_rounds(k, sched, sc, mob, ch, prm,
+                                            cfg))
+    t_blocked = 1e-6 * time_call(
+        lambda: [run1(mk1(jax.random.fold_in(key, r))) for r in range(R)])
+    t_stream = 1e-6 * time_call(run_s, key)
+    return [("veds", R, R / t_blocked, R / t_stream,
+             t_blocked / t_stream)]
+
+
+def _fl_problem(n_clients: int = 10, dim: int = 8, classes: int = 3):
+    """Tiny linear-softmax FL problem for the end-to-end fused sweep."""
+    key = jax.random.key(42)
+    ks = jax.random.split(key, n_clients + 1)
+    protos = jax.random.normal(ks[-1], (classes, dim))
+    data = []
+    for i in range(n_clients):
+        n = 24 + 4 * (i % 3)
+        y = jax.random.randint(ks[i], (n,), 0, classes)
+        x = protos[y] + 0.5 * jax.random.normal(
+            jax.random.fold_in(ks[i], 1), (n, dim))
+        data.append({"x": x, "y": y})
+    params = {"w": jnp.zeros((dim, classes))}
+
+    def loss_fn(p, b):
+        logits = b["x"] @ p["w"]
+        return -jnp.mean(jax.nn.log_softmax(logits)[
+            jnp.arange(b["y"].shape[0]), b["y"]])
+
+    return params, loss_fn, data
+
+
+def fused_sweep(R: int = 50, *, n_sov: int = 4, n_opv: int = 3,
+                n_slots: int = 10, batch_size: int = 8):
+    """End-to-end FL rounds/s: the fused one-scan engine
+    (`run_fl(streaming=True)`) vs the host-gather streaming path
+    (`fused=False`: one-dispatch scheduling + per-round host loop).
+    Returns rows (mode, R, host_rps, fused_rps, speedup)."""
+    from repro.fl.simulator import FLSimConfig, run_fl
+    params, loss_fn, data = _fl_problem()
+    key = jax.random.key(7)
+
+    def go(fused):
+        sim = FLSimConfig(n_clients=len(data), rounds=R,
+                          scheduler="madca", n_sov=n_sov, n_opv=n_opv,
+                          n_slots=n_slots, batch_size=batch_size,
+                          streaming=True, fused=fused)
+        return run_fl(key, params, loss_fn, data, sim)
+
+    t_host = 1e-6 * time_call(lambda: go(False))
+    t_fused = 1e-6 * time_call(lambda: go(True))
+    return [("fused_vs_host_gather", R, R / t_host, R / t_fused,
+             t_host / t_fused)]
+
+
+def main(csv=True, smoke=False):
+    if smoke:
+        rows = []
+        us = None
+        for name in ("veds", "optimal"):
+            out = mean_success(name, v_max=5.0, rounds=2, n_sov=4,
+                               n_opv=4, n_slots=10)
+            if us is None:
+                rnd = out["maker"](jax.random.key(0))
+                us = time_call(out["runner"], rnd) / 2
+            rows.append((5.0, name, out["n_success"]))
+        brows = b_sweep(Bs=(1, 4), schedulers=("madca",), n_sov=4,
+                        n_opv=4, n_slots=10)
+        srows = stream_sweep(R=4, schedulers=("madca",), n_sov=4,
+                             n_opv=4, n_slots=10)
+        crows = cot_stream_sweep(R=4, round_chunk=2, n_sov=3, n_opv=3,
+                                 n_slots=8)
+        frows = fused_sweep(R=6)
+    else:
+        rows, us = run()
+        brows = b_sweep()
+        srows = stream_sweep()
+        crows = cot_stream_sweep()
+        frows = fused_sweep()
+    veds5 = [r[2] for r in rows if r[1] == "veds"][0] if smoke else \
+        [r[2] for r in rows if r[1] == "veds" and r[0] == 5.0][0]
+    opt5 = [r[2] for r in rows if r[1] == "optimal"][0] if smoke else \
+        [r[2] for r in rows if r[1] == "optimal" and r[0] == 5.0][0]
     frac = veds5 / max(opt5, 1e-9)
-    brows = b_sweep()
     b64 = max(r[4] for r in brows if r[1] == max(b[1] for b in brows))
-    srows = stream_sweep()
     s50 = max(r[4] for r in srows)
+    cot = crows[0][4]
+    fus = frows[0][4]
+    if smoke:
+        out = {"bench": "fig4_speed_smoke", "us_per_round": us,
+               "veds_frac_of_optimal": frac, "b_speedup": b64,
+               "stream_speedup": s50, "cot_stream_speedup": cot,
+               "fused_speedup": fus}
+        assert all(math.isfinite(v) for v in out.values()
+                   if isinstance(v, float)), out
+        print(json.dumps(out))
+        return out
     if csv:
         print(f"fig4_speed,{us:.0f},veds_frac_of_optimal_v5={frac:.3f},"
-              f"b64_speedup={b64:.1f},stream_r50_speedup={s50:.1f}")
+              f"b64_speedup={b64:.1f},stream_r50_speedup={s50:.1f},"
+              f"cot_stream_speedup={cot:.1f},fused_r50_speedup={fus:.1f}")
     for v, name, s in rows:
         print(f"#  v={v:5.1f}  {name:10s} n_success={s:.2f}")
     for name, B, rps_loop, rps_batch, speedup in brows:
         print(f"#  B={B:3d}  {name:10s} loop={rps_loop:8.1f} rounds/s  "
               f"batched={rps_batch:9.1f} rounds/s  speedup={speedup:5.1f}x")
-    for name, R, rps_blocked, rps_stream, speedup in srows:
+    for name, R, rps_blocked, rps_stream, speedup in srows + crows:
         print(f"#  R={R:3d}  {name:10s} blocked={rps_blocked:7.1f} rounds/s"
               f"  stream={rps_stream:9.1f} rounds/s  speedup={speedup:5.1f}x")
+    for name, R, rps_host, rps_fused, speedup in frows:
+        print(f"#  R={R:3d}  {name:20s} host={rps_host:8.1f} rounds/s  "
+              f"fused={rps_fused:9.1f} rounds/s  speedup={speedup:5.1f}x")
     return frac
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, one JSON line (CI quick lane)")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

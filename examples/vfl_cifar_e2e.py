@@ -2,6 +2,11 @@
 with VEDS scheduling in the loop (Fig. 10/11 pipeline, reduced rounds).
 
   PYTHONPATH=src python examples/vfl_cifar_e2e.py --rounds 15 --scheduler veds
+
+`--streaming` runs the fused engine instead (DESIGN.md §10): the whole
+run — scheduling, minibatch gather, local SGD, aggregation — compiles
+into one `lax.scan` program per eval segment; `--host-gather` keeps the
+per-round host loop for comparison.
 """
 import argparse
 
@@ -22,6 +27,14 @@ def main():
                     help="rounds scheduled per batched XLA dispatch")
     ap.add_argument("--iid", action="store_true")
     ap.add_argument("--noise", type=float, default=2.0)
+    ap.add_argument("--streaming", action="store_true",
+                    help="fused one-scan engine (scheduling + training)")
+    ap.add_argument("--host-gather", action="store_true",
+                    help="streaming scheduling, per-round host training")
+    ap.add_argument("--unroll", type=int, default=3,
+                    help="fused rounds unrolled per scan step (CPU "
+                         "while-loop bodies lose intra-op threading; "
+                         "unrolling keeps the conv grads multithreaded)")
     args = ap.parse_args()
 
     key = jax.random.key(0)
@@ -32,7 +45,10 @@ def main():
 
     params = materialize(jax.random.fold_in(key, 3), cnn_decl())
     sim = FLSimConfig(rounds=args.rounds, scheduler=args.scheduler,
-                      round_batch=args.round_batch)
+                      round_batch=args.round_batch,
+                      streaming=args.streaming or args.host_gather,
+                      fused=not args.host_gather,
+                      fused_unroll=args.unroll)
     eval_fn = jax.jit(lambda p: cnn_accuracy(p, {"x": xt, "y": yt}))
     hist = run_fl(jax.random.fold_in(key, 4), params,
                   lambda p, b: cnn_loss(p, b), client_data, sim,

@@ -6,11 +6,13 @@ drift-plus-penalty machinery, convex solvers (Prop. 1 closed form +
 interior-point P4), and the single-cell/batched scenario builders.
 """
 from repro.core.lyapunov import VedsParams, sigmoid_shifted, sigmoid_weight  # noqa: F401
-from repro.core.scheduler import RoundOutputs, Scheduler, SchedulerCarry  # noqa: F401
+from repro.core.scheduler import (RolloutCarry, RoundOutputs,  # noqa: F401
+                                  Scheduler, SchedulerCarry)
 from repro.core.veds import RoundInputs, veds_round, solve_slot  # noqa: F401
 from repro.core.baselines import SCHEDULERS, get_scheduler  # noqa: F401
 from repro.core.scenario import (FleetState, ScenarioParams,  # noqa: F401
                                  fleet_round, init_fleet, make_round,
                                  make_round_batch, rollout_rounds)
 from repro.core.streaming import (StreamConfig, StreamResult,  # noqa: F401
-                                  stream_rounds)
+                                  round_keys, sched_round_step,
+                                  sched_state0, stream_rounds)

@@ -158,6 +158,9 @@ class FleetState:
                        gathered into the scheduler carry for whichever
                        role the vehicle plays this round
       rsu_xy [B,2]     static RSU placement per cell
+      covered [B,N]    bool: in coverage at the *previous* round start —
+                       with `handover_delay`, vehicles entering coverage
+                       mid-round become eligible only the next round
     """
     pos: jax.Array
     dir: jax.Array
@@ -167,6 +170,7 @@ class FleetState:
     energy: jax.Array
     queue: jax.Array
     rsu_xy: jax.Array
+    covered: jax.Array
 
     @property
     def batch_size(self) -> int:
@@ -210,28 +214,36 @@ def init_fleet(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
                                    maxval=sc.e_max)
     energy = (jnp.full((B, N), jnp.inf) if energy_horizon is None
               else allowance * float(energy_horizon))
+    covered = jnp.linalg.norm(st["pos"] - rsu[:, None], axis=-1) \
+        <= mob.coverage
     return FleetState(pos=st["pos"], dir=st["dir"], speed=st["speed"],
                       jitter=jitter, allowance=allowance, energy=energy,
-                      queue=jnp.zeros((B, N)), rsu_xy=rsu)
+                      queue=jnp.zeros((B, N)), rsu_xy=rsu, covered=covered)
 
 
 def _fleet_cell_round(key: jax.Array, pos, d, speed, jitter, allowance,
-                      energy, rsu_xy, sc: ScenarioParams,
+                      energy, rsu_xy, covered_prev, sc: ScenarioParams,
                       mob: ManhattanParams, ch: ChannelParams,
-                      prm: VedsParams):
+                      prm: VedsParams, handover_delay: bool = False):
     """One cell, one round: drive the pool T slots, select roles by
-    coverage at round start, draw channels for the selected vehicles."""
+    coverage at round start, draw channels for the selected vehicles.
+
+    With `handover_delay`, a vehicle is eligible only if it was already
+    in coverage at the *previous* round start (`covered_prev`): vehicles
+    entering coverage mid-round sit out the round after their handover
+    completes and join the round after (one-round lag)."""
     S, U, T = sc.n_sov, sc.n_opv, sc.n_slots
     k_mob, k_ch = jax.random.split(key)
     st, traj = rollout_positions(k_mob, {"pos": pos, "dir": d,
                                          "speed": speed}, mob, T, prm.slot)
-    # coverage-driven re-selection: in-coverage vehicles first (stable sort
+    # coverage-driven re-selection: eligible vehicles first (stable sort
     # keeps index order, so vehicles keep their role while they stay in
     # coverage); the first S are SOVs, the next U are OPVs
     cov0 = jnp.linalg.norm(pos - rsu_xy, axis=-1) <= mob.coverage
-    order = jnp.argsort(jnp.where(cov0, 0, 1), stable=True)
+    elig = cov0 & covered_prev if handover_delay else cov0
+    order = jnp.argsort(jnp.where(elig, 0, 1), stable=True)
     sov_idx, opv_idx = order[:S], order[S:S + U]
-    valid_sov, valid_opv = cov0[sov_idx], cov0[opv_idx]
+    valid_sov, valid_opv = elig[sov_idx], elig[opv_idx]
 
     traj_s, traj_u = traj[:, sov_idx], traj[:, opv_idx]     # [T,S,2]/[T,U,2]
     d_rsu_s = jnp.linalg.norm(traj_s - rsu_xy, axis=-1)     # [T,S]
@@ -256,40 +268,44 @@ def _fleet_cell_round(key: jax.Array, pos, d, speed, jitter, allowance,
         e_sov=budget[sov_idx] * valid_sov,
         e_opv=budget[opv_idx] * valid_opv,
         valid_sov=valid_sov, valid_opv=valid_opv)
-    return st, rnd, sov_idx, opv_idx
+    return st, rnd, sov_idx, opv_idx, cov0
 
 
 def fleet_round(key: jax.Array, fleet: FleetState, sc: ScenarioParams,
                 mob: ManhattanParams, ch: ChannelParams,
-                prm: VedsParams) -> Tuple[FleetState, RoundInputs,
-                                          FleetSelection]:
+                prm: VedsParams, *,
+                handover_delay: bool = False
+                ) -> Tuple[FleetState, RoundInputs, FleetSelection]:
     """Advance every cell's pool one round and build the batched
     RoundInputs for the selected SOVs/OPVs. Queue/energy fields of the
     returned FleetState are untouched — the streaming engine scatters the
-    scheduler's outputs back (see `repro.core.streaming`)."""
+    scheduler's outputs back (see `repro.core.streaming`); `covered` is
+    refreshed to this round's start-of-round coverage."""
     B = fleet.batch_size
     keys = jax.random.split(key, B)
-    st, rnd, sov_idx, opv_idx = jax.vmap(
-        lambda k, p, d, s, j, a, e, r: _fleet_cell_round(
-            k, p, d, s, j, a, e, r, sc, mob, ch, prm))(
+    st, rnd, sov_idx, opv_idx, cov0 = jax.vmap(
+        lambda k, p, d, s, j, a, e, r, c: _fleet_cell_round(
+            k, p, d, s, j, a, e, r, c, sc, mob, ch, prm,
+            handover_delay=handover_delay))(
         keys, fleet.pos, fleet.dir, fleet.speed, fleet.jitter,
-        fleet.allowance, fleet.energy, fleet.rsu_xy)
+        fleet.allowance, fleet.energy, fleet.rsu_xy, fleet.covered)
     new_fleet = dataclasses.replace(fleet, pos=st["pos"], dir=st["dir"],
-                                    speed=st["speed"])
+                                    speed=st["speed"], covered=cov0)
     return new_fleet, rnd, FleetSelection(sov_idx, opv_idx)
 
 
 def rollout_rounds(key: jax.Array, fleet: FleetState, sc: ScenarioParams,
                    mob: ManhattanParams, ch: ChannelParams, prm: VedsParams,
-                   n_rounds: int) -> Tuple[FleetState, RoundInputs,
-                                           FleetSelection]:
+                   n_rounds: int, *, handover_delay: bool = False
+                   ) -> Tuple[FleetState, RoundInputs, FleetSelection]:
     """R resumable rounds of one persistent fleet, as one scan: returns
     (final fleet, RoundInputs [R, B, T, ...], FleetSelection [R, B, ...]).
 
     This is the scenario-layer view of the streaming engine — scheduling
     not included (use `repro.core.streaming.stream_rounds` to fuse it)."""
     def body(fl, k):
-        fl, rnd, sel = fleet_round(k, fl, sc, mob, ch, prm)
+        fl, rnd, sel = fleet_round(k, fl, sc, mob, ch, prm,
+                                   handover_delay=handover_delay)
         return fl, (rnd, sel)
     fleet, (rnds, sels) = jax.lax.scan(
         body, fleet, jax.random.split(key, n_rounds))

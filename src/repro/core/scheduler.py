@@ -19,7 +19,7 @@ zero — the seed's single-round semantics, bit-for-bit.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional, Protocol, runtime_checkable
+from typing import Any, Iterator, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +44,27 @@ class SchedulerCarry:
         """Fresh queues matching `rnd`'s fleet shape (seed semantics)."""
         return SchedulerCarry(qs=jnp.zeros(rnd.e_sov.shape),
                               qu=jnp.zeros(rnd.e_opv.shape))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RolloutCarry:
+    """Scan carry of a fused multi-round rollout (DESIGN.md §10).
+
+    A scheduling-only rollout (`repro.core.streaming.stream_rounds`)
+    threads just `sched` — a `SchedulerCarry` in fresh-fleet mode, a
+    persistent `FleetState` otherwise. The fused training engine
+    (`repro.fl.engine.fused_rollout`) extends the *same* carry with the
+    global model parameters and optimizer state, so scheduling, the
+    minibatch gather, local SGD and aggregation ride one `lax.scan`.
+
+      sched      SchedulerCarry (virtual queues) or FleetState
+      params     global model pytree, leading [B] cell axis (or None)
+      opt_state  optimizer state pytree, leading [B] cell axis (or None)
+    """
+    sched: Any
+    params: Any = None
+    opt_state: Any = None
 
 
 def init_queues(rnd, carry: Optional[SchedulerCarry]):

@@ -12,26 +12,38 @@ an XLA dispatch.
 each scan step advances the persistent `FleetState` (mobility + residual
 energy + per-vehicle virtual queues), re-selects SOVs/OPVs by coverage,
 draws channels, runs the scheduler with the carried queues, and scatters
-queue/energy updates back into the fleet. Two axes of configuration:
+queue/energy updates back into the fleet. Axes of configuration:
 
-  fresh_fleet   True  -> re-draw an independent fleet per round with the
-                         blocked path's exact per-round RNG schedule
-                         (`fold_in(key, r)` -> `make_round_batch`); with
-                         `carry_queues=False` this reproduces the blocked
-                         results while paying ONE dispatch for R rounds.
-                False -> thread one persistent fleet (time-correlated
-                         trajectories, coverage-driven re-selection).
-  carry_queues  True  -> virtual queues persist round-to-round (the
-                         long-term energy constraint is actually
-                         long-term). False -> queues reset each round
-                         (seed semantics, default).
+  fresh_fleet    True  -> re-draw an independent fleet per round with the
+                          blocked path's exact per-round RNG schedule
+                          (`fold_in(key, r)` -> `make_round_batch`); with
+                          `carry_queues=False` this reproduces the blocked
+                          results while paying ONE dispatch for R rounds.
+                 False -> thread one persistent fleet (time-correlated
+                          trajectories, coverage-driven re-selection).
+  carry_queues   True  -> virtual queues persist round-to-round (the
+                          long-term energy constraint is actually
+                          long-term). False -> queues reset each round
+                          (seed semantics, default).
+  handover_delay persistent mode: vehicles entering coverage mid-round
+                 become eligible only the *next* round (one-round lag on
+                 coverage re-selection).
+  round_chunk    fresh-fleet, carry_queues=False only: solve `round_chunk`
+                 rounds per scan step as one widened cell batch, so the
+                 per-candidate P4 interior-point solves are batched
+                 *across rounds* inside the scan — this is what makes
+                 full VEDS+COT streaming cheap enough to measure
+                 (`benchmarks/fig4_speed.cot_stream_sweep`).
 
-See DESIGN.md §9 for the layout and carry contract.
+The per-round scheduling step is exposed as `sched_state0` /
+`sched_round_step` / `round_keys` so the fused training engine
+(`repro.fl.engine`) can run the *same* scheduling program with model
+parameters threaded alongside (DESIGN.md §9/§10).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +66,8 @@ class StreamConfig:
     hetero_fleet: bool = False      # fresh-fleet mode: pad fleets per cell
     n_fleet: Optional[int] = None   # persistent pool size (default 2(S+U))
     energy_horizon: Optional[float] = None  # battery, in rounds of budget
+    handover_delay: bool = False    # persistent mode: one-round lag on entry
+    round_chunk: int = 1            # fresh mode: rounds solved per scan step
 
 
 class StreamResult(NamedTuple):
@@ -74,6 +88,90 @@ def _zero_carry(sc: ScenarioParams, B: int) -> SchedulerCarry:
                           qu=jnp.zeros((B, sc.n_opv)))
 
 
+SchedState = Union[FleetState, SchedulerCarry]
+
+
+def validate_stream_config(cfg: StreamConfig) -> None:
+    """Reject silently-ignorable flag combinations up front."""
+    if cfg.fresh_fleet and cfg.handover_delay:
+        raise ValueError("handover_delay needs the persistent fleet's "
+                         "coverage memory (fresh_fleet=False)")
+
+
+def round_keys(key: jax.Array, cfg: StreamConfig, n_rounds: int,
+               r0: int = 0) -> jax.Array:
+    """Per-round scheduling keys [n_rounds] — the xs of the rollout scan.
+
+    Fresh-fleet mode uses the blocked path's exact per-round RNG schedule
+    (`fold_in(key, r)` for the *absolute* round index); persistent mode
+    splits the key once for the whole run. Segmented callers (e.g. the
+    fused engine between eval points) build the full run's keys once and
+    slice, so a segmented rollout replays the one-scan schedule.
+    """
+    if cfg.fresh_fleet:
+        return jax.vmap(lambda r: jax.random.fold_in(key, r))(
+            jnp.arange(r0, r0 + n_rounds))
+    assert r0 == 0, "persistent mode: build the full run's keys and slice"
+    return jax.random.split(key, n_rounds)
+
+
+def sched_state0(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
+                 cfg: StreamConfig,
+                 fleet: Optional[FleetState] = None) -> SchedState:
+    """Initial scheduling-side scan carry: a zero `SchedulerCarry` in
+    fresh-fleet mode, a (possibly freshly initialized) `FleetState` in
+    persistent mode. `key` must be the same key later given to
+    `round_keys` so a rollout is reproducible from its arguments."""
+    if cfg.fresh_fleet:
+        return _zero_carry(sc, int(cfg.batch))
+    if fleet is None:
+        fleet = init_fleet(jax.random.fold_in(key, 0xF1EE7), sc, mob,
+                           int(cfg.batch), n_fleet=cfg.n_fleet,
+                           energy_horizon=cfg.energy_horizon)
+    return fleet
+
+
+def sched_round_step(state: SchedState, k: jax.Array, sched: Scheduler,
+                     sc: ScenarioParams, mob: ManhattanParams,
+                     ch: ChannelParams, prm: VedsParams, cfg: StreamConfig):
+    """One round of scheduling inside the scan: advance the fleet (or
+    draw a fresh one from `k`), run the scheduler with the carried
+    queues, scatter queue/energy updates back. Returns
+    (state', RoundOutputs)."""
+    if cfg.fresh_fleet:
+        rnd = make_round_batch(k, sc, mob, ch, prm, int(cfg.batch),
+                               hetero_fleet=cfg.hetero_fleet)
+        out = sched.solve_round(rnd, prm, ch,
+                                state if cfg.carry_queues else None)
+        return out.carry, out
+
+    fl, rnd, sel = fleet_round(k, state, sc, mob, ch, prm,
+                               handover_delay=cfg.handover_delay)
+    B = fl.batch_size
+    rows = jnp.arange(B)[:, None]
+    qs_old = jnp.take_along_axis(fl.queue, sel.sov_idx, axis=1)
+    qu_old = jnp.take_along_axis(fl.queue, sel.opv_idx, axis=1)
+    c_in = (SchedulerCarry(qs=qs_old, qu=qu_old)
+            if cfg.carry_queues else None)
+    out = sched.solve_round(rnd, prm, ch, c_in)
+    # scatter the round-end queues back to the fleet slots that played
+    # this round (padded selections keep their old queue), and drain
+    # the residual batteries by the energy actually spent
+    queue = fl.queue
+    if cfg.carry_queues:
+        queue = queue.at[rows, sel.sov_idx].set(
+            jnp.where(rnd.valid_sov, out.carry.qs, qs_old))
+        queue = queue.at[rows, sel.opv_idx].set(
+            jnp.where(rnd.valid_opv, out.carry.qu, qu_old))
+    energy = fl.energy.at[rows, sel.sov_idx].add(
+        -jnp.where(rnd.valid_sov, out.energy_sov, 0.0))
+    energy = energy.at[rows, sel.opv_idx].add(
+        -jnp.where(rnd.valid_opv, out.energy_opv, 0.0))
+    fl = dataclasses.replace(fl, queue=queue,
+                             energy=jnp.maximum(energy, 0.0))
+    return fl, out
+
+
 def stream_rounds(key: jax.Array, sched: Scheduler, sc: ScenarioParams,
                   mob: ManhattanParams, ch: ChannelParams, prm: VedsParams,
                   cfg: StreamConfig,
@@ -84,56 +182,52 @@ def stream_rounds(key: jax.Array, sched: Scheduler, sc: ScenarioParams,
     """
     B = int(cfg.batch)
     R = int(cfg.n_rounds)
+    validate_stream_config(cfg)
+    if int(cfg.round_chunk) > 1:
+        return _stream_fresh_chunked(key, sched, sc, mob, ch, prm, cfg,
+                                     B, R)
+    state0 = sched_state0(key, sc, mob, cfg, fleet)
+    state, outs = jax.lax.scan(
+        lambda s, k: sched_round_step(s, k, sched, sc, mob, ch, prm, cfg),
+        state0, round_keys(key, cfg, R))
     if cfg.fresh_fleet:
-        return _stream_fresh(key, sched, sc, mob, ch, prm, cfg, B, R)
-    if fleet is None:
-        fleet = init_fleet(jax.random.fold_in(key, 0xF1EE7), sc, mob, B,
-                           n_fleet=cfg.n_fleet,
-                           energy_horizon=cfg.energy_horizon)
-
-    def body(fl: FleetState, k):
-        fl, rnd, sel = fleet_round(k, fl, sc, mob, ch, prm)
-        rows = jnp.arange(B)[:, None]
-        qs_old = jnp.take_along_axis(fl.queue, sel.sov_idx, axis=1)
-        qu_old = jnp.take_along_axis(fl.queue, sel.opv_idx, axis=1)
-        c_in = (SchedulerCarry(qs=qs_old, qu=qu_old)
-                if cfg.carry_queues else None)
-        out = sched.solve_round(rnd, prm, ch, c_in)
-        # scatter the round-end queues back to the fleet slots that played
-        # this round (padded selections keep their old queue), and drain
-        # the residual batteries by the energy actually spent
-        queue = fl.queue
-        if cfg.carry_queues:
-            queue = queue.at[rows, sel.sov_idx].set(
-                jnp.where(rnd.valid_sov, out.carry.qs, qs_old))
-            queue = queue.at[rows, sel.opv_idx].set(
-                jnp.where(rnd.valid_opv, out.carry.qu, qu_old))
-        energy = fl.energy.at[rows, sel.sov_idx].add(
-            -jnp.where(rnd.valid_sov, out.energy_sov, 0.0))
-        energy = energy.at[rows, sel.opv_idx].add(
-            -jnp.where(rnd.valid_opv, out.energy_opv, 0.0))
-        fl = dataclasses.replace(fl, queue=queue,
-                                 energy=jnp.maximum(energy, 0.0))
-        return fl, out
-
-    fleet, outs = jax.lax.scan(body, fleet, jax.random.split(key, R))
-    return StreamResult(outputs=outs, fleet=fleet,
+        return StreamResult(outputs=outs, fleet=None, carry=state)
+    return StreamResult(outputs=outs, fleet=state,
                         carry=jax.tree.map(lambda x: x[-1], outs.carry))
 
 
-def _stream_fresh(key, sched, sc, mob, ch, prm, cfg: StreamConfig,
-                  B: int, R: int) -> StreamResult:
-    """Fresh-fleet mode: round r draws `make_round_batch(fold_in(key, r))`
-    — the blocked dispatch path's exact RNG schedule — inside the scan, so
-    `carry_queues=False` reproduces the blocked results in one dispatch.
-    With `carry_queues=True` the queue identity is positional (SOV slot i
-    of round r carries to slot i of round r+1)."""
-    def body(c: SchedulerCarry, r):
-        rnd = make_round_batch(jax.random.fold_in(key, r), sc, mob, ch,
-                               prm, B, hetero_fleet=cfg.hetero_fleet)
-        out = sched.solve_round(rnd, prm, ch,
-                                c if cfg.carry_queues else None)
-        return out.carry, out
+def _stream_fresh_chunked(key, sched, sc, mob, ch, prm, cfg: StreamConfig,
+                          B: int, R: int) -> StreamResult:
+    """Fresh-fleet mode with `round_chunk = C > 1`: the scan runs R / C
+    steps, each drawing C rounds' cells (per-round RNG schedule intact:
+    cell block j of chunk c is round c * C + j) and solving them as ONE
+    widened [C * B] batch — the P4 interior-point candidate solves are
+    batched across rounds, which is what makes full VEDS+COT streaming
+    tractable. Incompatible with `carry_queues` (rounds inside a chunk
+    are solved in parallel, so queues cannot thread through them)."""
+    C = int(cfg.round_chunk)
+    if not cfg.fresh_fleet:
+        raise ValueError("round_chunk > 1 requires fresh_fleet=True")
+    if cfg.carry_queues:
+        raise ValueError("round_chunk > 1 solves chunk rounds in parallel "
+                         "and cannot thread carry_queues")
+    if R % C:
+        raise ValueError(f"n_rounds={R} not divisible by round_chunk={C}")
 
-    carry, outs = jax.lax.scan(body, _zero_carry(sc, B), jnp.arange(R))
-    return StreamResult(outputs=outs, fleet=None, carry=carry)
+    def body(carry, c0):
+        rs = c0 * C + jnp.arange(C)
+        keys = jax.vmap(lambda r: jax.random.fold_in(key, r))(rs)
+        rnds = jax.vmap(lambda k: make_round_batch(
+            k, sc, mob, ch, prm, B, hetero_fleet=cfg.hetero_fleet))(keys)
+        wide = jax.tree.map(
+            lambda x: x.reshape((C * B,) + x.shape[2:]), rnds)
+        out = sched.solve_round(wide, prm, ch, None)
+        out = jax.tree.map(lambda x: x.reshape((C, B) + x.shape[1:]), out)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, jnp.zeros((), jnp.int32),
+                           jnp.arange(R // C))
+    outs = jax.tree.map(
+        lambda x: x.reshape((R,) + x.shape[2:]), outs)
+    return StreamResult(outputs=outs, fleet=None,
+                        carry=jax.tree.map(lambda x: x[-1], outs.carry))

@@ -67,6 +67,48 @@ def partition_labels(labels: np.ndarray, n_clients: int,
             for p in parts]
 
 
+def pad_client_shards_np(client_data) -> Tuple[Dict[str, np.ndarray],
+                                               np.ndarray]:
+    """Host-side padding: stack ragged per-client dicts-of-arrays into
+    the padded layout (DESIGN.md §10) as numpy arrays — every leaf
+    becomes `[C, n_max, ...]` and `n_samples [C]` holds the true
+    (unpadded) per-client counts. The simulator's host-gather paths use
+    this directly so a blocked run never uploads the dataset to device.
+
+    Padding rows are zeros and are never sampled — minibatch indices are
+    drawn against the true counts, and aggregation weights use the true
+    counts too, so a padded (or empty) client cannot move the global
+    model. Clients must share the same set of array keys; a client may
+    be empty (0 samples).
+    """
+    counts = np.array(
+        [int(next(iter(d.values())).shape[0]) if d else 0
+         for d in client_data], np.int32)
+    n_max = max(int(counts.max(initial=0)), 1)
+    # schema from the first non-empty client: a client may be an empty
+    # dict, and the whole dataset must not silently vanish with it
+    keys = next((list(d.keys()) for d in client_data if d), [])
+    data = {}
+    for k in keys:
+        ref = next(np.asarray(d[k]) for d in client_data if d)
+        out = np.zeros((len(client_data), n_max) + ref.shape[1:],
+                       ref.dtype)
+        for c, d in enumerate(client_data):
+            if d:
+                a = np.asarray(d[k])
+                out[c, :a.shape[0]] = a
+        data[k] = out
+    return data, counts
+
+
+def pad_client_shards(client_data) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """`pad_client_shards_np` placed on device (the fused engine's
+    layout)."""
+    data, counts = pad_client_shards_np(client_data)
+    return ({k: jnp.asarray(v) for k, v in data.items()},
+            jnp.asarray(counts))
+
+
 # ---------------------------------------------------------------------------
 # Argoverse-like trajectories
 # ---------------------------------------------------------------------------

@@ -1,2 +1,4 @@
 from repro.fl.vfl import make_vfl_round, vehicle_axes  # noqa: F401
 from repro.fl.simulator import FLSimConfig, run_fl  # noqa: F401
+from repro.fl.engine import (ClientShards, FusedResult,  # noqa: F401
+                             fedavg_apply, fused_rollout, init_carry)

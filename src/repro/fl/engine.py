@@ -1,0 +1,241 @@
+"""Fused on-device FL training engine: one XLA program per run.
+
+The paper's pipeline is one loop — schedule (Algorithm 2), train locally
+(eq. 2), aggregate (eq. 11) — and this module compiles it as one loop:
+`fused_rollout` runs the *same* per-round scheduling step as
+`repro.core.streaming` (mobility -> coverage re-selection -> channels ->
+`solve_round` -> queue/energy carry) and, inside the same `lax.scan`
+step, gathers each selected client's minibatch from the padded
+`[C, n_max, ...]` shard layout, takes one local SGD step per client
+(FedSGD batching: for one local step, FedAvg of models == FedSGD of
+gradients), and applies the mask-weighted aggregation. The scan carry is
+a `RolloutCarry`: the scheduler-side state (virtual queues / persistent
+fleet) threaded alongside the global model parameters and optimizer
+state. See DESIGN.md §10.
+
+Client data is padded, not ragged: `ClientShards` holds every client's
+shard at a common `n_max` with the true sample counts in `n_samples`.
+Minibatch indices are drawn against the true counts and aggregation
+weights are the true counts, so padding rows are never sampled and a
+client with zero samples never moves the global model (its weight is 0
+and its gradient is hard-zeroed before the weighted average — even NaNs
+from garbage padding cannot leak in).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.channel.mobility import ManhattanParams
+from repro.channel.v2x import ChannelParams
+from repro.core.lyapunov import VedsParams
+from repro.core.scenario import FleetState, ScenarioParams
+from repro.core.scheduler import (RolloutCarry, RoundOutputs, Scheduler,
+                                  SchedulerCarry)
+from repro.core.streaming import (StreamConfig, sched_round_step,
+                                  sched_state0, validate_stream_config)
+from repro.data.synthetic import pad_client_shards
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ClientShards:
+    """Padded client shards: every leaf of `data` is `[C, n_max, ...]`;
+    `n_samples [C]` holds the true (unpadded) per-client counts used for
+    minibatch index draws and aggregation weights."""
+    data: Dict[str, jax.Array]
+    n_samples: jax.Array
+
+    @property
+    def n_clients(self) -> int:
+        return self.n_samples.shape[0]
+
+    @property
+    def n_max(self) -> int:
+        return next(iter(self.data.values())).shape[1]
+
+    @staticmethod
+    def from_ragged(client_data) -> "ClientShards":
+        """Pad a list of per-client dict-of-arrays shards."""
+        data, n = pad_client_shards(client_data)
+        return ClientShards(data=data, n_samples=n)
+
+
+class FusedResult(NamedTuple):
+    """One fused rollout segment's results.
+
+      params     global model, leading [B] cell axis
+      opt_state  optimizer state, leading [B] cell axis (None for SGD)
+      outputs    RoundOutputs stacked [R, B, ...]
+      loss       [R, B] weighted mean local training loss per round
+      fleet      final FleetState (None in fresh-fleet mode)
+      carry      final round's queue state [B, S]/[B, U]
+    """
+    params: Any
+    opt_state: Any
+    outputs: RoundOutputs
+    loss: jax.Array
+    fleet: Optional[FleetState]
+    carry: SchedulerCarry
+
+
+def replicate(tree, batch: int):
+    """Broadcast a pytree to a leading [B] cell axis (fused layout)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (batch,) + x.shape), tree)
+
+
+def fedavg_grads(grads_stack, mask: jax.Array, weights: jax.Array,
+                 clip: float = 5.0):
+    """Mask-weighted FedSGD gradient average (eq. 11 on gradients).
+
+    grads_stack: per-client grads, leading [S] axis on every leaf;
+    mask [S] success indicators; weights [S] true sample counts.
+    Returns (avg, scale): the weighted average gradient and the scalar
+    `ok * clip_factor` to fold into the update (ok = 0 when every upload
+    failed, keeping the previous global model). Clients with zero weight
+    are hard-zeroed before the average so NaN gradients (e.g. from an
+    empty padded client) cannot poison the update.
+    """
+    w = mask * weights
+    den = jnp.maximum(w.sum(), 1e-9)
+
+    def _avg(g):
+        wb = w.reshape(w.shape + (1,) * (g.ndim - 1))
+        return jnp.einsum("s,s...->...", w, jnp.where(wb > 0, g, 0.0)) / den
+
+    avg = jax.tree.map(_avg, grads_stack)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                      for g in jax.tree.leaves(avg)))
+    c = jnp.minimum(1.0, clip / (gn + 1e-9))
+    ok = (w.sum() > 0).astype(jnp.float32)
+    return avg, ok * c
+
+
+def fedavg_apply(params, grads_stack, mask, weights, *, lr: float,
+                 clip: float = 5.0, opt=None, opt_state=None, step=0):
+    """One aggregated global update from a stack of per-client grads.
+
+    With `opt=None` this is the plain SGD rule the blocked simulator
+    uses; with an `(init, update)` optimizer pair from `repro.optim` the
+    clipped weighted-average gradient is fed through `update` instead.
+    Returns (new_params, new_opt_state).
+    """
+    avg, scale = fedavg_grads(grads_stack, mask, weights, clip=clip)
+    gsc = jax.tree.map(lambda g: scale * g, avg)
+    if opt is None:
+        return jax.tree.map(lambda p, g: p - lr * g, params, gsc), opt_state
+    return opt[1](params, gsc, opt_state, step)
+
+
+def minibatch_indices(u: jax.Array, n: jax.Array) -> jax.Array:
+    """Uniform draws `u [..., batch]` -> sample indices against the true
+    per-client counts `n [...]` (empty clients pin to row 0, which their
+    zero aggregation weight then discards)."""
+    nf = n.astype(jnp.float32)[..., None]
+    idx = (u * nf).astype(jnp.int32)
+    return jnp.minimum(idx, jnp.maximum(n[..., None] - 1, 0))
+
+
+def local_grads(params, loss_fn: Callable, shards: ClientShards,
+                sel: jax.Array, u: jax.Array):
+    """Gather each selected client's minibatch from the padded layout and
+    take per-client loss + gradient (eq. 2, one local step, vmapped over
+    the [S] selected clients). sel [S] client ids; u [S, batch] uniforms.
+    Returns (losses [S], grads with leading [S], weights [S])."""
+    n = shards.n_samples[sel]                                # [S]
+    idx = minibatch_indices(u, n)                            # [S, bs]
+    mb = jax.tree.map(lambda a: a[sel[:, None], idx], shards.data)
+    losses, grads = jax.vmap(jax.value_and_grad(loss_fn),
+                             in_axes=(None, 0))(params, mb)
+    return losses, grads, n.astype(jnp.float32)
+
+
+def init_carry(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
+               cfg: StreamConfig, params, *, opt=None,
+               fleet: Optional[FleetState] = None) -> RolloutCarry:
+    """Initial fused-rollout carry: scheduling state (per `cfg`) plus the
+    model replicated over the [B] cell axis (and optimizer state when an
+    `(init, update)` pair is given). `key` must match the key later fed
+    to `round_keys` for the rollout to be reproducible."""
+    B = int(cfg.batch)
+    opt_state = None if opt is None else replicate(opt[0](params), B)
+    return RolloutCarry(sched=sched_state0(key, sc, mob, cfg, fleet),
+                        params=replicate(params, B), opt_state=opt_state)
+
+
+def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
+                  sched: Scheduler, sc: ScenarioParams,
+                  mob: ManhattanParams, ch: ChannelParams, prm: VedsParams,
+                  cfg: StreamConfig, loss_fn: Callable,
+                  shards: ClientShards, carry: RolloutCarry, *,
+                  lr: float = 0.05, clip: float = 5.0, opt=None,
+                  steps: Optional[jax.Array] = None,
+                  unroll: int = 1) -> FusedResult:
+    """One `lax.scan` for a (segment of a) training run: scheduling +
+    minibatch gather + local SGD + aggregation per step.
+
+      keys  [R]            per-round scheduling keys (`round_keys`)
+      sel   [R, B, S]      client id of each cell's SOV slot per round
+      mb_u  [R, B, S, bs]  uniform minibatch draws
+      carry                `init_carry(...)` or a previous segment's
+                           (sched=fleet-or-queues, params, opt_state)
+      steps [R]            absolute round indices (optimizer schedules);
+                           defaults to arange(R)
+      unroll               rounds unrolled per scan iteration. XLA CPU
+                           executes `while`-loop bodies with degraded
+                           intra-op threading, so compute-bound local
+                           models (convs) can run an order of magnitude
+                           slower inside the scan than dispatched from
+                           the host; unrolling restores multithreaded
+                           execution at linear compile cost. Leave at 1
+                           for dispatch-bound (small-model) runs and on
+                           accelerator backends.
+
+    Resumable: feed `FusedResult`'s (fleet-or-carry, params, opt_state)
+    back as the next segment's carry with the next slice of keys/sel/mb_u
+    — a segmented rollout replays the one-scan program exactly.
+    """
+    validate_stream_config(cfg)
+    if int(cfg.round_chunk) > 1:
+        # chunked mode solves rounds in parallel — params cannot thread
+        # through them; refuse rather than silently drop the setting
+        raise ValueError("fused_rollout threads params round-to-round "
+                         "and cannot honor round_chunk > 1")
+    R = keys.shape[0]
+    if steps is None:
+        steps = jnp.arange(R)
+
+    def train_cell(p, os_, sel_c, u_c, mask_c, r):
+        losses, grads, nf = local_grads(p, loss_fn, shards, sel_c, u_c)
+        new_p, new_os = fedavg_apply(p, grads, mask_c, nf, lr=lr,
+                                     clip=clip, opt=opt, opt_state=os_,
+                                     step=r)
+        w = mask_c * nf
+        den = jnp.maximum(w.sum(), 1e-9)
+        loss = jnp.sum(jnp.where(w > 0, losses * w, 0.0)) / den
+        return new_p, new_os, loss
+
+    def body(c: RolloutCarry, x):
+        k, sel_r, u_r, r = x
+        st, out = sched_round_step(c.sched, k, sched, sc, mob, ch, prm,
+                                   cfg)
+        mask = out.success.astype(jnp.float32)               # [B, S]
+        in_axes = (0, None if c.opt_state is None else 0, 0, 0, 0, None)
+        new_p, new_os, loss = jax.vmap(train_cell, in_axes=in_axes)(
+            c.params, c.opt_state, sel_r, u_r, mask, r)
+        if c.opt_state is None:
+            new_os = None
+        return RolloutCarry(sched=st, params=new_p,
+                            opt_state=new_os), (out, loss)
+
+    end, (outs, losses) = jax.lax.scan(body, carry,
+                                       (keys, sel, mb_u, steps),
+                                       unroll=min(int(unroll), R))
+    fleet = None if cfg.fresh_fleet else end.sched
+    return FusedResult(params=end.params, opt_state=end.opt_state,
+                       outputs=outs, loss=losses, fleet=fleet,
+                       carry=jax.tree.map(lambda x: x[-1], outs.carry))

@@ -7,6 +7,10 @@ per round (eq. 2), success decided by the chosen scheduler, aggregation by
 how we batch clients: one vmapped gradient call over the stacked per-client
 minibatches per round.
 
+Client data is held in the padded `[C, n_max, ...]` `ClientShards` layout
+(ragged per-client dicts are padded on entry); per-client aggregation
+weights always use the true (unpadded) sample counts.
+
 With `round_batch = B > 1`, scenario generation and scheduling run for B
 rounds per dispatch: the block is a vmapped stack of the *same* per-round
 draws the B = 1 path makes (`fold_in(key, r)` per round), so the history
@@ -14,17 +18,23 @@ is identical for every `round_batch` — the knob only amortizes XLA
 dispatch. A trailing partial block schedules exactly the remaining rounds,
 never a padded batch.
 
-With `streaming = True`, the whole run's scheduling is ONE compiled
-program (`repro.core.streaming.stream_rounds`): a persistent fleet drives
-through coverage round-to-round, the virtual energy queues carry
-(`carry_queues`), and client sampling moves on-device via `jax.random`
-(a permutation per round + uniform minibatch draws) instead of the host
-NumPy generator.
+With `streaming = True`, the whole run — scheduling AND training — is the
+fused engine's single `lax.scan` program (`repro.fl.engine.fused_rollout`):
+a persistent fleet drives through coverage round-to-round, the virtual
+energy queues carry (`carry_queues`), client sampling is on-device
+(`jax.random` permutation per round + uniform minibatch draws), and the
+model parameters thread the scan carry alongside the queues. The run is
+segmented only at eval points. `fused=False` keeps the previous
+host-gather streaming path (one-scan scheduling, per-round host loop for
+gather + update) as a compatibility/benchmark reference; the blocked
+(`streaming=False`) path is the thin per-round-dispatch compatibility
+mode.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List
+import functools
+from typing import Callable, Dict, List, Union
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +45,11 @@ from repro.channel.v2x import ChannelParams
 from repro.core.baselines import get_scheduler
 from repro.core.lyapunov import VedsParams
 from repro.core.scenario import ScenarioParams, make_round
-from repro.core.streaming import StreamConfig, stream_rounds
+from repro.core.scheduler import RolloutCarry
+from repro.core.streaming import (StreamConfig, round_keys,
+                                  stream_rounds)
+from repro.fl.engine import (ClientShards, fedavg_apply, fused_rollout,
+                             init_carry)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,18 +71,53 @@ class FLSimConfig:
     streaming: bool = False      # one-scan rollout + on-device sampling
     carry_queues: bool = True    # streaming: thread eqs. (19)-(20)
     n_fleet: int = 0             # streaming: pool size (0 -> 2 (S + U))
+    fused: bool = True           # streaming: train inside the same scan
+    fused_unroll: int = 1        # rounds unrolled per fused scan step —
+    #                              raise for compute-bound local models on
+    #                              CPU (loop bodies lose intra-op threads)
+    handover_delay: bool = False  # streaming: one-round coverage lag
 
 
-def _client_size(data: Dict[str, jax.Array]) -> int:
-    return data["x"].shape[0] if "x" in data else \
-        next(iter(data.values())).shape[0]
+# Bounded: keyed partly on the user's loss_fn, so a caller passing a
+# fresh lambda per run_fl call (fig10/fig12 style) gets no reuse — the
+# bound keeps those entries (compiled executables + loss closures) from
+# accumulating for the process lifetime.
+@functools.lru_cache(maxsize=32)
+def _vgrad(loss_fn: Callable):
+    """All S per-client gradients in one vmapped call (FedSGD batching);
+    cached per loss function so repeated `run_fl` calls reuse the
+    compiled program."""
+    return jax.jit(jax.vmap(jax.grad(loss_fn), in_axes=(None, 0)))
+
+
+@functools.lru_cache(maxsize=32)
+def _apply(lr: float):
+    return jax.jit(lambda params, grads, mask, weights: fedavg_apply(
+        params, grads, mask, weights, lr=lr)[0])
+
+
+@functools.lru_cache(maxsize=32)
+def _fused_segment(loss_fn: Callable, sched_name: str, sc, mob, ch, prm,
+                   cfg: StreamConfig, lr: float, unroll: int):
+    """Jitted fused-rollout segment, cached across `run_fl` calls (the
+    per-call jit wrappers would otherwise re-trace every invocation)."""
+    sched = get_scheduler(sched_name)
+
+    @jax.jit
+    def seg(carry, keys, sel, mb_u, shards, steps):
+        return fused_rollout(keys, sel, mb_u, sched, sc, mob, ch, prm,
+                             cfg, loss_fn, shards, carry, lr=lr,
+                             steps=steps, unroll=unroll)
+
+    return seg
 
 
 def run_fl(key: jax.Array, params, loss_fn: Callable,
-           client_data: List[Dict[str, jax.Array]], sim: FLSimConfig,
-           eval_fn: Callable | None = None,
+           client_data: Union[List[Dict[str, jax.Array]], ClientShards],
+           sim: FLSimConfig, eval_fn: Callable | None = None,
            eval_every: int = 5) -> Dict[str, list]:
-    """Generic FL loop. client_data: per-client dict of arrays.
+    """Generic FL loop. client_data: per-client dict of arrays (padded on
+    entry) or an already-padded `ClientShards`.
 
     Returns history: round, sim_time, n_success, eval metric, plus
     `scheduled_rounds` — the total number of rounds actually scheduled
@@ -80,21 +129,32 @@ def run_fl(key: jax.Array, params, loss_fn: Callable,
     sc = ScenarioParams(n_sov=sim.n_sov, n_opv=sim.n_opv,
                         n_slots=sim.n_slots, batch_size=sim.batch_size)
     sched = get_scheduler(sim.scheduler)
-    # all S per-client gradients in one vmapped call (FedSGD batching)
-    vgrad_fn = jax.jit(jax.vmap(jax.grad(loss_fn), in_axes=(None, 0)))
 
-    @jax.jit
-    def apply_update(params, grads_stack, mask, weights):
-        w = mask * weights
-        den = jnp.maximum(w.sum(), 1e-9)
-        avg = jax.tree.map(
-            lambda g: jnp.einsum("s,s...->...", w, g) / den, grads_stack)
-        gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
-                          for g in jax.tree.leaves(avg)))
-        clip = jnp.minimum(1.0, 5.0 / (gn + 1e-9))
-        ok = (w.sum() > 0).astype(jnp.float32)
-        return jax.tree.map(lambda p, g: p - sim.lr * ok * clip * g,
-                            params, avg)
+    if sim.streaming and sim.fused:
+        shards = (client_data if isinstance(client_data, ClientShards)
+                  else ClientShards.from_ragged(client_data))
+        return _run_fused(key, params, loss_fn, shards, sim, sc, mob, ch,
+                          prm, eval_fn, eval_every)
+
+    vgrad_fn = _vgrad(loss_fn)
+    apply_update = _apply(sim.lr)
+    # the gather paths stay host-side and zero-copy: per-client numpy
+    # views (ragged input as-is, padded input sliced back to its true
+    # counts) with explicit true-count weights — never a padded copy,
+    # never a device upload
+    if isinstance(client_data, ClientShards):
+        np_n = np.asarray(client_data.n_samples)
+        host = {k: np.asarray(v) for k, v in client_data.data.items()}
+        np_clients = [{k: v[c, :np_n[c]] for k, v in host.items()}
+                      for c in range(client_data.n_clients)]
+    else:
+        np_clients = [{k: np.asarray(v) for k, v in d.items()}
+                      for d in client_data]
+        np_n = np.array([next(iter(d.values())).shape[0] if d else 0
+                         for d in np_clients], np.int64)
+    # minibatch schema for empty clients (a client may be a bare {})
+    schema = next(({k: (v.shape[1:], v.dtype) for k, v in d.items()}
+                   for d in np_clients if d), {})
 
     history = {"round": [], "time": [], "n_success": [], "metric": [],
                "scheduled_rounds": 0}
@@ -111,15 +171,21 @@ def run_fl(key: jax.Array, params, loss_fn: Callable,
         nonlocal sim_time
         mbs, weights = [], []
         for s, ci in enumerate(sel_r):
-            data = client_data[int(ci)]
-            n = _client_size(data)
+            n = int(np_n[int(ci)])
+            if n == 0:                               # empty client: zero
+                mbs.append({                         # batch, weight 0
+                    k: np.zeros((sim.batch_size,) + shp, dt)
+                    for k, (shp, dt) in schema.items()})
+                weights.append(0.0)
+                continue
             if mb_u_r is None:                       # host-RNG contract
-                idx = rng.choice(n, size=sim.batch_size,
+                idx = rng.choice(max(n, 1), size=sim.batch_size,
                                  replace=n < sim.batch_size)
             else:                                    # on-device uniforms
-                idx = np.minimum((mb_u_r[s] * n).astype(np.int64), n - 1)
-            mbs.append({k: v[idx] for k, v in data.items()})
-            weights.append(float(n))
+                idx = np.minimum((mb_u_r[s] * n).astype(np.int64),
+                                 max(n - 1, 0))
+            mbs.append({k: v[idx] for k, v in np_clients[int(ci)].items()})
+            weights.append(float(n))                 # true sample count
         mb_stack = jax.tree.map(lambda *x: jnp.stack(x), *mbs)
         grads_stack = vgrad_fn(params, mb_stack)
         params = apply_update(params, grads_stack, mask,
@@ -138,6 +204,7 @@ def run_fl(key: jax.Array, params, loss_fn: Callable,
             params = round_step(r, masks[r], int(n_succ[r]), sel[r],
                                 mb_u[r], params)
         history["scheduled_rounds"] = sim.rounds
+        jax.block_until_ready(params)
         return history
 
     B = max(1, sim.round_batch)
@@ -160,29 +227,90 @@ def run_fl(key: jax.Array, params, loss_fn: Callable,
                                replace=False)
             params = round_step(r0 + j, mask, int(cell.n_success), sel_r,
                                 None, params)
+    jax.block_until_ready(params)
+    return history
+
+
+def _stream_cfg(sim: FLSimConfig) -> StreamConfig:
+    return StreamConfig(n_rounds=sim.rounds, batch=1,
+                        carry_queues=sim.carry_queues,
+                        n_fleet=sim.n_fleet or None,
+                        handover_delay=sim.handover_delay)
+
+
+def _stream_draws(key: jax.Array, sim: FLSimConfig):
+    """The streaming RNG contract shared by the fused and host-gather
+    paths: (k_sched, sel [R, S], mb_u [R, S, bs]) — a client permutation
+    per round plus uniform minibatch draws, all on-device."""
+    R = sim.rounds
+    k_sched, k_sel, k_mb = jax.random.split(key, 3)
+    sel = jax.vmap(
+        lambda k: jax.random.permutation(k, sim.n_clients)[:sim.n_sov]
+    )(jax.random.split(k_sel, R))                            # [R, S]
+    mb_u = jax.random.uniform(k_mb, (R, sim.n_sov, sim.batch_size))
+    return k_sched, sel, mb_u
+
+
+def _run_fused(key, params, loss_fn, shards: ClientShards,
+               sim: FLSimConfig, sc, mob, ch, prm, eval_fn, eval_every):
+    """The fused path: the whole run is `fused_rollout` scans, segmented
+    only at eval points (one segment — one dispatch — when eval_fn is
+    None)."""
+    R = sim.rounds
+    cfg = _stream_cfg(sim)
+    k_sched, sel, mb_u = _stream_draws(key, sim)
+    sel = sel[:, None]                                       # [R, 1, S]
+    mb_u = mb_u[:, None]                                     # [R, 1, S, bs]
+    keys = round_keys(k_sched, cfg, R)
+    carry = init_carry(k_sched, sc, mob, cfg, params)
+    seg_fn = _fused_segment(loss_fn, sim.scheduler, sc, mob, ch, prm,
+                            cfg, sim.lr, max(1, sim.fused_unroll))
+
+    if eval_fn is None:
+        cuts = [R]
+    else:
+        evals = [r for r in range(R)
+                 if r % eval_every == 0 or r == R - 1]
+        cuts = [e + 1 for e in evals]
+
+    history = {"round": [], "time": [], "n_success": [], "metric": [],
+               "scheduled_rounds": R}
+    r0 = 0
+    for cut in cuts:
+        res = seg_fn(carry, keys[r0:cut], sel[r0:cut], mb_u[r0:cut],
+                     shards, jnp.arange(r0, cut))
+        carry = RolloutCarry(
+            sched=res.fleet if res.fleet is not None else res.carry,
+            params=res.params, opt_state=res.opt_state)
+        if eval_fn is not None:
+            r = cut - 1
+            history["round"].append(r)
+            history["time"].append((r + 1) * sim.n_slots * prm.slot)
+            history["n_success"].append(int(res.outputs.n_success[-1, 0]))
+            history["metric"].append(float(eval_fn(
+                jax.tree.map(lambda x: x[0], res.params))))
+        r0 = cut
+    # run_fl reports a *finished* run: without eval there is no host sync
+    # above, so block before returning (also keeps timing honest)
+    jax.block_until_ready(carry.params)
     return history
 
 
 def _streaming_schedule(key, sim: FLSimConfig, sc, mob, ch, prm, sched):
-    """One compiled program for the whole run's scheduling + on-device
-    client sampling. Returns (masks [R,S], n_success [R], sel [R,S],
-    mb_u [R,S,batch]) as host arrays."""
-    R = sim.rounds
-    cfg = StreamConfig(n_rounds=R, batch=1,
-                       carry_queues=sim.carry_queues,
-                       n_fleet=sim.n_fleet or None)
-    k_sched, k_sel, k_mb = jax.random.split(key, 3)
+    """Host-gather streaming compatibility path: one compiled program for
+    the whole run's scheduling + on-device client sampling, then a host
+    loop trains. Returns (masks [R,S], n_success [R], sel [R,S],
+    mb_u [R,S,batch]) as host arrays. Shares `_stream_draws` with the
+    fused path, so both paths consume identical selections/minibatches."""
+    cfg = _stream_cfg(sim)
+    k_sched, sel, mb_u = _stream_draws(key, sim)
 
     @jax.jit
-    def program(k_sched, k_sel, k_mb):
+    def program(k_sched):
         res = stream_rounds(k_sched, sched, sc, mob, ch, prm, cfg)
-        sel = jax.vmap(
-            lambda k: jax.random.permutation(k, sim.n_clients)[:sim.n_sov]
-        )(jax.random.split(k_sel, R))                       # [R,S]
-        mb_u = jax.random.uniform(k_mb, (R, sim.n_sov, sim.batch_size))
         return (res.outputs.success[:, 0].astype(jnp.float32),
-                res.outputs.n_success[:, 0], sel, mb_u)
+                res.outputs.n_success[:, 0])
 
-    masks, n_succ, sel, mb_u = program(k_sched, k_sel, k_mb)
+    masks, n_succ = program(k_sched)
     return (np.asarray(masks), np.asarray(n_succ), np.asarray(sel),
             np.asarray(mb_u))

@@ -139,13 +139,70 @@ def make_vfl_round(cfg: ModelConfig, mesh: Mesh, tp: str, *,
 
 def make_train_step(cfg: ModelConfig, mesh: Mesh, tp: str, *,
                     lr: float = 0.1, inline_scheduler: bool = False,
-                    veds_prm=None, ch_prm=None):
+                    veds_prm=None, ch_prm=None, stream=None, sched=None,
+                    sc=None, mob=None):
     """Full train step: (params_v, batch_v, round_inputs) -> params_v, stats.
 
     With inline_scheduler, the VEDS round (Algorithm 2) runs inside the same
     XLA program that trains and aggregates — the paper's system end to end.
+
+    With `stream` (a `repro.core.streaming.StreamConfig`, plus `sc`/`mob`
+    scenario and mobility params and optionally a `sched` scheduler), the
+    returned step is the *whole-run* fused program instead:
+
+        run(params_v, batches_v, weights, key) -> params_v, stats
+
+    where `batches_v` leaves carry a leading `[R, V, b, ...]` layout (one
+    per-vehicle batch per round). Scheduling for all R rounds
+    (`stream_rounds`, one inner scan) and the R sharded VFL rounds (an
+    outer scan over `round_fn`, vehicle axis sharded per DESIGN.md §4/§5)
+    compile into one XLA program — training + scheduling of a whole run
+    share one dispatch on device meshes (DESIGN.md §10).
     """
     round_fn = make_vfl_round(cfg, mesh, tp, lr=lr)
+
+    if stream is not None:
+        from repro.core.baselines import get_scheduler
+        from repro.core.streaming import stream_rounds
+        from repro.sharding.rules import default_rules, fused_batch_spec
+        sched = sched if sched is not None else get_scheduler("veds")
+        if int(stream.batch) != 1:
+            # the step trains ONE federation; masks come from cell 0 and
+            # extra cells would be scheduled but silently discarded
+            raise ValueError(
+                f"make_train_step(stream=...) needs batch=1 cells, got "
+                f"batch={stream.batch}")
+        if sc.n_sov < cfg.num_vehicles:
+            # a short mask would silently clamp inside the shard_map
+            # body's mask[idx] gather — refuse at build time instead
+            raise ValueError(
+                f"stream scenario schedules n_sov={sc.n_sov} SOVs but the "
+                f"mesh federates num_vehicles={cfg.num_vehicles}")
+        v_axes = vehicle_axes(mesh, cfg.num_vehicles)
+        rules = default_rules(multi_pod="pod" in mesh.axis_names)
+
+        def run(params_v, batches_v, weights, key):
+            if v_axes:
+                batches_v = jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(
+                        x, jax.sharding.NamedSharding(
+                            mesh, fused_batch_spec(rules, x.ndim))),
+                    batches_v)
+            res = stream_rounds(key, sched, sc, mob, ch_prm, veds_prm,
+                                stream)
+            masks = res.outputs.success[:, 0, :cfg.num_vehicles].astype(
+                jnp.float32)                                 # [R, V]
+            n_succ = res.outputs.n_success[:, 0]
+
+            def body(p_v, x):
+                mask_r, batch_r = x
+                return round_fn(p_v, batch_r, mask_r, weights), None
+
+            params_v, _ = jax.lax.scan(body, params_v,
+                                       (masks, batches_v))
+            return params_v, {"n_success": n_succ, "mask": masks}
+
+        return run
 
     def step(params_v, batch_v, rnd, weights):
         if inline_scheduler:

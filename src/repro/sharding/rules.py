@@ -43,6 +43,8 @@ _DEFAULT_TABLE: Mapping[str, Optional[str]] = {
     # activations
     "batch": "data",
     "vehicle": "data",     # per-vehicle param replicas in the VFL round
+    "round": None,         # fused-rollout round axis: scanned, never sharded
+    "client": "data",      # padded [C, n_max, ...] client shards (§10)
     "seq": None,
     "cache_seq": "model",   # decode caches: sequence dim sharded (flash-decode)
     # params
@@ -109,6 +111,15 @@ def shardings_for_tree(mesh: Mesh, specs_tree):
         specs_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+def fused_batch_spec(rules: LogicalRules, ndim: int) -> P:
+    """PartitionSpec for a fused-rollout batch leaf `[R, V, b, ...]`
+    (DESIGN.md §10): the round axis is scanned (replicated), the vehicle
+    axis shards over the data axes, and each vehicle's local samples stay
+    with its replica."""
+    return P(rules.mesh_axis("round"), rules.mesh_axis("vehicle"),
+             *([None] * max(ndim - 2, 0)))
 
 
 def data_axis_names(mesh: Mesh) -> Tuple[str, ...]:

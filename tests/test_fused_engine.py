@@ -1,0 +1,339 @@
+"""Fused on-device training engine (DESIGN.md §10).
+
+Covers blocked-vs-fused parity per scheduler (success masks bit-for-bit,
+per-round training loss and final params to fp32 tolerance, B in {1, 3}),
+padded-client weighting (a zero-sample client never moves the global
+model, even with NaN poison in the padding), determinism of the fused
+`run_fl` across `round_batch`, fused vs host-gather streaming history
+parity, optimizer-state threading, and the whole-run sharded train step.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.channel.mobility import ManhattanParams
+from repro.channel.v2x import ChannelParams
+from repro.core.baselines import SCHEDULERS, get_scheduler
+from repro.core.lyapunov import VedsParams
+from repro.core.scenario import ScenarioParams, make_round_batch
+from repro.core.streaming import StreamConfig, round_keys
+from repro.data.synthetic import pad_client_shards
+from repro.fl.engine import (ClientShards, fedavg_apply, fused_rollout,
+                             init_carry, local_grads)
+from repro.fl.simulator import FLSimConfig, run_fl
+from repro.optim import momentum
+
+MOB = ManhattanParams(v_max=10.0)
+CH = ChannelParams()
+PRM = VedsParams(alpha=2.0, V=0.2, Q=1e7, slot=0.1)
+SC = ScenarioParams(n_sov=4, n_opv=3, n_slots=10)
+KEY = jax.random.key(0)
+N_CLIENTS, DIM, CLASSES, BS = 8, 6, 3, 4
+
+
+def _loss_fn(p, b):
+    logits = b["x"] @ p["w"]
+    return -jnp.mean(jax.nn.log_softmax(logits)[
+        jnp.arange(b["y"].shape[0]), b["y"]])
+
+
+@pytest.fixture(scope="module")
+def problem():
+    ks = jax.random.split(jax.random.key(1), N_CLIENTS + 1)
+    protos = jax.random.normal(ks[-1], (CLASSES, DIM))
+    data = []
+    for i in range(N_CLIENTS):
+        n = 5 + 3 * (i % 3)                  # ragged client sizes
+        y = jax.random.randint(ks[i], (n,), 0, CLASSES)
+        x = protos[y] + 0.5 * jax.random.normal(
+            jax.random.fold_in(ks[i], 1), (n, DIM))
+        data.append({"x": x, "y": y})
+    params = {"w": jnp.zeros((DIM, CLASSES))}
+    return params, data, ClientShards.from_ragged(data)
+
+
+def test_pad_client_shards_layout(problem):
+    _, data, shards = problem
+    n_max = max(d["x"].shape[0] for d in data)
+    assert shards.n_clients == N_CLIENTS and shards.n_max == n_max
+    assert shards.data["x"].shape == (N_CLIENTS, n_max, DIM)
+    for c, d in enumerate(data):
+        n = d["x"].shape[0]
+        assert int(shards.n_samples[c]) == n
+        np.testing.assert_array_equal(np.asarray(shards.data["x"][c, :n]),
+                                      np.asarray(d["x"]))
+        # padding rows are zeros
+        assert not np.asarray(shards.data["x"][c, n:]).any()
+
+
+def _blocked_reference(sched, cfg, shards, params, sel, mb_u, lr):
+    """The blocked path: one host dispatch per round — scenario gen +
+    scheduling + per-cell gather/local-SGD/aggregation."""
+    R, B = sel.shape[0], sel.shape[1]
+    params_b = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (B,) + x.shape), params)
+    succ, losses = [], []
+    for r in range(R):
+        rnd = make_round_batch(jax.random.fold_in(KEY, r), SC, MOB, CH,
+                               PRM, B, hetero_fleet=False)
+        out = sched.solve_round(rnd, PRM, CH)
+        mask = out.success.astype(jnp.float32)
+        new_ps, loss_r = [], []
+        for b in range(B):
+            p = jax.tree.map(lambda x: x[b], params_b)
+            ls, grads, nf = local_grads(p, _loss_fn, shards, sel[r, b],
+                                        mb_u[r, b])
+            p, _ = fedavg_apply(p, grads, mask[b], nf, lr=lr)
+            w = mask[b] * nf
+            den = jnp.maximum(w.sum(), 1e-9)
+            loss_r.append(jnp.sum(jnp.where(w > 0, ls * w, 0.0)) / den)
+            new_ps.append(p)
+        params_b = jax.tree.map(lambda *x: jnp.stack(x), *new_ps)
+        succ.append(np.asarray(out.success))
+        losses.append(np.asarray(jnp.stack(loss_r)))
+    return params_b, np.stack(succ), np.stack(losses)
+
+
+@pytest.mark.parametrize("name", sorted(SCHEDULERS))
+@pytest.mark.parametrize("B", [1, 3])
+def test_fused_matches_blocked(name, B, problem):
+    """Acceptance: the fused one-scan engine reproduces the blocked
+    per-round path — success masks bit-for-bit, per-round training loss
+    and final params to fp32 tolerance."""
+    params, _, shards = problem
+    R, S = 3, SC.n_sov
+    lr = 0.1
+    sched = get_scheduler(name)
+    cfg = StreamConfig(n_rounds=R, batch=B, fresh_fleet=True)
+    sel = jax.random.randint(jax.random.key(2), (R, B, S), 0, N_CLIENTS)
+    mb_u = jax.random.uniform(jax.random.key(3), (R, B, S, BS))
+    res = jax.jit(lambda c, k, s, u: fused_rollout(
+        k, s, u, sched, SC, MOB, CH, PRM, cfg, _loss_fn, shards, c,
+        lr=lr))(init_carry(KEY, SC, MOB, cfg, params),
+                round_keys(KEY, cfg, R), sel, mb_u)
+    ref_params, ref_succ, ref_loss = _blocked_reference(
+        sched, cfg, shards, params, sel, mb_u, lr)
+    np.testing.assert_array_equal(np.asarray(res.outputs.success),
+                                  ref_succ, err_msg=f"{name}/B{B}")
+    np.testing.assert_allclose(np.asarray(res.loss), ref_loss,
+                               rtol=2e-5, atol=1e-6)
+    for got, ref in zip(jax.tree.leaves(res.params),
+                        jax.tree.leaves(ref_params)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-5, atol=1e-6)
+
+
+def test_unroll_is_semantics_free(problem):
+    """`unroll` (CPU loop-body threading escape hatch) changes compile
+    strategy only: the rollout must be identical for any setting."""
+    params, _, shards = problem
+    R, B, S = 4, 1, SC.n_sov
+    cfg = StreamConfig(n_rounds=R, batch=B, fresh_fleet=True)
+    sel = jax.random.randint(jax.random.key(2), (R, B, S), 0, N_CLIENTS)
+    mb_u = jax.random.uniform(jax.random.key(3), (R, B, S, BS))
+    keys = round_keys(KEY, cfg, R)
+    res = {}
+    for unroll in (1, 2, 8):
+        res[unroll] = fused_rollout(
+            keys, sel, mb_u, get_scheduler("madca"), SC, MOB, CH, PRM,
+            cfg, _loss_fn, shards, init_carry(KEY, SC, MOB, cfg, params),
+            lr=0.1, unroll=unroll)
+    for unroll in (2, 8):
+        np.testing.assert_array_equal(
+            np.asarray(res[unroll].outputs.success),
+            np.asarray(res[1].outputs.success))
+        np.testing.assert_allclose(np.asarray(res[unroll].params["w"]),
+                                   np.asarray(res[1].params["w"]),
+                                   rtol=2e-5, atol=1e-7)
+
+
+def test_padded_zero_sample_client_never_moves_model(problem):
+    """A client with 0 samples has aggregation weight 0: even NaN poison
+    in its padded rows cannot reach the global model."""
+    params, data, _ = problem
+    ragged = [d if i != 2 else
+              {"x": jnp.zeros((0, DIM)), "y": jnp.zeros((0,), jnp.int32)}
+              for i, d in enumerate(data)]
+    pad_data, n = pad_client_shards(ragged)
+    assert int(n[2]) == 0
+    poisoned = dict(pad_data)
+    poisoned["x"] = pad_data["x"].at[2].set(jnp.nan)
+    R, B, S = 2, 1, SC.n_sov
+    cfg = StreamConfig(n_rounds=R, batch=B, fresh_fleet=True)
+    # every round selects the empty client into slot 0
+    sel = jax.random.randint(jax.random.key(2), (R, B, S), 3, N_CLIENTS)
+    sel = sel.at[:, :, 0].set(2)
+    mb_u = jax.random.uniform(jax.random.key(3), (R, B, S, BS))
+    outs = {}
+    for tag, d in (("clean", pad_data), ("poisoned", poisoned)):
+        shards = ClientShards(data=d, n_samples=n)
+        outs[tag] = fused_rollout(
+            round_keys(KEY, cfg, R), sel, mb_u, get_scheduler("madca"),
+            SC, MOB, CH, PRM, cfg, _loss_fn, shards,
+            init_carry(KEY, SC, MOB, cfg, params), lr=0.1)
+    w_clean = np.asarray(outs["clean"].params["w"])
+    w_pois = np.asarray(outs["poisoned"].params["w"])
+    assert np.isfinite(w_pois).all()
+    np.testing.assert_array_equal(w_clean, w_pois)
+    assert np.isfinite(np.asarray(outs["poisoned"].loss)).all()
+
+
+def test_empty_dict_first_client_keeps_schema(problem):
+    """A bare-{} client must not drop the dataset schema (keys come from
+    the first non-empty client) nor crash either gather path."""
+    params, data, eval_fn_data = problem[0], problem[1], None
+    ragged = [{}] + list(data[1:])
+    pad_data, n = pad_client_shards(ragged)
+    assert set(pad_data) == {"x", "y"} and int(n[0]) == 0
+    assert not np.asarray(pad_data["x"][0]).any()
+    sim = FLSimConfig(n_clients=N_CLIENTS, rounds=2, scheduler="madca",
+                      n_slots=10, n_sov=4, n_opv=3, batch_size=BS)
+    for streaming in (False, True):
+        h = run_fl(jax.random.key(7), params, _loss_fn, ragged,
+                   dataclasses.replace(sim, streaming=streaming))
+        assert h["scheduled_rounds"] == 2
+
+
+def test_all_empty_selection_keeps_params(problem):
+    """A round whose every selected client is empty must leave the global
+    model untouched (total weight 0 -> `ok` gate holds the params)."""
+    params, data, _ = problem
+    ragged = list(data)
+    ragged[0] = {"x": jnp.zeros((0, DIM)), "y": jnp.zeros((0,), jnp.int32)}
+    shards = ClientShards.from_ragged(ragged)
+    cfg = StreamConfig(n_rounds=1, batch=1, fresh_fleet=True)
+    sel = jnp.zeros((1, 1, SC.n_sov), jnp.int32)      # all -> empty client
+    mb_u = jax.random.uniform(jax.random.key(3), (1, 1, SC.n_sov, BS))
+    res = fused_rollout(round_keys(KEY, cfg, 1), sel, mb_u,
+                        get_scheduler("optimal"), SC, MOB, CH, PRM, cfg,
+                        _loss_fn, shards,
+                        init_carry(KEY, SC, MOB, cfg, params), lr=0.1)
+    np.testing.assert_array_equal(np.asarray(res.params["w"][0]),
+                                  np.asarray(params["w"]))
+
+
+def test_optimizer_state_threads_through_carry(problem):
+    """A stateful optimizer (momentum) rides the scan carry: the fused
+    run matches applying the same rounds eagerly."""
+    params, _, shards = problem
+    R, B, S = 3, 1, SC.n_sov
+    opt = momentum(0.05)
+    cfg = StreamConfig(n_rounds=R, batch=B, fresh_fleet=True)
+    sel = jax.random.randint(jax.random.key(2), (R, B, S), 0, N_CLIENTS)
+    mb_u = jax.random.uniform(jax.random.key(3), (R, B, S, BS))
+    keys = round_keys(KEY, cfg, R)
+    res = fused_rollout(keys, sel, mb_u, get_scheduler("optimal"), SC,
+                        MOB, CH, PRM, cfg, _loss_fn, shards,
+                        init_carry(KEY, SC, MOB, cfg, params, opt=opt),
+                        opt=opt)
+    assert res.opt_state is not None
+    p = params
+    os_ = opt[0](params)
+    sched = get_scheduler("optimal")
+    for r in range(R):
+        rnd = make_round_batch(jax.random.fold_in(KEY, r), SC, MOB, CH,
+                               PRM, B, hetero_fleet=False)
+        mask = sched.solve_round(rnd, PRM, CH).success.astype(
+            jnp.float32)[0]
+        _, grads, nf = local_grads(p, _loss_fn, shards, sel[r, 0],
+                                   mb_u[r, 0])
+        p, os_ = fedavg_apply(p, grads, mask, nf, lr=0.0, opt=opt,
+                              opt_state=os_, step=r)
+    np.testing.assert_allclose(np.asarray(res.params["w"][0]),
+                               np.asarray(p["w"]), rtol=2e-5, atol=1e-6)
+
+
+# ---- run_fl integration -------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fl_setup(problem):
+    params, data, _ = problem
+    protos = jax.random.normal(jax.random.split(
+        jax.random.key(1), N_CLIENTS + 1)[-1], (CLASSES, DIM))
+    xt = protos[jnp.arange(CLASSES).repeat(8)] + 0.5 * jax.random.normal(
+        jax.random.key(9), (CLASSES * 8, DIM))
+    yt = jnp.arange(CLASSES).repeat(8)
+    eval_fn = jax.jit(lambda p: jnp.mean((xt @ p["w"]).argmax(-1) == yt))
+    return params, data, eval_fn
+
+
+def _go(fl_setup, **kw):
+    params, data, eval_fn = fl_setup
+    sim = FLSimConfig(n_clients=N_CLIENTS, rounds=6, scheduler="madca",
+                      n_slots=10, n_sov=4, n_opv=3, batch_size=BS, **kw)
+    return run_fl(jax.random.key(7), params, _loss_fn, data, sim,
+                  eval_fn=eval_fn, eval_every=2)
+
+
+def test_fused_run_fl_deterministic_across_round_batch(fl_setup):
+    """The fused streaming run ignores `round_batch` (the whole run is
+    one scan): identical history for any setting, and across repeats."""
+    h1 = _go(fl_setup, streaming=True, round_batch=1)
+    h4 = _go(fl_setup, streaming=True, round_batch=4)
+    assert h1 == h4
+    assert h1 == _go(fl_setup, streaming=True, round_batch=1)
+    assert h1["scheduled_rounds"] == 6
+
+
+def test_fused_run_fl_matches_host_gather_streaming(fl_setup):
+    """Acceptance: the fused engine reproduces the host-gather streaming
+    path — same schedule (n_success identical), same training trajectory
+    (metric to fp32 tolerance)."""
+    hf = _go(fl_setup, streaming=True, fused=True)
+    hg = _go(fl_setup, streaming=True, fused=False)
+    assert hf["round"] == hg["round"]
+    assert hf["n_success"] == hg["n_success"]
+    np.testing.assert_allclose(hf["metric"], hg["metric"], rtol=1e-5)
+    np.testing.assert_allclose(hf["time"], hg["time"], rtol=1e-6)
+
+
+def test_run_fl_accepts_prepadded_shards(fl_setup):
+    params, data, eval_fn = fl_setup
+    shards = ClientShards.from_ragged(data)
+    sim = FLSimConfig(n_clients=N_CLIENTS, rounds=4, scheduler="madca",
+                      n_slots=10, n_sov=4, n_opv=3, batch_size=BS,
+                      streaming=True)
+    ha = run_fl(jax.random.key(7), params, _loss_fn, data, sim,
+                eval_fn=eval_fn, eval_every=2)
+    hb = run_fl(jax.random.key(7), params, _loss_fn, shards, sim,
+                eval_fn=eval_fn, eval_every=2)
+    assert ha == hb
+
+
+# ---- whole-run sharded train step (V = 1 degenerate mesh) ---------------
+
+def test_make_train_step_streaming_whole_run():
+    """`make_train_step(stream=...)`: scheduling of all R rounds and the
+    R VFL rounds compile into one program; masks come from the streaming
+    scan. V = 1 exercises the degenerate-mesh path on any jax."""
+    from jax.sharding import Mesh
+    from repro.configs.registry import get_smoke_config
+    from repro.data.synthetic import lm_batch
+    from repro.fl.vfl import make_train_step
+    from repro.models import engine as m_engine
+    from repro.models.module import materialize
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1,), ("model",))
+    cfg = get_smoke_config("qwen3-32b").replace(
+        num_vehicles=1, compute_dtype="float32", param_dtype="float32")
+    params = materialize(jax.random.key(0),
+                         m_engine.model_decl(cfg, tp="head"))
+    params_v = jax.tree.map(lambda x: x[None], params)
+    R = 2
+    sc = ScenarioParams(n_sov=2, n_opv=2, n_slots=6)
+    stream = StreamConfig(n_rounds=R, batch=1, fresh_fleet=True)
+    run = make_train_step(cfg, mesh, "head", lr=0.05, stream=stream,
+                          sc=sc, mob=MOB, veds_prm=PRM, ch_prm=CH,
+                          sched=get_scheduler("madca"))
+    batch = lm_batch(jax.random.key(1), R * 2, 16, cfg.vocab_size)
+    batches_v = jax.tree.map(
+        lambda x: x.reshape(R, 1, 2, *x.shape[1:]), batch)
+    out, stats = jax.jit(run)(params_v, batches_v, jnp.ones((1,)),
+                              jax.random.key(3))
+    assert stats["n_success"].shape == (R,)
+    assert stats["mask"].shape == (R, 1)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(params_v)):
+        assert a.shape == b.shape and a.dtype == b.dtype

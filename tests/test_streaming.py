@@ -275,6 +275,96 @@ def test_stream_resumes_from_returned_fleet():
                                rtol=2e-5, atol=1e-7)
 
 
+# ---- handover delay (one-round coverage lag) ---------------------------
+
+def _stationary_fleet(covered: bool):
+    """A B=1 fleet parked at the RSU (speed 0, so coverage never changes)
+    with the previous-round coverage memory forced to `covered`."""
+    fl = init_fleet(jax.random.key(20), SC, MOB, 1)
+    rsu = jnp.broadcast_to(fl.rsu_xy[:, None], fl.pos.shape)
+    return dataclasses.replace(
+        fl, pos=rsu, speed=jnp.zeros_like(fl.speed),
+        covered=jnp.full(fl.queue.shape, covered))
+
+
+@pytest.mark.parametrize("delay", [False, True])
+def test_handover_delay_one_round_lag(delay):
+    """Satellite: vehicles entering coverage mid-round become eligible
+    only the *next* round. A parked-in-coverage fleet whose coverage
+    memory says 'entered last round' sits out exactly one round with
+    `handover_delay=True`, and none without."""
+    fl = _stationary_fleet(covered=False)
+    fl1, rnd1, _ = fleet_round(jax.random.key(21), fl, SC, MOB, CH, PRM,
+                               handover_delay=delay)
+    expect_round1 = not delay       # delayed: everyone waits one round
+    assert bool(jnp.all(rnd1.valid_sov)) == expect_round1
+    assert bool(jnp.all(fl1.covered))    # memory refreshed at round start
+    _, rnd2, _ = fleet_round(jax.random.key(22), fl1, SC, MOB, CH, PRM,
+                             handover_delay=delay)
+    assert bool(jnp.all(rnd2.valid_sov))  # eligible from the next round on
+
+
+def test_handover_delay_streams():
+    """The flag threads through StreamConfig into the persistent scan."""
+    cfg = StreamConfig(n_rounds=3, batch=1, handover_delay=True)
+    res = jax.jit(lambda k: stream_rounds(
+        k, get_scheduler("sa"), SC, MOB, CH, PRM, cfg))(KEY)
+    assert res.outputs.success.shape == (3, 1, SC.n_sov)
+    assert res.fleet.covered.shape == res.fleet.queue.shape
+
+
+def test_init_fleet_covered_matches_initial_coverage(fleet):
+    cov = np.linalg.norm(np.asarray(fleet.pos)
+                         - np.asarray(fleet.rsu_xy)[:, None], axis=-1) \
+        <= MOB.coverage
+    np.testing.assert_array_equal(np.asarray(fleet.covered), cov)
+
+
+# ---- round_chunk: P4 solves batched across rounds ----------------------
+
+@pytest.mark.parametrize("name", ["veds", "madca"])
+def test_round_chunk_matches_unchunked(name):
+    """Satellite: fresh-fleet streaming with `round_chunk` solves chunks
+    of rounds as one widened batch (the P4 IPM candidates batch across
+    rounds) and must reproduce the per-round scan — success bit-for-bit,
+    floats to fp32 tolerance. `veds` pins the COT/IPM path itself."""
+    sched = get_scheduler(name)
+    base = StreamConfig(n_rounds=4, batch=1, fresh_fleet=True)
+    res_u = jax.jit(lambda k: stream_rounds(
+        k, sched, SC, MOB, CH, PRM, base))(KEY)
+    res_c = jax.jit(lambda k: stream_rounds(
+        k, sched, SC, MOB, CH, PRM,
+        dataclasses.replace(base, round_chunk=2)))(KEY)
+    np.testing.assert_array_equal(np.asarray(res_c.outputs.success),
+                                  np.asarray(res_u.outputs.success))
+    np.testing.assert_allclose(np.asarray(res_c.outputs.zeta),
+                               np.asarray(res_u.outputs.zeta),
+                               rtol=2e-5, atol=PRM.Q * 1e-5)
+    np.testing.assert_allclose(np.asarray(res_c.outputs.energy_sov),
+                               np.asarray(res_u.outputs.energy_sov),
+                               rtol=2e-5, atol=1e-7)
+
+
+def test_round_chunk_rejects_bad_configs():
+    cfg = StreamConfig(n_rounds=4, batch=1, fresh_fleet=True,
+                       round_chunk=3)
+    with pytest.raises(ValueError):
+        stream_rounds(KEY, get_scheduler("sa"), SC, MOB, CH, PRM, cfg)
+    cfg = StreamConfig(n_rounds=4, batch=1, fresh_fleet=True,
+                       round_chunk=2, carry_queues=True)
+    with pytest.raises(ValueError):
+        stream_rounds(KEY, get_scheduler("sa"), SC, MOB, CH, PRM, cfg)
+    cfg = StreamConfig(n_rounds=4, batch=1, fresh_fleet=False,
+                       round_chunk=2)
+    with pytest.raises(ValueError):
+        stream_rounds(KEY, get_scheduler("sa"), SC, MOB, CH, PRM, cfg)
+    # handover delay needs the persistent fleet's coverage memory
+    cfg = StreamConfig(n_rounds=4, batch=1, fresh_fleet=True,
+                       handover_delay=True)
+    with pytest.raises(ValueError):
+        stream_rounds(KEY, get_scheduler("sa"), SC, MOB, CH, PRM, cfg)
+
+
 # ---- cross-round queue dynamics (acceptance) ---------------------------
 
 def test_queues_grow_under_infeasible_budget():
