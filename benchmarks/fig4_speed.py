@@ -21,6 +21,12 @@ aggregation — as one program (`run_fl(streaming=True)`, fused) against
 the host-gather streaming path (one-dispatch scheduling, per-round host
 loop for gather + update).
 
+`handoff_sweep` carries the multi-RSU handoff story (DESIGN.md §11):
+B cells as B RSUs on one overlapping-coverage grid with the cross-cell
+exchange running every scan step, vs the same rollout with handoff
+disabled — the exchange's cost inside the one-dispatch program, plus
+the fraction of vehicles that actually changed cells.
+
 `--smoke` runs every sweep at tiny shapes and emits one JSON line — the
 CI quick lane uses it to catch perf-path regressions (imports, shapes,
 jit contracts) without paying benchmark-scale runtimes.
@@ -39,7 +45,9 @@ from repro.channel.mobility import ManhattanParams
 from repro.channel.v2x import ChannelParams
 from repro.core.baselines import get_scheduler
 from repro.core.lyapunov import VedsParams
-from repro.core.scenario import ScenarioParams, make_round, make_round_batch
+from repro.core.scenario import (ScenarioParams, init_fleet, make_round,
+                                 make_round_batch, migrated_fraction,
+                                 rsu_grid)
 from repro.core.streaming import StreamConfig, stream_rounds
 
 
@@ -141,6 +149,39 @@ def cot_stream_sweep(R: int = 20, round_chunk: int = 10, *,
              t_blocked / t_stream)]
 
 
+def handoff_sweep(R: int = 20, B: int = 4, *, n_sov: int = 4,
+                  n_opv: int = 4, n_slots: int = 20,
+                  n_fleet: int | None = None):
+    """Multi-RSU handoff streaming (DESIGN.md §11): B cells as B RSUs on
+    an overlapping-coverage grid, cross-cell exchange every round, vs
+    the same rollout with handoff disabled (B independent worlds).
+    Returns one row (scheduler, R, off_rps, on_rps, ratio, migrated) —
+    `migrated` is the fraction of vehicles whose final cell differs
+    from their initial one.
+    """
+    mob, ch = ManhattanParams(), ChannelParams()
+    prm = VedsParams(alpha=2.0, V=0.2, Q=1e7, slot=0.1)
+    sc = ScenarioParams(n_sov=n_sov, n_opv=n_opv, n_slots=n_slots)
+    sched = get_scheduler("madca")
+    fleet = init_fleet(jax.random.key(0), sc, mob, B, n_fleet=n_fleet,
+                       rsu_xy=rsu_grid(B, mob))
+    key = jax.random.key(1)
+
+    def run(handoff):
+        cfg = StreamConfig(n_rounds=R, batch=B, carry_queues=True,
+                           handoff=handoff)
+        return jax.jit(lambda k, f, c=cfg: stream_rounds(
+            k, sched, sc, mob, ch, prm, c, fleet=f))
+
+    f_on = run(True)                  # one jit wrapper: result + timing
+    t_off = 1e-6 * time_call(run(False), key, fleet)
+    res_on = f_on(key, fleet)
+    t_on = 1e-6 * time_call(f_on, key, fleet)
+    migrated = migrated_fraction(fleet, res_on.fleet)
+    return [("madca_handoff", R, R / t_off, R / t_on, t_off / t_on,
+             migrated)]
+
+
 def _fl_problem(n_clients: int = 10, dim: int = 8, classes: int = 3):
     """Tiny linear-softmax FL problem for the end-to-end fused sweep."""
     key = jax.random.key(42)
@@ -204,12 +245,15 @@ def main(csv=True, smoke=False):
         crows = cot_stream_sweep(R=4, round_chunk=2, n_sov=3, n_opv=3,
                                  n_slots=8)
         frows = fused_sweep(R=6)
+        hrows = handoff_sweep(R=3, B=2, n_sov=3, n_opv=2, n_slots=6,
+                              n_fleet=8)
     else:
         rows, us = run()
         brows = b_sweep()
         srows = stream_sweep()
         crows = cot_stream_sweep()
         frows = fused_sweep()
+        hrows = handoff_sweep()
     veds5 = [r[2] for r in rows if r[1] == "veds"][0] if smoke else \
         [r[2] for r in rows if r[1] == "veds" and r[0] == 5.0][0]
     opt5 = [r[2] for r in rows if r[1] == "optimal"][0] if smoke else \
@@ -219,19 +263,24 @@ def main(csv=True, smoke=False):
     s50 = max(r[4] for r in srows)
     cot = crows[0][4]
     fus = frows[0][4]
+    hand_ratio, hand_migrated = hrows[0][4], hrows[0][5]
     if smoke:
         out = {"bench": "fig4_speed_smoke", "us_per_round": us,
                "veds_frac_of_optimal": frac, "b_speedup": b64,
                "stream_speedup": s50, "cot_stream_speedup": cot,
-               "fused_speedup": fus}
+               "fused_speedup": fus, "handoff_ratio": hand_ratio,
+               "handoff_migrated": hand_migrated}
         assert all(math.isfinite(v) for v in out.values()
                    if isinstance(v, float)), out
+        assert 0.0 <= hand_migrated <= 1.0, out
         print(json.dumps(out))
         return out
     if csv:
         print(f"fig4_speed,{us:.0f},veds_frac_of_optimal_v5={frac:.3f},"
               f"b64_speedup={b64:.1f},stream_r50_speedup={s50:.1f},"
-              f"cot_stream_speedup={cot:.1f},fused_r50_speedup={fus:.1f}")
+              f"cot_stream_speedup={cot:.1f},fused_r50_speedup={fus:.1f},"
+              f"handoff_ratio={hand_ratio:.2f},"
+              f"handoff_migrated={hand_migrated:.2f}")
     for v, name, s in rows:
         print(f"#  v={v:5.1f}  {name:10s} n_success={s:.2f}")
     for name, B, rps_loop, rps_batch, speedup in brows:
@@ -243,6 +292,10 @@ def main(csv=True, smoke=False):
     for name, R, rps_host, rps_fused, speedup in frows:
         print(f"#  R={R:3d}  {name:20s} host={rps_host:8.1f} rounds/s  "
               f"fused={rps_fused:9.1f} rounds/s  speedup={speedup:5.1f}x")
+    for name, R, rps_off, rps_on, ratio, migrated in hrows:
+        print(f"#  R={R:3d}  {name:20s} off={rps_off:9.1f} rounds/s  "
+              f"on={rps_on:9.1f} rounds/s  ratio={ratio:4.2f}x  "
+              f"migrated={migrated:.0%}")
     return frac
 
 

@@ -11,8 +11,10 @@ from repro.core.scheduler import (RolloutCarry, RoundOutputs,  # noqa: F401
 from repro.core.veds import RoundInputs, veds_round, solve_slot  # noqa: F401
 from repro.core.baselines import SCHEDULERS, get_scheduler  # noqa: F401
 from repro.core.scenario import (FleetState, ScenarioParams,  # noqa: F401
-                                 fleet_round, init_fleet, make_round,
-                                 make_round_batch, rollout_rounds)
+                                 exchange_fleet, fleet_round, init_fleet,
+                                 make_round, make_round_batch,
+                                 migrated_fraction, rollout_rounds,
+                                 rsu_grid)
 from repro.core.streaming import (StreamConfig, StreamResult,  # noqa: F401
                                   round_keys, sched_round_step,
                                   sched_state0, stream_rounds)

@@ -16,6 +16,15 @@ round-to-round: `init_fleet` seeds a pool of vehicles per cell,
 SOVs/OPVs from the vehicles in coverage (padding + `valid_*` masks when
 fewer than S/U qualify), and `rollout_rounds` scans that into an
 `[R, B, T, ...]` block of time-correlated rounds. See DESIGN.md §9.
+
+Multi-RSU handoff (DESIGN.md §11): when the B cells are B RSUs on one
+shared road network (`rsu_grid` builds an overlapping-coverage grid),
+`exchange_fleet` re-assigns every vehicle to its nearest RSU between
+rounds — a fixed-shape gather/scatter over the `[B, N]` slot layout
+that migrates the vehicle's full state (position, speed, battery,
+virtual queue, `covered` flag) to the new cell, capacity-limited with
+overflow vehicles parked out of coverage so the program stays one XLA
+dispatch.
 """
 from __future__ import annotations
 
@@ -161,6 +170,12 @@ class FleetState:
       covered [B,N]    bool: in coverage at the *previous* round start —
                        with `handover_delay`, vehicles entering coverage
                        mid-round become eligible only the next round
+      cell_id [B,N]    int32: the RSU this vehicle is associated with.
+                       Without handoff this is constantly the row index.
+                       `exchange_fleet` rewrites it: an admitted vehicle
+                       in row b has cell_id == b; a capacity-overflow
+                       vehicle is parked with cell_id == -1 (ineligible
+                       until a later exchange re-admits it)
     """
     pos: jax.Array
     dir: jax.Array
@@ -171,6 +186,7 @@ class FleetState:
     queue: jax.Array
     rsu_xy: jax.Array
     covered: jax.Array
+    cell_id: jax.Array
 
     @property
     def batch_size(self) -> int:
@@ -216,13 +232,138 @@ def init_fleet(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
               else allowance * float(energy_horizon))
     covered = jnp.linalg.norm(st["pos"] - rsu[:, None], axis=-1) \
         <= mob.coverage
+    cell_id = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None],
+                               (B, N))
     return FleetState(pos=st["pos"], dir=st["dir"], speed=st["speed"],
                       jitter=jitter, allowance=allowance, energy=energy,
-                      queue=jnp.zeros((B, N)), rsu_xy=rsu, covered=covered)
+                      queue=jnp.zeros((B, N)), rsu_xy=rsu, covered=covered,
+                      cell_id=cell_id)
+
+
+def rsu_grid(batch: int, mob: ManhattanParams, *,
+             pitch: Optional[float] = None) -> jax.Array:
+    """[B,2] RSU placements on a square grid over the road network.
+
+    The default pitch (`0.75 * coverage`) puts neighboring RSUs well
+    inside each other's coverage radius — the overlapping-coverage
+    multi-RSU topology the handoff machinery is built for: a vehicle
+    leaving one cell is usually already coverable by the next. When the
+    grid would overrun the road network, the pitch shrinks to fit (even
+    more overlap) so RSU positions stay distinct — clipping would stack
+    duplicate RSUs on the boundary, and `exchange_fleet`'s argmin would
+    then starve every higher-indexed duplicate cell.
+    """
+    B = int(batch)
+    g = int(jnp.ceil(jnp.sqrt(B)))
+    rows = (B + g - 1) // g
+    p = float(pitch) if pitch is not None else 0.75 * mob.coverage
+    span = max(g - 1, rows - 1, 1)
+    p = min(p, mob.extent / span)
+    idx = jnp.arange(B)
+    gx, gy = (idx % g).astype(jnp.float32), (idx // g).astype(jnp.float32)
+    x = 0.5 * mob.extent + (gx - 0.5 * (g - 1)) * p
+    y = 0.5 * mob.extent + (gy - 0.5 * (rows - 1)) * p
+    return jnp.stack([x, y], -1)
+
+
+def migrated_fraction(fleet0: FleetState, fleet1: FleetState) -> float:
+    """Fraction of vehicles whose cell (row) differs between two fleet
+    snapshots, tracking identity by the persistent per-vehicle `jitter`
+    value — `exchange_fleet` permutes it with the vehicle and nothing
+    rewrites it, so it serves as a tag (random draws: collisions have
+    measure zero; tests inject unique tags outright)."""
+    import numpy as np
+    j0, j1 = np.asarray(fleet0.jitter), np.asarray(fleet1.jitter)
+    B = j1.shape[0]
+    row_of = {float(t): b for b in range(B) for t in j1[b]}
+    return float(np.mean([[row_of[float(t)] != b for t in j0[b]]
+                          for b in range(B)]))
+
+
+def exchange_fleet(fleet: FleetState, mob: ManhattanParams) -> FleetState:
+    """Cross-cell vehicle exchange: hand every vehicle to its nearest RSU.
+
+    The B cells are read as B RSUs (`fleet.rsu_xy`) on one shared road
+    network. Each of the M = B * N vehicles targets the cell of its
+    nearest RSU (`argmin` over cells); the full per-vehicle state —
+    position, heading, speed, jitter, allowance, residual battery,
+    virtual queue, `covered` flag — migrates to a slot of the target
+    row via one fixed-shape gather (a permutation of the flat [M]
+    layout), so shapes stay static and the whole exchange is a few
+    vector ops inside the rollout scan. No RNG is consumed.
+
+    Capacity policy: a cell admits at most N vehicles, first-come by
+    flat (cell, slot) order; the overflow fills the rows left short, in
+    row-major order, parked with `cell_id = -1` and `covered = False` —
+    out of coverage as far as role selection is concerned, state frozen
+    until a later exchange re-admits them. Since overflow count always
+    equals free-slot count, the mapping is a bijection: no vehicle is
+    ever duplicated or lost.
+
+    Handover latency: a vehicle that changed cells gets
+    `covered = False`, so under `handover_delay` a migrant sits out
+    exactly one round in its new cell before becoming eligible (without
+    the delay flag, `covered` is refreshed at round start and migration
+    costs nothing).
+
+    For B = 1 the exchange is the identity permutation — `handoff=True`
+    is then bit-for-bit `handoff=False`.
+    """
+    B, N = fleet.batch_size, fleet.n_vehicles
+    M = B * N
+
+    def flat(x):
+        return x.reshape((M,) + x.shape[2:])
+
+    pos = flat(fleet.pos)                                       # [M,2]
+    dist = jnp.linalg.norm(pos[:, None] - fleet.rsu_xy[None], axis=-1)
+    tgt = jnp.argmin(dist, axis=-1).astype(jnp.int32)           # [M]
+    src_cell = flat(jnp.broadcast_to(
+        jnp.arange(B, dtype=jnp.int32)[:, None], (B, N)))       # [M]
+    moved = tgt != src_cell
+
+    # stable sort by target cell: vehicles for cell 0 first, then 1, ...
+    order = jnp.argsort(tgt, stable=True).astype(jnp.int32)     # [M]
+    tgt_s = tgt[order]
+    counts = jnp.zeros((B,), jnp.int32).at[tgt].add(1)          # [B]
+    start = jnp.cumsum(counts) - counts
+    rank = jnp.arange(M, dtype=jnp.int32) - start[tgt_s]        # in-cell
+    admitted = rank < N
+
+    # overflow <-> free-slot bijection (|overflow| == |free| == M - sum
+    # min(counts, N)): the o-th overflow vehicle (sorted order) takes the
+    # o-th free slot (row-major), found by inverting the running count of
+    # free slots per cell
+    filled = jnp.minimum(counts, N)
+    free_before = jnp.cumsum(N - filled) - (N - filled)         # [B]
+    ovf_ord = jnp.cumsum(~admitted) - 1                         # [M]
+    c_of = jnp.clip(jnp.searchsorted(free_before, ovf_ord,
+                                     side="right") - 1, 0, B - 1)
+    j_of = filled[c_of] + (ovf_ord - free_before[c_of])
+    dest = jnp.where(admitted, tgt_s * N + rank,
+                     c_of * N + j_of).astype(jnp.int32)         # [M] perm
+
+    # invert: which source vehicle lands in each flat slot
+    src_of_slot = jnp.zeros((M,), jnp.int32).at[dest].set(order)
+    cell_id = jnp.zeros((M,), jnp.int32).at[dest].set(
+        jnp.where(admitted, tgt_s, -1)).reshape(B, N)
+
+    def take(x):
+        return flat(x)[src_of_slot].reshape((B, N) + x.shape[2:])
+
+    covered = take(fleet.covered) & ~moved[src_of_slot].reshape(B, N) \
+        & (cell_id >= 0)
+    return FleetState(pos=take(fleet.pos), dir=take(fleet.dir),
+                      speed=take(fleet.speed), jitter=take(fleet.jitter),
+                      allowance=take(fleet.allowance),
+                      energy=take(fleet.energy), queue=take(fleet.queue),
+                      rsu_xy=fleet.rsu_xy, covered=covered,
+                      cell_id=cell_id)
 
 
 def _fleet_cell_round(key: jax.Array, pos, d, speed, jitter, allowance,
-                      energy, rsu_xy, covered_prev, sc: ScenarioParams,
+                      energy, rsu_xy, covered_prev, active,
+                      sc: ScenarioParams,
                       mob: ManhattanParams, ch: ChannelParams,
                       prm: VedsParams, handover_delay: bool = False):
     """One cell, one round: drive the pool T slots, select roles by
@@ -231,7 +372,10 @@ def _fleet_cell_round(key: jax.Array, pos, d, speed, jitter, allowance,
     With `handover_delay`, a vehicle is eligible only if it was already
     in coverage at the *previous* round start (`covered_prev`): vehicles
     entering coverage mid-round sit out the round after their handover
-    completes and join the round after (one-round lag)."""
+    completes and join the round after (one-round lag). `active` gates
+    eligibility further — under handoff it excludes vehicles parked by
+    the capacity policy (`cell_id == -1`); without handoff it is all
+    True and a no-op."""
     S, U, T = sc.n_sov, sc.n_opv, sc.n_slots
     k_mob, k_ch = jax.random.split(key)
     st, traj = rollout_positions(k_mob, {"pos": pos, "dir": d,
@@ -239,7 +383,8 @@ def _fleet_cell_round(key: jax.Array, pos, d, speed, jitter, allowance,
     # coverage-driven re-selection: eligible vehicles first (stable sort
     # keeps index order, so vehicles keep their role while they stay in
     # coverage); the first S are SOVs, the next U are OPVs
-    cov0 = jnp.linalg.norm(pos - rsu_xy, axis=-1) <= mob.coverage
+    cov0 = (jnp.linalg.norm(pos - rsu_xy, axis=-1) <= mob.coverage) \
+        & active
     elig = cov0 & covered_prev if handover_delay else cov0
     order = jnp.argsort(jnp.where(elig, 0, 1), stable=True)
     sov_idx, opv_idx = order[:S], order[S:S + U]
@@ -274,21 +419,29 @@ def _fleet_cell_round(key: jax.Array, pos, d, speed, jitter, allowance,
 def fleet_round(key: jax.Array, fleet: FleetState, sc: ScenarioParams,
                 mob: ManhattanParams, ch: ChannelParams,
                 prm: VedsParams, *,
-                handover_delay: bool = False
+                handover_delay: bool = False,
+                handoff: bool = False
                 ) -> Tuple[FleetState, RoundInputs, FleetSelection]:
     """Advance every cell's pool one round and build the batched
     RoundInputs for the selected SOVs/OPVs. Queue/energy fields of the
     returned FleetState are untouched — the streaming engine scatters the
     scheduler's outputs back (see `repro.core.streaming`); `covered` is
-    refreshed to this round's start-of-round coverage."""
+    refreshed to this round's start-of-round coverage.
+
+    With `handoff`, vehicles parked by `exchange_fleet`'s capacity
+    policy (`cell_id == -1`) are ineligible for role selection; the
+    caller is expected to have run `exchange_fleet` first."""
     B = fleet.batch_size
     keys = jax.random.split(key, B)
+    active = (fleet.cell_id >= 0 if handoff
+              else jnp.ones(fleet.covered.shape, bool))
     st, rnd, sov_idx, opv_idx, cov0 = jax.vmap(
-        lambda k, p, d, s, j, a, e, r, c: _fleet_cell_round(
-            k, p, d, s, j, a, e, r, c, sc, mob, ch, prm,
+        lambda k, p, d, s, j, a, e, r, c, m: _fleet_cell_round(
+            k, p, d, s, j, a, e, r, c, m, sc, mob, ch, prm,
             handover_delay=handover_delay))(
         keys, fleet.pos, fleet.dir, fleet.speed, fleet.jitter,
-        fleet.allowance, fleet.energy, fleet.rsu_xy, fleet.covered)
+        fleet.allowance, fleet.energy, fleet.rsu_xy, fleet.covered,
+        active)
     new_fleet = dataclasses.replace(fleet, pos=st["pos"], dir=st["dir"],
                                     speed=st["speed"], covered=cov0)
     return new_fleet, rnd, FleetSelection(sov_idx, opv_idx)
@@ -296,16 +449,22 @@ def fleet_round(key: jax.Array, fleet: FleetState, sc: ScenarioParams,
 
 def rollout_rounds(key: jax.Array, fleet: FleetState, sc: ScenarioParams,
                    mob: ManhattanParams, ch: ChannelParams, prm: VedsParams,
-                   n_rounds: int, *, handover_delay: bool = False
+                   n_rounds: int, *, handover_delay: bool = False,
+                   handoff: bool = False
                    ) -> Tuple[FleetState, RoundInputs, FleetSelection]:
     """R resumable rounds of one persistent fleet, as one scan: returns
     (final fleet, RoundInputs [R, B, T, ...], FleetSelection [R, B, ...]).
 
     This is the scenario-layer view of the streaming engine — scheduling
-    not included (use `repro.core.streaming.stream_rounds` to fuse it)."""
+    not included (use `repro.core.streaming.stream_rounds` to fuse it).
+    With `handoff`, each scan step runs the §11 cross-cell exchange
+    before the round."""
     def body(fl, k):
+        if handoff:
+            fl = exchange_fleet(fl, mob)
         fl, rnd, sel = fleet_round(k, fl, sc, mob, ch, prm,
-                                   handover_delay=handover_delay)
+                                   handover_delay=handover_delay,
+                                   handoff=handoff)
         return fl, (rnd, sel)
     fleet, (rnds, sels) = jax.lax.scan(
         body, fleet, jax.random.split(key, n_rounds))

@@ -28,6 +28,24 @@ queue/energy updates back into the fleet. Axes of configuration:
   handover_delay persistent mode: vehicles entering coverage mid-round
                  become eligible only the *next* round (one-round lag on
                  coverage re-selection).
+  handoff        persistent mode: the B cells are B RSUs on one shared
+                 road network; each scan step starts with the §11
+                 cross-cell exchange (`exchange_fleet`): every vehicle —
+                 position, battery, virtual queue, coverage memory —
+                 migrates to its nearest RSU's cell, capacity-limited.
+                 `handoff=False` is bit-for-bit the B-independent-worlds
+                 behavior.
+
+Queue freeze/restore rule (eqs. 19-20 across coverage gaps): a vehicle's
+virtual queue updates only in rounds it actually plays (selected with
+`valid_* = True`); while it is out of coverage, unselected, or parked by
+the handoff capacity policy, the queue is FROZEN at its last value in
+`FleetState.queue` — time out of coverage neither drains nor grows the
+long-term energy debt. On re-admission the frozen value is RESTORED as
+the round-start queue, whatever role the vehicle now plays. Under
+handoff the queue field migrates with the vehicle in `exchange_fleet`,
+so the debt follows the vehicle into its new cell instead of leaving a
+ghost queue behind (`tests/test_handoff.py` pins all three legs).
   round_chunk    fresh-fleet, carry_queues=False only: solve `round_chunk`
                  rounds per scan step as one widened cell batch, so the
                  per-candidate P4 interior-point solves are batched
@@ -51,8 +69,9 @@ import jax.numpy as jnp
 from repro.channel.mobility import ManhattanParams
 from repro.channel.v2x import ChannelParams
 from repro.core.lyapunov import VedsParams
-from repro.core.scenario import (FleetState, ScenarioParams, fleet_round,
-                                 init_fleet, make_round_batch)
+from repro.core.scenario import (FleetState, ScenarioParams,
+                                 exchange_fleet, fleet_round, init_fleet,
+                                 make_round_batch, rsu_grid)
 from repro.core.scheduler import RoundOutputs, Scheduler, SchedulerCarry
 
 
@@ -67,6 +86,7 @@ class StreamConfig:
     n_fleet: Optional[int] = None   # persistent pool size (default 2(S+U))
     energy_horizon: Optional[float] = None  # battery, in rounds of budget
     handover_delay: bool = False    # persistent mode: one-round lag on entry
+    handoff: bool = False           # persistent mode: cross-cell exchange
     round_chunk: int = 1            # fresh mode: rounds solved per scan step
 
 
@@ -96,6 +116,9 @@ def validate_stream_config(cfg: StreamConfig) -> None:
     if cfg.fresh_fleet and cfg.handover_delay:
         raise ValueError("handover_delay needs the persistent fleet's "
                          "coverage memory (fresh_fleet=False)")
+    if cfg.fresh_fleet and cfg.handoff:
+        raise ValueError("handoff moves vehicles between persistent "
+                         "cells (fresh_fleet=False)")
 
 
 def round_keys(key: jax.Array, cfg: StreamConfig, n_rounds: int,
@@ -121,13 +144,19 @@ def sched_state0(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
     """Initial scheduling-side scan carry: a zero `SchedulerCarry` in
     fresh-fleet mode, a (possibly freshly initialized) `FleetState` in
     persistent mode. `key` must be the same key later given to
-    `round_keys` so a rollout is reproducible from its arguments."""
+    `round_keys` so a rollout is reproducible from its arguments.
+
+    With `cfg.handoff` the default fleet's RSUs sit on the
+    overlapping-coverage grid (`rsu_grid`) — the B cells share one road
+    network, so independent random placements would make migration an
+    accident of the draw. Pass an explicit `fleet` to override."""
     if cfg.fresh_fleet:
         return _zero_carry(sc, int(cfg.batch))
     if fleet is None:
+        rsu = rsu_grid(int(cfg.batch), mob) if cfg.handoff else None
         fleet = init_fleet(jax.random.fold_in(key, 0xF1EE7), sc, mob,
                            int(cfg.batch), n_fleet=cfg.n_fleet,
-                           energy_horizon=cfg.energy_horizon)
+                           energy_horizon=cfg.energy_horizon, rsu_xy=rsu)
     return fleet
 
 
@@ -145,8 +174,11 @@ def sched_round_step(state: SchedState, k: jax.Array, sched: Scheduler,
                                 state if cfg.carry_queues else None)
         return out.carry, out
 
+    if cfg.handoff:
+        state = exchange_fleet(state, mob)
     fl, rnd, sel = fleet_round(k, state, sc, mob, ch, prm,
-                               handover_delay=cfg.handover_delay)
+                               handover_delay=cfg.handover_delay,
+                               handoff=cfg.handoff)
     B = fl.batch_size
     rows = jnp.arange(B)[:, None]
     qs_old = jnp.take_along_axis(fl.queue, sel.sov_idx, axis=1)
@@ -154,9 +186,14 @@ def sched_round_step(state: SchedState, k: jax.Array, sched: Scheduler,
     c_in = (SchedulerCarry(qs=qs_old, qu=qu_old)
             if cfg.carry_queues else None)
     out = sched.solve_round(rnd, prm, ch, c_in)
-    # scatter the round-end queues back to the fleet slots that played
-    # this round (padded selections keep their old queue), and drain
-    # the residual batteries by the energy actually spent
+    # Freeze/restore (module doc): round-end queues scatter back ONLY to
+    # the fleet slots that actually played this round — a vehicle in a
+    # padded selection slot (valid_* False) keeps its frozen queue, and
+    # unselected vehicles are never written at all. The frozen value is
+    # what the gather above restores when the vehicle is re-admitted;
+    # under handoff it already migrated with the vehicle in
+    # exchange_fleet. Batteries likewise drain only by energy actually
+    # spent (valid slots).
     queue = fl.queue
     if cfg.carry_queues:
         queue = queue.at[rows, sel.sov_idx].set(

@@ -174,6 +174,7 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
                   shards: ClientShards, carry: RolloutCarry, *,
                   lr: float = 0.05, clip: float = 5.0, opt=None,
                   steps: Optional[jax.Array] = None,
+                  active: Optional[jax.Array] = None,
                   unroll: int = 1) -> FusedResult:
     """One `lax.scan` for a (segment of a) training run: scheduling +
     minibatch gather + local SGD + aggregation per step.
@@ -185,6 +186,17 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
                            (sched=fleet-or-queues, params, opt_state)
       steps [R]            absolute round indices (optimizer schedules);
                            defaults to arange(R)
+      active [R] bool      no-op mask: an inactive round's scan step
+                           computes and then discards everything — the
+                           carry (scheduling state, params, optimizer
+                           state) passes through untouched, bit-for-bit.
+                           `run_fl` pads every eval segment to ONE
+                           common length with inactive tail rounds, so a
+                           whole run compiles a single segment shape
+                           instead of up to three (1 / eval_every /
+                           remainder). Defaults to all-active; outputs
+                           and losses of inactive rounds are garbage and
+                           must be ignored by the caller.
       unroll               rounds unrolled per scan iteration. XLA CPU
                            executes `while`-loop bodies with degraded
                            intra-op threading, so compute-bound local
@@ -208,6 +220,8 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
     R = keys.shape[0]
     if steps is None:
         steps = jnp.arange(R)
+    if active is None:
+        active = jnp.ones((R,), bool)
 
     def train_cell(p, os_, sel_c, u_c, mask_c, r):
         losses, grads, nf = local_grads(p, loss_fn, shards, sel_c, u_c)
@@ -220,7 +234,7 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
         return new_p, new_os, loss
 
     def body(c: RolloutCarry, x):
-        k, sel_r, u_r, r = x
+        k, sel_r, u_r, r, a = x
         st, out = sched_round_step(c.sched, k, sched, sc, mob, ch, prm,
                                    cfg)
         mask = out.success.astype(jnp.float32)               # [B, S]
@@ -229,13 +243,20 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
             c.params, c.opt_state, sel_r, u_r, mask, r)
         if c.opt_state is None:
             new_os = None
-        return RolloutCarry(sched=st, params=new_p,
-                            opt_state=new_os), (out, loss)
+        new_c = RolloutCarry(sched=st, params=new_p, opt_state=new_os)
+        # inactive (padding) rounds are pure no-ops: the whole carry is
+        # selected back, so padded segments are bit-for-bit equal to
+        # unpadded ones on the rounds that count
+        new_c = jax.tree.map(lambda n, o: jnp.where(a, n, o), new_c, c)
+        return new_c, (out, loss)
 
     end, (outs, losses) = jax.lax.scan(body, carry,
-                                       (keys, sel, mb_u, steps),
+                                       (keys, sel, mb_u, steps, active),
                                        unroll=min(int(unroll), R))
     fleet = None if cfg.fresh_fleet else end.sched
+    # `.carry` reports the last ACTIVE round's queues — with a padded
+    # segment the trailing scan steps are no-ops whose outputs are junk
+    last = jnp.max(jnp.where(active, jnp.arange(R), -1))
     return FusedResult(params=end.params, opt_state=end.opt_state,
                        outputs=outs, loss=losses, fleet=fleet,
-                       carry=jax.tree.map(lambda x: x[-1], outs.carry))
+                       carry=jax.tree.map(lambda x: x[last], outs.carry))

@@ -76,6 +76,10 @@ class FLSimConfig:
     #                              raise for compute-bound local models on
     #                              CPU (loop bodies lose intra-op threads)
     handover_delay: bool = False  # streaming: one-round coverage lag
+    # (No handoff knob: run_fl trains ONE cell (batch=1), where the §11
+    # cross-cell exchange is the identity by construction. Multi-cell
+    # handoff rollouts go through stream_rounds / fused_rollout, which
+    # take a full StreamConfig.)
 
 
 # Bounded: keyed partly on the user's loss_fn, so a caller passing a
@@ -100,14 +104,18 @@ def _apply(lr: float):
 def _fused_segment(loss_fn: Callable, sched_name: str, sc, mob, ch, prm,
                    cfg: StreamConfig, lr: float, unroll: int):
     """Jitted fused-rollout segment, cached across `run_fl` calls (the
-    per-call jit wrappers would otherwise re-trace every invocation)."""
+    per-call jit wrappers would otherwise re-trace every invocation).
+    Callers normalize `cfg.n_rounds` to 0 — the segment's length comes
+    from the `keys` argument, so runs that differ only in total round
+    count share one cache entry (and one compiled program when their
+    segment lengths match)."""
     sched = get_scheduler(sched_name)
 
     @jax.jit
-    def seg(carry, keys, sel, mb_u, shards, steps):
+    def seg(carry, keys, sel, mb_u, shards, steps, active):
         return fused_rollout(keys, sel, mb_u, sched, sc, mob, ch, prm,
                              cfg, loss_fn, shards, carry, lr=lr,
-                             steps=steps, unroll=unroll)
+                             steps=steps, active=active, unroll=unroll)
 
     return seg
 
@@ -264,7 +272,8 @@ def _run_fused(key, params, loss_fn, shards: ClientShards,
     keys = round_keys(k_sched, cfg, R)
     carry = init_carry(k_sched, sc, mob, cfg, params)
     seg_fn = _fused_segment(loss_fn, sim.scheduler, sc, mob, ch, prm,
-                            cfg, sim.lr, max(1, sim.fused_unroll))
+                            dataclasses.replace(cfg, n_rounds=0),
+                            sim.lr, max(1, sim.fused_unroll))
 
     if eval_fn is None:
         cuts = [R]
@@ -272,13 +281,27 @@ def _run_fused(key, params, loss_fn, shards: ClientShards,
         evals = [r for r in range(R)
                  if r % eval_every == 0 or r == R - 1]
         cuts = [e + 1 for e in evals]
+    # one compiled segment length for the whole run: every segment is
+    # padded to the longest with no-op (inactive) tail rounds, so the
+    # run compiles ONE program instead of up to three (the 1-round
+    # r=0-eval segment, the eval_every middle, and the remainder)
+    L = max(cut - r0 for r0, cut in zip([0] + cuts[:-1], cuts))
+
+    def padded(x, r0, n):
+        s = x[r0:r0 + n]
+        if n < L:
+            s = jnp.concatenate(
+                [s, jnp.broadcast_to(s[-1:], (L - n,) + s.shape[1:])])
+        return s
 
     history = {"round": [], "time": [], "n_success": [], "metric": [],
                "scheduled_rounds": R}
     r0 = 0
     for cut in cuts:
-        res = seg_fn(carry, keys[r0:cut], sel[r0:cut], mb_u[r0:cut],
-                     shards, jnp.arange(r0, cut))
+        n = cut - r0
+        res = seg_fn(carry, padded(keys, r0, n), padded(sel, r0, n),
+                     padded(mb_u, r0, n), shards,
+                     padded(jnp.arange(R), r0, n), jnp.arange(L) < n)
         carry = RolloutCarry(
             sched=res.fleet if res.fleet is not None else res.carry,
             params=res.params, opt_state=res.opt_state)
@@ -286,7 +309,8 @@ def _run_fused(key, params, loss_fn, shards: ClientShards,
             r = cut - 1
             history["round"].append(r)
             history["time"].append((r + 1) * sim.n_slots * prm.slot)
-            history["n_success"].append(int(res.outputs.n_success[-1, 0]))
+            history["n_success"].append(
+                int(res.outputs.n_success[n - 1, 0]))
             history["metric"].append(float(eval_fn(
                 jax.tree.map(lambda x: x[0], res.params))))
         r0 = cut

@@ -45,6 +45,10 @@ _DEFAULT_TABLE: Mapping[str, Optional[str]] = {
     "vehicle": "data",     # per-vehicle param replicas in the VFL round
     "round": None,         # fused-rollout round axis: scanned, never sharded
     "client": "data",      # padded [C, n_max, ...] client shards (§10)
+    "cell": "data",        # FleetState [B, N, ...] leading RSU-cell axis
+    "fleet": None,         # per-cell vehicle pool slot axis: the §11
+    #                        exchange permutes the flat cell x fleet
+    #                        layout, so it must stay whole per shard
     "seq": None,
     "cache_seq": "model",   # decode caches: sequence dim sharded (flash-decode)
     # params
@@ -119,6 +123,27 @@ def fused_batch_spec(rules: LogicalRules, ndim: int) -> P:
     axis shards over the data axes, and each vehicle's local samples stay
     with its replica."""
     return P(rules.mesh_axis("round"), rules.mesh_axis("vehicle"),
+             *([None] * max(ndim - 2, 0)))
+
+
+def fleet_spec(rules: LogicalRules, ndim: int) -> P:
+    """PartitionSpec for a persistent-fleet leaf `[B, N, ...]`
+    (DESIGN.md §9/§11): the cell axis shards over the data axes, the
+    per-cell vehicle slots and any trailing dims stay local.
+
+    Sharding contract of the §11 cross-cell exchange
+    (`repro.core.scenario.exchange_fleet`): the exchange is a
+    permutation of the flat `[B * N]` vehicle layout whose destination
+    rows are data-dependent (nearest-RSU argmin), i.e. with the cell
+    axis sharded it lowers to an all-to-all over the vehicle axis —
+    every device may send any of its vehicles to any other cell's
+    shard. GSPMD emits that collective from this spec as-is; no
+    per-device code is needed. The nearest-RSU distance matrix
+    `[B*N, B]` needs every RSU position on every shard, so
+    `FleetState.rsu_xy [B, 2]` should be replicated (spec `P()`),
+    never sharded by cell.
+    """
+    return P(rules.mesh_axis("cell"), rules.mesh_axis("fleet"),
              *([None] * max(ndim - 2, 0)))
 
 

@@ -9,6 +9,18 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 import pytest  # noqa: E402
 
+# Persistent XLA compilation cache: tier-1 is compile-dominated (~100+
+# distinct jitted programs at a few seconds each), and the cache works on
+# the CPU backend — warm re-runs skip XLA entirely (tracing still runs).
+# CI restores .jax_cache via actions/cache; locally it just accumulates.
+try:
+    jax.config.update(
+        "jax_compilation_cache_dir",
+        os.path.join(os.path.dirname(__file__), "..", ".jax_cache"))
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 1.0)
+except Exception:                       # older jax: no persistent cache
+    pass
+
 # The sharded decode/train paths target the explicit-axis-type mesh APIs
 # (jax.sharding.AxisType, jax.set_mesh, jax.shard_map). On older jax
 # (e.g. 0.4.x) those tests cannot run at all — skip them with a clear
@@ -19,6 +31,18 @@ requires_mesh_api = pytest.mark.skipif(
     not HAS_MESH_API,
     reason="needs jax>=0.7 mesh APIs (jax.sharding.AxisType / "
            "jax.shard_map); toolchain has jax " + jax.__version__)
+
+
+def mark_slow_unless(values, quick):
+    """Parametrize a compile-heavy matrix for the two-lane test split:
+    each entry of `values` (a scalar or a tuple of argvalues) stays in
+    the quick lane iff it is in `quick`; everything else gets the
+    `slow` mark (weekly CI / -m slow runs the full matrix). One shared
+    definition so the quick-representative sets live next to their
+    parametrize calls but the mechanism cannot drift between files."""
+    return [pytest.param(*(v if isinstance(v, tuple) else (v,)),
+                         marks=() if v in quick else (pytest.mark.slow,))
+            for v in values]
 
 
 @pytest.fixture(scope="session")

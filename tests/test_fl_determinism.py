@@ -44,7 +44,7 @@ def setup():
 def _go(setup, **kw):
     params, loss_fn, data, eval_fn = setup
     sim = FLSimConfig(n_clients=N_CLIENTS, rounds=7, scheduler="madca",
-                      n_slots=10, n_sov=4, n_opv=3, batch_size=8, **kw)
+                      n_slots=6, n_sov=4, n_opv=3, batch_size=8, **kw)
     return run_fl(jax.random.key(7), params, loss_fn, data, sim,
                   eval_fn=eval_fn, eval_every=3)
 
@@ -53,7 +53,9 @@ def test_history_identical_across_round_batch(setup):
     """Satellite: fixed seed => the same history whether rounds are
     dispatched one at a time or in blocks of 4 (7 % 4 != 0 also covers
     the trailing partial block), and across repeated invocations —
-    pinning the host-RNG client-selection contract."""
+    pinning the host-RNG client-selection contract. The trailing
+    partial block must schedule exactly `rounds` rounds, never padded
+    cells."""
     h1 = _go(setup, round_batch=1)
     h1b = _go(setup, round_batch=1)
     h4 = _go(setup, round_batch=4)
@@ -62,14 +64,15 @@ def test_history_identical_across_round_batch(setup):
     assert h1["n_success"] == h4["n_success"]
     np.testing.assert_allclose(h1["metric"], h4["metric"], rtol=1e-6)
     assert h1["time"] == h4["time"]
+    assert h1["scheduled_rounds"] == h4["scheduled_rounds"] == 7
 
 
-def test_trailing_block_schedules_exact_round_count(setup):
-    """Satellite: rounds % round_batch != 0 must not schedule (and pay
-    for) padded cells — exactly `rounds` rounds are scheduled."""
-    for rb in (4, 7):                # trailing block of 3; exact fit
-        h = _go(setup, round_batch=rb)
-        assert h["scheduled_rounds"] == 7, (rb, h["scheduled_rounds"])
+@pytest.mark.slow
+def test_exact_fit_block_schedules_exact_round_count(setup):
+    """rounds % round_batch == 0 (one exact-fit block) also schedules
+    exactly `rounds` rounds."""
+    h = _go(setup, round_batch=7)
+    assert h["scheduled_rounds"] == 7
 
 
 def test_streaming_mode_runs_and_is_deterministic(setup):

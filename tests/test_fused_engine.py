@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import mark_slow_unless
 
 from repro.channel.mobility import ManhattanParams
 from repro.channel.v2x import ChannelParams
@@ -97,12 +98,15 @@ def _blocked_reference(sched, cfg, shards, params, sel, mb_u, lr):
     return params_b, np.stack(succ), np.stack(losses)
 
 
-@pytest.mark.parametrize("name", sorted(SCHEDULERS))
-@pytest.mark.parametrize("B", [1, 3])
+@pytest.mark.parametrize("name,B", mark_slow_unless(
+    [(n, b) for n in sorted(SCHEDULERS) for b in (1, 3)],
+    {("madca", 1), ("optimal", 1)}))
 def test_fused_matches_blocked(name, B, problem):
     """Acceptance: the fused one-scan engine reproduces the blocked
     per-round path — success masks bit-for-bit, per-round training loss
-    and final params to fp32 tolerance."""
+    and final params to fp32 tolerance. Quick lane runs the two
+    cheap-compile B=1 representatives; the full scheduler x batch
+    matrix is slow-lane (weekly CI / -m slow)."""
     params, _, shards = problem
     R, S = 3, SC.n_sov
     lr = 0.1
@@ -126,9 +130,11 @@ def test_fused_matches_blocked(name, B, problem):
                                    rtol=2e-5, atol=1e-6)
 
 
+@pytest.mark.slow
 def test_unroll_is_semantics_free(problem):
     """`unroll` (CPU loop-body threading escape hatch) changes compile
-    strategy only: the rollout must be identical for any setting."""
+    strategy only: the rollout must be identical for any setting.
+    Slow lane: each unroll setting pays a full fused-rollout compile."""
     params, _, shards = problem
     R, B, S = 4, 1, SC.n_sov
     cfg = StreamConfig(n_rounds=R, batch=B, fresh_fleet=True)
@@ -136,12 +142,12 @@ def test_unroll_is_semantics_free(problem):
     mb_u = jax.random.uniform(jax.random.key(3), (R, B, S, BS))
     keys = round_keys(KEY, cfg, R)
     res = {}
-    for unroll in (1, 2, 8):
+    for unroll in (1, 3):      # 3 also covers the non-divisible tail
         res[unroll] = fused_rollout(
             keys, sel, mb_u, get_scheduler("madca"), SC, MOB, CH, PRM,
             cfg, _loss_fn, shards, init_carry(KEY, SC, MOB, cfg, params),
             lr=0.1, unroll=unroll)
-    for unroll in (2, 8):
+    for unroll in (3,):
         np.testing.assert_array_equal(
             np.asarray(res[unroll].outputs.success),
             np.asarray(res[1].outputs.success))
@@ -167,13 +173,13 @@ def test_padded_zero_sample_client_never_moves_model(problem):
     sel = jax.random.randint(jax.random.key(2), (R, B, S), 3, N_CLIENTS)
     sel = sel.at[:, :, 0].set(2)
     mb_u = jax.random.uniform(jax.random.key(3), (R, B, S, BS))
+    run = jax.jit(lambda k, s: fused_rollout(   # one compile, two shards
+        k, sel, mb_u, get_scheduler("madca"), SC, MOB, CH, PRM, cfg,
+        _loss_fn, s, init_carry(KEY, SC, MOB, cfg, params), lr=0.1))
     outs = {}
     for tag, d in (("clean", pad_data), ("poisoned", poisoned)):
-        shards = ClientShards(data=d, n_samples=n)
-        outs[tag] = fused_rollout(
-            round_keys(KEY, cfg, R), sel, mb_u, get_scheduler("madca"),
-            SC, MOB, CH, PRM, cfg, _loss_fn, shards,
-            init_carry(KEY, SC, MOB, cfg, params), lr=0.1)
+        outs[tag] = run(round_keys(KEY, cfg, R),
+                        ClientShards(data=d, n_samples=n))
     w_clean = np.asarray(outs["clean"].params["w"])
     w_pois = np.asarray(outs["poisoned"].params["w"])
     assert np.isfinite(w_pois).all()
@@ -288,6 +294,38 @@ def test_fused_run_fl_matches_host_gather_streaming(fl_setup):
     assert hf["n_success"] == hg["n_success"]
     np.testing.assert_allclose(hf["metric"], hg["metric"], rtol=1e-5)
     np.testing.assert_allclose(hf["time"], hg["time"], rtol=1e-6)
+
+
+def test_fused_run_fl_compiles_one_segment_shape(fl_setup):
+    """Satellite: with eval segmentation the run used to compile up to
+    three distinct segment lengths (1, eval_every, remainder); the
+    padded no-op tail now serves every segment from ONE compiled shape
+    — asserted via the jitted segment's compile-cache size."""
+    from repro.channel.mobility import ManhattanParams
+    from repro.channel.v2x import ChannelParams
+    from repro.core.lyapunov import VedsParams
+    from repro.fl.simulator import _fused_segment, _stream_cfg
+
+    params, data, eval_fn = fl_setup
+    # scheduler "sa" keeps this test's segment distinct from the madca
+    # segments other tests in this module share via the lru cache
+    sim = FLSimConfig(n_clients=N_CLIENTS, rounds=7, scheduler="sa",
+                      n_slots=10, n_sov=4, n_opv=3, batch_size=BS,
+                      streaming=True)
+    # rounds=7, eval_every=3 -> evals at 0, 3, 6: segment lengths 1/3/3
+    h = run_fl(jax.random.key(7), params, _loss_fn, data, sim,
+               eval_fn=eval_fn, eval_every=3)
+    assert h["round"] == [0, 3, 6]
+    seg = _fused_segment(
+        _loss_fn, sim.scheduler,
+        ScenarioParams(n_sov=sim.n_sov, n_opv=sim.n_opv,
+                       n_slots=sim.n_slots, batch_size=sim.batch_size),
+        ManhattanParams(v_max=sim.v_max), ChannelParams(),
+        VedsParams(alpha=sim.alpha, V=sim.V, Q=sim.q_bits, slot=0.1),
+        dataclasses.replace(_stream_cfg(sim), n_rounds=0), sim.lr, 1)
+    if not hasattr(seg, "_cache_size"):
+        pytest.skip("jax has no jit _cache_size introspection")
+    assert seg._cache_size() == 1
 
 
 def test_run_fl_accepts_prepadded_shards(fl_setup):

@@ -1,0 +1,385 @@
+"""Multi-RSU handoff: cross-cell vehicle exchange (DESIGN.md §11).
+
+Covers the exchange invariants — vehicle conservation across cells (no
+duplicate, no lost vehicle), nearest-RSU admission, capacity-overflow
+parking, queue/battery state traveling with the vehicle — the explicit
+queue freeze/restore rule across coverage gaps, `handoff=False`
+bit-for-bit parity with the pre-handoff streaming behavior for all five
+schedulers, and the acceptance rollout: a grid-topology streaming run
+where a large fraction of vehicles migrate cells, still one compiled
+program, conserving vehicles exactly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import mark_slow_unless
+
+from repro.channel.mobility import ManhattanParams
+from repro.channel.v2x import ChannelParams
+from repro.core.baselines import SCHEDULERS, get_scheduler
+from repro.core.lyapunov import VedsParams
+from repro.core.scenario import (FleetState, ScenarioParams,
+                                 exchange_fleet, fleet_round, init_fleet,
+                                 migrated_fraction, rsu_grid)
+from repro.core.scheduler import SchedulerCarry
+from repro.core.streaming import (StreamConfig, sched_round_step,
+                                  stream_rounds, validate_stream_config)
+
+MOB = ManhattanParams(v_max=10.0)
+CH = ChannelParams()
+PRM = VedsParams(alpha=2.0, V=0.2, Q=1e7, slot=0.1)
+SC = ScenarioParams(n_sov=3, n_opv=2, n_slots=6)
+KEY = jax.random.key(0)
+B, N = 3, 8
+
+PER_VEHICLE = ("pos", "dir", "speed", "jitter", "allowance", "energy",
+               "queue", "covered")
+
+
+
+
+def _tagged_fleet(key, batch=B, n_fleet=N, rsu=None, **kw) -> FleetState:
+    """A fleet whose jitter/queue fields are unique per-vehicle tags, so
+    identity can be tracked through any permutation."""
+    fl = init_fleet(key, SC, MOB, batch,
+                    n_fleet=n_fleet, rsu_xy=rsu, **kw)
+    tags = jnp.arange(batch * n_fleet, dtype=jnp.float32).reshape(
+        batch, n_fleet)
+    return dataclasses.replace(fl, jitter=tags, queue=10.0 * tags)
+
+
+def _row_of(fleet: FleetState):
+    """tag -> row map from the jitter tags."""
+    j = np.asarray(fleet.jitter)
+    return {float(t): b for b in range(j.shape[0]) for t in j[b]}
+
+
+# ---- exchange invariants ------------------------------------------------
+
+@pytest.fixture(scope="module")
+def grid_fleet():
+    return _tagged_fleet(jax.random.key(1), rsu=rsu_grid(B, MOB))
+
+
+@pytest.fixture(scope="module")
+def exchanged(grid_fleet):
+    return jax.jit(lambda f: exchange_fleet(f, MOB))(grid_fleet)
+
+
+def test_exchange_conserves_vehicles(grid_fleet, exchanged):
+    """No duplicate, no lost vehicle: the tag multiset is preserved, and
+    every per-vehicle field travels with its tag."""
+    t0 = np.sort(np.asarray(grid_fleet.jitter).ravel())
+    t1 = np.sort(np.asarray(exchanged.jitter).ravel())
+    np.testing.assert_array_equal(t0, t1)
+    # the queue tag (10 * jitter tag) moved with the same vehicle
+    np.testing.assert_allclose(np.asarray(exchanged.queue),
+                               10.0 * np.asarray(exchanged.jitter))
+    # positions were permuted with their vehicle, not recomputed
+    tag0 = np.asarray(grid_fleet.jitter).ravel()
+    tag1 = np.asarray(exchanged.jitter).ravel()
+    p0 = np.asarray(grid_fleet.pos).reshape(-1, 2)
+    p1 = np.asarray(exchanged.pos).reshape(-1, 2)
+    np.testing.assert_array_equal(p0[np.argsort(tag0)],
+                                  p1[np.argsort(tag1)])
+
+
+def test_exchange_assigns_nearest_rsu(exchanged):
+    """Every admitted vehicle sits in the row of its nearest RSU."""
+    pos = np.asarray(exchanged.pos)
+    rsu = np.asarray(exchanged.rsu_xy)
+    d = np.linalg.norm(pos[:, :, None, :] - rsu[None, None], axis=-1)
+    tgt = d.argmin(-1)                                       # [B,N]
+    cid = np.asarray(exchanged.cell_id)
+    rows = np.broadcast_to(np.arange(B)[:, None], cid.shape)
+    adm = cid >= 0
+    assert adm.any()
+    np.testing.assert_array_equal(cid[adm], rows[adm])
+    np.testing.assert_array_equal(tgt[adm], rows[adm])
+
+
+def test_exchange_migrants_lose_coverage_memory(grid_fleet, exchanged):
+    """A vehicle that changed cells gets covered=False — under
+    handover_delay it sits out one round in the new cell."""
+    row0, row1 = _row_of(grid_fleet), _row_of(exchanged)
+    j1, cov1 = np.asarray(exchanged.jitter), np.asarray(exchanged.covered)
+    moved = np.vectorize(lambda t: row0[t] != row1[t])(j1.astype(float))
+    assert moved.any()
+    assert not cov1[moved].any()
+
+
+def test_exchange_capacity_overflow_parks(grid_fleet):
+    """All vehicles piled onto RSU 0: exactly N admitted (first-come by
+    flat slot order), the rest parked in the remaining rows with
+    cell_id=-1 / covered=False — and still conserved."""
+    piled = dataclasses.replace(
+        grid_fleet,
+        pos=jnp.broadcast_to(grid_fleet.rsu_xy[0], (B, N, 2)))
+    ex = exchange_fleet(piled, MOB)
+    cid = np.asarray(ex.cell_id)
+    np.testing.assert_array_equal(cid[0], np.zeros(N, np.int32))
+    np.testing.assert_array_equal(cid[1:], -np.ones((B - 1, N), np.int32))
+    assert not np.asarray(ex.covered)[1:].any()
+    # first-come: cell 0 keeps its own vehicles (lowest flat indices)
+    np.testing.assert_array_equal(np.asarray(ex.jitter)[0],
+                                  np.asarray(piled.jitter)[0])
+    t0 = np.sort(np.asarray(piled.jitter).ravel())
+    t1 = np.sort(np.asarray(ex.jitter).ravel())
+    np.testing.assert_array_equal(t0, t1)
+
+
+def test_exchange_b1_is_identity():
+    fl = _tagged_fleet(jax.random.key(2), batch=1)
+    ex = exchange_fleet(fl, MOB)
+    for f in PER_VEHICLE:
+        np.testing.assert_array_equal(np.asarray(getattr(fl, f)),
+                                      np.asarray(getattr(ex, f)))
+    assert (np.asarray(ex.cell_id) == 0).all()
+
+
+def test_parked_vehicles_ineligible():
+    """fleet_round(handoff=True) must not select a parked vehicle even
+    if it is physically inside the row's coverage."""
+    fl = _tagged_fleet(jax.random.key(3), batch=2, n_fleet=N)
+    rsu = jnp.broadcast_to(fl.rsu_xy[:, None], fl.pos.shape)
+    parked = jnp.zeros((2, N), jnp.int32).at[:, :2].set(-1)
+    parked = jnp.where(parked < 0, -1, jnp.arange(2, dtype=jnp.int32)[:, None])
+    fl = dataclasses.replace(fl, pos=rsu, speed=jnp.zeros_like(fl.speed),
+                             cell_id=parked)
+    _, rnd, sel = jax.jit(lambda k, f: fleet_round(
+        k, f, SC, MOB, CH, PRM, handoff=True))(jax.random.key(4), fl)
+    sov, opv = np.asarray(sel.sov_idx), np.asarray(sel.opv_idx)
+    vs, vo = np.asarray(rnd.valid_sov), np.asarray(rnd.valid_opv)
+    for b in range(2):
+        assert not (set(sov[b][vs[b]]) | set(opv[b][vo[b]])) & {0, 1}
+
+
+# ---- queue freeze / restore rule ---------------------------------------
+
+def test_queue_freezes_while_out_and_restores_on_readmission():
+    """The explicit rule: a vehicle's virtual queue updates only in
+    rounds it plays; out of coverage it is frozen bit-for-bit, and the
+    frozen value is the round-start queue when re-admitted."""
+    # B=1, N = S + U: everyone plays while covered. Park the pool at the
+    # RSU except vehicle 0, exiled out of coverage with a distinctive
+    # queue value.
+    n = SC.n_sov + SC.n_opv
+    marker = float(np.float32(1.2345))
+    fl = _tagged_fleet(jax.random.key(5), batch=1, n_fleet=n)
+    rsu = jnp.broadcast_to(fl.rsu_xy[:, None], fl.pos.shape)
+    far = rsu.at[0, 0].set(jnp.array([0.0, 0.0]))
+    fl = dataclasses.replace(fl, pos=far, speed=jnp.zeros_like(fl.speed),
+                             queue=fl.queue.at[0, 0].set(marker))
+    cfg = StreamConfig(n_rounds=1, batch=1, carry_queues=True)
+    sched = get_scheduler("sa")
+    step = jax.jit(lambda s, k: sched_round_step(s, k, sched, SC, MOB,
+                                                 CH, PRM, cfg))
+    fl1, out1 = step(fl, jax.random.key(6))
+    # FREEZE: the exiled vehicle's queue is untouched, bit-for-bit;
+    # playing vehicles' queues moved off their tags
+    assert float(fl1.queue[0, 0]) == marker
+    assert (np.asarray(fl1.queue)[0, 1:] !=
+            np.asarray(fl.queue)[0, 1:]).any()
+    # RESTORE: bring it back into coverage -> its round-start queue is
+    # the frozen value, pinned against an explicit solve_round carry
+    fl_back = dataclasses.replace(fl1, pos=rsu,
+                                  covered=jnp.ones_like(fl1.covered))
+    k = jax.random.key(7)
+    fl2, out2 = step(fl_back, k)
+    _, rnd, sel = fleet_round(k, fl_back, SC, MOB, CH, PRM)
+    qs = jnp.take_along_axis(fl_back.queue, sel.sov_idx, axis=1)
+    qu = jnp.take_along_axis(fl_back.queue, sel.opv_idx, axis=1)
+    assert marker in np.concatenate([np.asarray(qs), np.asarray(qu)], 1)
+    ref = sched.solve_round(rnd, PRM, CH, SchedulerCarry(qs=qs, qu=qu))
+    np.testing.assert_array_equal(np.asarray(out2.carry.qs),
+                                  np.asarray(ref.carry.qs))
+    np.testing.assert_array_equal(np.asarray(out2.carry.qu),
+                                  np.asarray(ref.carry.qu))
+
+
+def test_queue_travels_with_vehicle_across_cells(grid_fleet, exchanged):
+    """Under handoff the queue is per-vehicle state, not per-slot state:
+    no ghost queue stays behind in the old cell (pinned by the tag
+    coupling in test_exchange_conserves_vehicles; here: a migrated
+    vehicle's queue shows up in its NEW row)."""
+    row0, row1 = _row_of(grid_fleet), _row_of(exchanged)
+    moved_tags = [t for t in row0 if row0[t] != row1[t]]
+    assert moved_tags
+    q1 = np.asarray(exchanged.queue)
+    for t in moved_tags[:5]:
+        assert 10.0 * t in q1[row1[t]]
+        assert 10.0 * t not in q1[row0[t]]
+
+
+# ---- handoff=False parity (all five schedulers) ------------------------
+
+@pytest.mark.parametrize("name,B_", mark_slow_unless(
+    [(n, b) for n in sorted(SCHEDULERS) for b in (1, 3)],
+    {("madca", 1), ("optimal", 1)}))
+def test_handoff_false_matches_pre_handoff_replay(name, B_):
+    """Acceptance: with handoff=False the streaming rollout is
+    bit-for-bit the pre-handoff behavior — pinned against a host-side
+    replay of the original scan body (fleet_round -> gather -> solve ->
+    scatter, no exchange, no cell_id read: its value is poisoned to
+    prove it is dead). Quick lane runs the cheap-compile B=1 cases;
+    the full five-scheduler x B matrix is slow-lane."""
+    R = 2
+    sched = get_scheduler(name)
+    fleet = init_fleet(jax.random.key(10), SC, MOB, B_, n_fleet=N)
+    # poison the new field: handoff=False must never read it
+    fleet = dataclasses.replace(
+        fleet, cell_id=jnp.full_like(fleet.cell_id, -7))
+    cfg = StreamConfig(n_rounds=R, batch=B_, carry_queues=True)
+    key = jax.random.key(11)
+    res = jax.jit(lambda k, f: stream_rounds(
+        k, sched, SC, MOB, CH, PRM, cfg, fleet=f))(key, fleet)
+
+    fl = fleet
+    rows = jnp.arange(B_)[:, None]
+    for r, k in enumerate(jax.random.split(key, R)):
+        fl, rnd, sel = fleet_round(k, fl, SC, MOB, CH, PRM)
+        qs = jnp.take_along_axis(fl.queue, sel.sov_idx, axis=1)
+        qu = jnp.take_along_axis(fl.queue, sel.opv_idx, axis=1)
+        out = sched.solve_round(rnd, PRM, CH, SchedulerCarry(qs, qu))
+        queue = fl.queue.at[rows, sel.sov_idx].set(
+            jnp.where(rnd.valid_sov, out.carry.qs, qs))
+        queue = queue.at[rows, sel.opv_idx].set(
+            jnp.where(rnd.valid_opv, out.carry.qu, qu))
+        energy = fl.energy.at[rows, sel.sov_idx].add(
+            -jnp.where(rnd.valid_sov, out.energy_sov, 0.0))
+        energy = energy.at[rows, sel.opv_idx].add(
+            -jnp.where(rnd.valid_opv, out.energy_opv, 0.0))
+        fl = dataclasses.replace(fl, queue=queue,
+                                 energy=jnp.maximum(energy, 0.0))
+        got = jax.tree.map(lambda x: x[r], res.outputs)
+        np.testing.assert_array_equal(np.asarray(got.success),
+                                      np.asarray(out.success),
+                                      err_msg=f"{name}/B{B_}/round{r}")
+        np.testing.assert_allclose(np.asarray(got.zeta),
+                                   np.asarray(out.zeta),
+                                   rtol=2e-5, atol=PRM.Q * 1e-5)
+    np.testing.assert_allclose(np.asarray(res.fleet.queue),
+                               np.asarray(fl.queue), rtol=2e-5, atol=1e-7)
+    # the poisoned field rode through untouched
+    np.testing.assert_array_equal(np.asarray(res.fleet.cell_id),
+                                  np.asarray(fleet.cell_id))
+
+
+@pytest.mark.parametrize(
+    "name", mark_slow_unless(sorted(SCHEDULERS), {"sa"}))
+def test_handoff_b1_bit_for_bit_noop(name):
+    """B=1: the exchange is the identity permutation, so handoff=True
+    must be bit-for-bit handoff=False for every scheduler."""
+    fleet = init_fleet(jax.random.key(12), SC, MOB, 1, n_fleet=N)
+    key = jax.random.key(13)
+    res = {}
+    for ho in (False, True):
+        cfg = StreamConfig(n_rounds=2, batch=1, carry_queues=True,
+                           handoff=ho)
+        res[ho] = jax.jit(lambda k, f, c=cfg: stream_rounds(
+            k, get_scheduler(name), SC, MOB, CH, PRM, c, fleet=f))(
+            key, fleet)
+    np.testing.assert_array_equal(np.asarray(res[True].outputs.success),
+                                  np.asarray(res[False].outputs.success))
+    np.testing.assert_array_equal(np.asarray(res[True].outputs.zeta),
+                                  np.asarray(res[False].outputs.zeta))
+    np.testing.assert_array_equal(np.asarray(res[True].fleet.queue),
+                                  np.asarray(res[False].fleet.queue))
+    np.testing.assert_array_equal(np.asarray(res[True].fleet.pos),
+                                  np.asarray(res[False].fleet.pos))
+
+
+def test_handoff_rejects_fresh_fleet():
+    cfg = StreamConfig(n_rounds=2, batch=2, fresh_fleet=True,
+                       handoff=True)
+    with pytest.raises(ValueError):
+        validate_stream_config(cfg)
+
+
+# ---- acceptance: grid rollout with real migration ----------------------
+
+def test_grid_stream_migrates_and_conserves():
+    """Acceptance: a handoff=True streaming run on the RSU grid — ONE
+    jitted stream_rounds program — where a large fraction (>=10%) of
+    vehicles migrate cells, conserving vehicles exactly; and the
+    exchange actually changes the rollout vs handoff=False."""
+    R = 4
+    fleet = _tagged_fleet(jax.random.key(14), rsu=rsu_grid(B, MOB))
+    outs = {}
+    for ho in (False, True):
+        cfg = StreamConfig(n_rounds=R, batch=B, carry_queues=True,
+                           handoff=ho)
+        outs[ho] = jax.jit(lambda k, f, c=cfg: stream_rounds(
+            k, get_scheduler("sa"), SC, MOB, CH, PRM, c, fleet=f))(
+            jax.random.key(15), fleet)
+    res = outs[True]
+    assert res.outputs.success.shape == (R, B, SC.n_sov)
+    # conservation through the whole rollout
+    t0 = np.sort(np.asarray(fleet.jitter).ravel())
+    t1 = np.sort(np.asarray(res.fleet.jitter).ravel())
+    np.testing.assert_array_equal(t0, t1)
+    # acceptance: >=10% of vehicles ended in a different cell
+    assert migrated_fraction(fleet, res.fleet) >= 0.10
+    # queues stayed coupled to their vehicles or were updated by play —
+    # never NaN, never negative
+    q = np.asarray(res.fleet.queue)
+    assert np.isfinite(q).all() and (q >= 0).all()
+    # and the exchange is not a no-op on this topology
+    assert (np.asarray(res.fleet.jitter) !=
+            np.asarray(outs[False].fleet.jitter)).any()
+
+
+def test_fleet_spec_shards_cell_axis_only():
+    """§11 sharding contract: FleetState leaves shard the cell axis over
+    the data axes; the per-cell slot axis (the exchange's permutation
+    domain) and trailing dims stay local; rsu_xy is replicated."""
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.rules import default_rules, fleet_spec, spec_for
+
+    rules = default_rules()
+    assert fleet_spec(rules, 2) == P("data", None)           # [B, N]
+    assert fleet_spec(rules, 3) == P("data", None, None)     # pos [B,N,2]
+    # rsu_xy must be replicated (every shard evaluates the argmin)
+    assert spec_for(rules, (None, None)) == P(None, None)
+
+
+def test_fused_rollout_picks_up_handoff():
+    """The fused training engine shares sched_round_step: a handoff
+    rollout with training threaded through stays finite and keeps the
+    exchange semantics (cell_id rewritten every round)."""
+    from repro.fl.engine import ClientShards, fused_rollout, init_carry
+    from repro.core.streaming import round_keys
+
+    R, S = 3, SC.n_sov
+    n_cl, dim, classes, bs = 6, 4, 3, 4
+    ks = jax.random.split(jax.random.key(20), n_cl)
+    data = [{"x": jax.random.normal(k, (5, dim)),
+             "y": jax.random.randint(jax.random.fold_in(k, 1), (5,), 0,
+                                     classes)} for k in ks]
+    shards = ClientShards.from_ragged(data)
+    params = {"w": jnp.zeros((dim, classes))}
+
+    def loss_fn(p, b):
+        lo = b["x"] @ p["w"]
+        return -jnp.mean(jax.nn.log_softmax(lo)[
+            jnp.arange(b["y"].shape[0]), b["y"]])
+
+    cfg = StreamConfig(n_rounds=R, batch=B, carry_queues=True,
+                       handoff=True)
+    fleet = _tagged_fleet(jax.random.key(21), rsu=rsu_grid(B, MOB))
+    carry = init_carry(KEY, SC, MOB, cfg, params, fleet=fleet)
+    sel = jax.random.randint(jax.random.key(22), (R, B, S), 0, n_cl)
+    mb_u = jax.random.uniform(jax.random.key(23), (R, B, S, bs))
+    res = jax.jit(lambda c, k, s, u: fused_rollout(
+        k, s, u, get_scheduler("sa"), SC, MOB, CH, PRM, cfg, loss_fn,
+        shards, c, lr=0.1))(carry, round_keys(KEY, cfg, R), sel, mb_u)
+    assert np.isfinite(np.asarray(res.params["w"])).all()
+    assert res.fleet is not None
+    t0 = np.sort(np.asarray(fleet.jitter).ravel())
+    t1 = np.sort(np.asarray(res.fleet.jitter).ravel())
+    np.testing.assert_array_equal(t0, t1)
+    cid = np.asarray(res.fleet.cell_id)
+    assert ((cid == -1) | (cid == np.arange(B)[:, None])).all()
