@@ -21,6 +21,15 @@ aggregation — as one program (`run_fl(streaming=True)`, fused) against
 the host-gather streaming path (one-dispatch scheduling, per-round host
 loop for gather + update).
 
+`warm_ipm_sweep` carries the warm-started interior-point story
+(DESIGN.md §3/§9): persistent VEDS+COT streaming with the P4 warm-start
+table threaded through the scan carry (`VedsParams.ipm_warm_iters`
+Newton steps per candidate, seeded from the previous optimum) against
+the cold persistent stream and the blocked per-round loop — the
+acceptance is warm >= 2x blocked rounds/s at `ipm_warm_iters <=
+ipm_iters / 2` (the cold persistent stream measures ~1.3x, dispatch
+amortization only).
+
 `handoff_sweep` carries the multi-RSU handoff story (DESIGN.md §11):
 B cells as B RSUs on one overlapping-coverage grid with the cross-cell
 exchange running every scan step, vs the same rollout with handoff
@@ -34,6 +43,7 @@ jit contracts) without paying benchmark-scale runtimes.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import math
 
@@ -149,6 +159,56 @@ def cot_stream_sweep(R: int = 20, round_chunk: int = 10, *,
              t_blocked / t_stream)]
 
 
+def warm_ipm_sweep(R: int = 20, *, ipm_iters: int = 25,
+                   warm_iters: int = 10, n_sov: int = 4, n_opv: int = 4,
+                   n_slots: int = 20, n_fleet: int | None = None):
+    """Warm-started interior-point streaming (ROADMAP item closed by
+    ISSUE 5): persistent VEDS+COT with `FleetState.p4_tab` seeding every
+    candidate's P4 solve (`warm_iters <= ipm_iters / 2` Newton steps)
+    vs the cold persistent stream (full budget, the prior ~1.3x) and
+    the blocked per-round loop. Returns one row
+    (scheduler, R, blocked_rps, cold_rps, warm_rps, warm_speedup)."""
+    assert warm_iters <= ipm_iters // 2, "acceptance is at <= half budget"
+    mob, ch = ManhattanParams(), ChannelParams()
+    prm = VedsParams(alpha=2.0, V=0.2, Q=1e7, slot=0.1,
+                     ipm_iters=ipm_iters)
+    prm_w = dataclasses.replace(prm, ipm_warm_iters=warm_iters)
+    sc = ScenarioParams(n_sov=n_sov, n_opv=n_opv, n_slots=n_slots)
+    key = jax.random.key(0)
+    sched = get_scheduler("veds")
+    fleet = init_fleet(jax.random.key(1), sc, mob, 1, n_fleet=n_fleet)
+    mk1 = jax.jit(lambda k: make_round_batch(
+        k, sc, mob, ch, prm, 1, hetero_fleet=False))
+    run1 = jax.jit(lambda r: sched.solve_round(r, prm, ch))
+    cfg = StreamConfig(n_rounds=R, batch=1, carry_queues=True)
+
+    def run_s(p):
+        return jax.jit(lambda k, f, p=p: stream_rounds(
+            k, sched, sc, mob, ch, p, cfg, fleet=f))
+
+    t_blocked = 1e-6 * time_call(
+        lambda: [run1(mk1(jax.random.fold_in(key, r))) for r in range(R)])
+    t_cold = 1e-6 * time_call(run_s(prm), key, fleet)
+    t_warm = 1e-6 * time_call(run_s(prm_w), key, fleet)
+    return [("veds_warm_ipm", R, R / t_blocked, R / t_cold, R / t_warm,
+             t_blocked / t_warm)]
+
+
+def eval_dispatch_count(R: int = 6) -> int:
+    """`run_fl(streaming=True)` with in-scan eval: the whole run must be
+    ONE fused dispatch (history['dispatches'])."""
+    from repro.fl.simulator import FLSimConfig, run_fl
+    params, loss_fn, data = _fl_problem()
+    xt = jax.random.normal(jax.random.key(3), (12, 8))
+    eval_fn = jax.jit(lambda p: jnp.mean((xt @ p["w"]).max(-1)))
+    sim = FLSimConfig(n_clients=len(data), rounds=R, scheduler="madca",
+                      n_sov=4, n_opv=3, n_slots=10, batch_size=8,
+                      streaming=True)
+    h = run_fl(jax.random.key(7), params, loss_fn, data, sim,
+               eval_fn=eval_fn, eval_every=2)
+    return int(h["dispatches"])
+
+
 def handoff_sweep(R: int = 20, B: int = 4, *, n_sov: int = 4,
                   n_opv: int = 4, n_slots: int = 20,
                   n_fleet: int | None = None):
@@ -247,6 +307,9 @@ def main(csv=True, smoke=False):
         frows = fused_sweep(R=6)
         hrows = handoff_sweep(R=3, B=2, n_sov=3, n_opv=2, n_slots=6,
                               n_fleet=8)
+        wrows = warm_ipm_sweep(R=3, ipm_iters=8, warm_iters=4, n_sov=3,
+                               n_opv=3, n_slots=8, n_fleet=8)
+        n_disp = eval_dispatch_count(R=4)
     else:
         rows, us = run()
         brows = b_sweep()
@@ -254,6 +317,8 @@ def main(csv=True, smoke=False):
         crows = cot_stream_sweep()
         frows = fused_sweep()
         hrows = handoff_sweep()
+        wrows = warm_ipm_sweep()
+        n_disp = eval_dispatch_count()
     veds5 = [r[2] for r in rows if r[1] == "veds"][0] if smoke else \
         [r[2] for r in rows if r[1] == "veds" and r[0] == 5.0][0]
     opt5 = [r[2] for r in rows if r[1] == "optimal"][0] if smoke else \
@@ -264,15 +329,20 @@ def main(csv=True, smoke=False):
     cot = crows[0][4]
     fus = frows[0][4]
     hand_ratio, hand_migrated = hrows[0][4], hrows[0][5]
+    warm_speedup, warm_rps, cold_rps = wrows[0][5], wrows[0][4], wrows[0][3]
     if smoke:
         out = {"bench": "fig4_speed_smoke", "us_per_round": us,
                "veds_frac_of_optimal": frac, "b_speedup": b64,
                "stream_speedup": s50, "cot_stream_speedup": cot,
                "fused_speedup": fus, "handoff_ratio": hand_ratio,
-               "handoff_migrated": hand_migrated}
+               "handoff_migrated": hand_migrated,
+               "warm_ipm_speedup": warm_speedup,
+               "warm_vs_cold": warm_rps / cold_rps,
+               "run_fl_eval_dispatches": n_disp}
         assert all(math.isfinite(v) for v in out.values()
                    if isinstance(v, float)), out
         assert 0.0 <= hand_migrated <= 1.0, out
+        assert n_disp == 1, out
         print(json.dumps(out))
         return out
     if csv:
@@ -280,7 +350,9 @@ def main(csv=True, smoke=False):
               f"b64_speedup={b64:.1f},stream_r50_speedup={s50:.1f},"
               f"cot_stream_speedup={cot:.1f},fused_r50_speedup={fus:.1f},"
               f"handoff_ratio={hand_ratio:.2f},"
-              f"handoff_migrated={hand_migrated:.2f}")
+              f"handoff_migrated={hand_migrated:.2f},"
+              f"warm_ipm_speedup={warm_speedup:.1f},"
+              f"run_fl_eval_dispatches={n_disp}")
     for v, name, s in rows:
         print(f"#  v={v:5.1f}  {name:10s} n_success={s:.2f}")
     for name, B, rps_loop, rps_batch, speedup in brows:
@@ -292,6 +364,11 @@ def main(csv=True, smoke=False):
     for name, R, rps_host, rps_fused, speedup in frows:
         print(f"#  R={R:3d}  {name:20s} host={rps_host:8.1f} rounds/s  "
               f"fused={rps_fused:9.1f} rounds/s  speedup={speedup:5.1f}x")
+    for name, R, rps_b, rps_c, rps_w, speedup in wrows:
+        print(f"#  R={R:3d}  {name:20s} blocked={rps_b:7.1f} rounds/s  "
+              f"cold={rps_c:7.1f} rounds/s  warm={rps_w:7.1f} rounds/s  "
+              f"speedup={speedup:5.1f}x")
+    print(f"#  run_fl(streaming, eval) dispatches={n_disp}")
     for name, R, rps_off, rps_on, ratio, migrated in hrows:
         print(f"#  R={R:3d}  {name:20s} off={rps_off:9.1f} rounds/s  "
               f"on={rps_on:9.1f} rounds/s  ratio={ratio:4.2f}x  "

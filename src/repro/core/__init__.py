@@ -7,7 +7,8 @@ interior-point P4), and the single-cell/batched scenario builders.
 """
 from repro.core.lyapunov import VedsParams, sigmoid_shifted, sigmoid_weight  # noqa: F401
 from repro.core.scheduler import (RolloutCarry, RoundOutputs,  # noqa: F401
-                                  Scheduler, SchedulerCarry)
+                                  Scheduler, SchedulerCarry, masked_e_cp)
+from repro.core.solver import dt_power_opt, p4_seed_table, solve_p4  # noqa: F401
 from repro.core.veds import RoundInputs, veds_round, solve_slot  # noqa: F401
 from repro.core.baselines import SCHEDULERS, get_scheduler  # noqa: F401
 from repro.core.scenario import (FleetState, ScenarioParams,  # noqa: F401
@@ -17,4 +18,5 @@ from repro.core.scenario import (FleetState, ScenarioParams,  # noqa: F401
                                  rsu_grid)
 from repro.core.streaming import (StreamConfig, StreamResult,  # noqa: F401
                                   round_keys, sched_round_step,
-                                  sched_state0, stream_rounds)
+                                  sched_state0, stream_rounds,
+                                  validate_stream_config, warm_p4)

@@ -33,7 +33,8 @@ import jax.numpy as jnp
 from repro.channel.v2x import ChannelParams
 from repro.core import lyapunov as lyp
 from repro.core.scheduler import (RoundOutputs, Scheduler, SchedulerCarry,
-                                  init_queues, unbatch as _unbatch)
+                                  init_queues, masked_e_cp,
+                                  unbatch as _unbatch)
 from repro.core.veds import RoundInputs, veds_round
 
 
@@ -55,7 +56,7 @@ def optimal_round(rnd: RoundInputs, prm: lyp.VedsParams, ch: ChannelParams,
     out = RoundOutputs(
         success=success, n_success=success.sum(-1),
         zeta=jnp.where(success, prm.Q, 0.0),
-        energy_sov=rb.e_cp, energy_opv=jnp.zeros(rb.e_opv.shape),
+        energy_sov=masked_e_cp(rb), energy_opv=jnp.zeros(rb.e_opv.shape),
         n_cot_slots=jnp.zeros((B,), jnp.int32),
         n_dt_slots=jnp.zeros((B,), jnp.int32),
         carry=SchedulerCarry(qs=lyp.relax_queue(qs0, rb.e_sov - rb.e_cp),
@@ -111,7 +112,7 @@ def madca_round(rnd: RoundInputs, prm: lyp.VedsParams, ch: ChannelParams,
     success = (zeta >= prm.Q) & valid
     out = RoundOutputs(
         success=success, n_success=success.sum(-1), zeta=zeta,
-        energy_sov=(e0 - e_left) + rb.e_cp,
+        energy_sov=(e0 - e_left) + masked_e_cp(rb),
         energy_opv=jnp.zeros(rb.e_opv.shape),
         n_cot_slots=jnp.zeros((B,), jnp.int32),
         n_dt_slots=(e_cm > 0).sum(0),
@@ -157,7 +158,7 @@ def sa_round(rnd: RoundInputs, prm: lyp.VedsParams, ch: ChannelParams,
     # point of the comparison in Fig. 9), per-SOV attribution
     out = RoundOutputs(
         success=success, n_success=success.sum(-1), zeta=zeta,
-        energy_sov=rb.e_cp + e_vec,
+        energy_sov=masked_e_cp(rb) + e_vec,
         energy_opv=jnp.zeros(rb.e_opv.shape),
         n_cot_slots=jnp.zeros((B,), jnp.int32),
         n_dt_slots=oks.sum(0),

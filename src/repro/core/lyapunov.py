@@ -19,8 +19,14 @@ class VedsParams:
     V: float = 0.2           # drift-plus-penalty trade-off weight
     Q: float = 1e7           # model size [bits]
     slot: float = 0.1        # kappa [s]
-    ipm_iters: int = 25      # Newton iterations for P4
+    ipm_iters: int = 25      # Newton iterations for P4 (cold start)
     ipm_mu: float = 1e-3     # final barrier weight
+    ipm_warm_iters: int = 0  # warm-started P4 budget: when > 0 and a
+    #                          warm-start table is threaded in (streaming
+    #                          carry / FleetState.p4_tab), each candidate
+    #                          re-solves from the previous optimum with
+    #                          this many Newton steps (tail of the cold mu
+    #                          schedule). 0 disables the warm path.
 
 
 def sigmoid_shifted(z: jax.Array, prm: VedsParams) -> jax.Array:

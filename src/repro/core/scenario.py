@@ -38,6 +38,7 @@ from repro.channel.mobility import (ManhattanParams, init_mobility,
                                     rollout_positions)
 from repro.channel.v2x import ChannelParams, channel_gain
 from repro.core.lyapunov import VedsParams
+from repro.core.solver import p4_seed_table
 from repro.core.veds import RoundInputs
 
 
@@ -176,6 +177,14 @@ class FleetState:
                        in row b has cell_id == b; a capacity-overflow
                        vehicle is parked with cell_id == -1 (ineligible
                        until a later exchange re-admits it)
+      p4_tab [B,N,U,1+U]  P4 warm-start table: the last interior-point
+                       optima solved with this vehicle as the SOV
+                       (sorted-prefix candidate layout, DESIGN.md §3).
+                       Seeded with the solver's cold starting point,
+                       gathered/scattered by the streaming engine only
+                       when `VedsParams.ipm_warm_iters > 0`, and —
+                       like the virtual queue — it migrates with the
+                       vehicle under handoff.
     """
     pos: jax.Array
     dir: jax.Array
@@ -187,6 +196,7 @@ class FleetState:
     rsu_xy: jax.Array
     covered: jax.Array
     cell_id: jax.Array
+    p4_tab: jax.Array
 
     @property
     def batch_size(self) -> int:
@@ -206,12 +216,15 @@ class FleetSelection(NamedTuple):
 def init_fleet(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
                batch: int, *, n_fleet: Optional[int] = None,
                rsu_xy: Optional[jax.Array] = None,
-               energy_horizon: Optional[float] = None) -> FleetState:
+               energy_horizon: Optional[float] = None,
+               p_max: Optional[float] = None) -> FleetState:
     """Seed B persistent vehicle pools of `n_fleet` vehicles each.
 
     `energy_horizon = H` gives every vehicle a battery of H rounds' worth
     of its per-round allowance; None disables battery tracking (+inf).
     RSU placements are drawn like `make_round_batch`'s unless given.
+    `p_max` seeds the P4 warm-start table (default: `ChannelParams`'s);
+    a warm solve from the seed at the full budget is bit-for-bit cold.
     """
     B = int(batch)
     N = int(n_fleet) if n_fleet is not None else 2 * (sc.n_sov + sc.n_opv)
@@ -234,10 +247,14 @@ def init_fleet(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
         <= mob.coverage
     cell_id = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None],
                                (B, N))
+    U = sc.n_opv
+    p4_tab = p4_seed_table((B, N, U, U + 1),
+                           ChannelParams().p_max if p_max is None
+                           else float(p_max))
     return FleetState(pos=st["pos"], dir=st["dir"], speed=st["speed"],
                       jitter=jitter, allowance=allowance, energy=energy,
                       queue=jnp.zeros((B, N)), rsu_xy=rsu, covered=covered,
-                      cell_id=cell_id)
+                      cell_id=cell_id, p4_tab=p4_tab)
 
 
 def rsu_grid(batch: int, mob: ManhattanParams, *,
@@ -287,7 +304,8 @@ def exchange_fleet(fleet: FleetState, mob: ManhattanParams) -> FleetState:
     network. Each of the M = B * N vehicles targets the cell of its
     nearest RSU (`argmin` over cells); the full per-vehicle state —
     position, heading, speed, jitter, allowance, residual battery,
-    virtual queue, `covered` flag — migrates to a slot of the target
+    virtual queue, P4 warm-start table, `covered` flag — migrates to a
+    slot of the target
     row via one fixed-shape gather (a permutation of the flat [M]
     layout), so shapes stay static and the whole exchange is a few
     vector ops inside the rollout scan. No RNG is consumed.
@@ -358,7 +376,7 @@ def exchange_fleet(fleet: FleetState, mob: ManhattanParams) -> FleetState:
                       allowance=take(fleet.allowance),
                       energy=take(fleet.energy), queue=take(fleet.queue),
                       rsu_xy=fleet.rsu_xy, covered=covered,
-                      cell_id=cell_id)
+                      cell_id=cell_id, p4_tab=take(fleet.p4_tab))
 
 
 def _fleet_cell_round(key: jax.Array, pos, d, speed, jitter, allowance,

@@ -31,13 +31,20 @@ from repro.core.lyapunov import VedsParams
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class SchedulerCarry:
-    """Virtual energy queues threaded round-to-round (eqs. 19-20).
+    """Virtual energy queues threaded round-to-round (eqs. 19-20), plus
+    the optional P4 warm-start table (DESIGN.md §3/§9).
 
       qs  [S] / [B, S]   per-SOV queue [J]
       qu  [U] / [B, U]   per-OPV queue [J]
+      p4  [S, U, 1+U] / [B, S, U, 1+U] or None — each SOV slot's last
+          P4 power vectors over the U prefix candidates (sorted-prefix
+          layout). Consumed and refreshed by VEDS only when
+          `VedsParams.ipm_warm_iters > 0`; every other scheduler (and
+          the cold path) leaves it None.
     """
     qs: jax.Array
     qu: jax.Array
+    p4: Optional[jax.Array] = None
 
     @staticmethod
     def zeros(rnd) -> "SchedulerCarry":
@@ -76,6 +83,17 @@ def init_queues(rnd, carry: Optional[SchedulerCarry]):
     carry = carry if carry is not None else SchedulerCarry.zeros(rnd)
     return (jnp.broadcast_to(carry.qs, rnd.e_sov.shape),
             jnp.broadcast_to(carry.qu, rnd.e_opv.shape))
+
+
+def masked_e_cp(rnd) -> jax.Array:
+    """Computation energy chargeable to each SOV slot: zero for padded /
+    never-eligible slots (`valid_sov == False`). Generated rounds
+    pre-mask `e_cp`, but a directly-constructed `RoundInputs` may not —
+    every scheduler routes its `energy_sov` accounting through this so
+    padded slots never report nonzero energy (ISSUE 5 bugfix)."""
+    if rnd.valid_sov is None:
+        return rnd.e_cp
+    return jnp.where(rnd.valid_sov, rnd.e_cp, 0.0)
 
 
 def unbatch(out: "RoundOutputs", batched: bool) -> "RoundOutputs":

@@ -6,6 +6,12 @@
   be jit'ed and vmapped over all (SOV, prefix) candidates. This replaces the
   paper's CVX call — same convex program, TPU-native solver (see DESIGN.md §3).
 
+The P4 solver supports a *warm start* (`p_init` + `warm_iters`): streaming
+rollouts thread the previous round's per-vehicle optimum through the scan
+carry and re-solve with a shortened tail of the barrier schedule, cutting
+the per-candidate Newton cost that dominates persistent VEDS+COT streaming
+(`VedsParams.ipm_warm_iters`, DESIGN.md §3/§9).
+
 P4 in our canonical form, variables p in R^{1+U} (index 0 = the SOV):
   maximize  cw * ln(1 + a.p) - q.p
   s.t.      0 <= p <= pmax,   d.p <= 0
@@ -22,8 +28,13 @@ def dt_power_opt(cw: jax.Array, q: jax.Array, gain: jax.Array,
                  noise: float, p_max: float) -> jax.Array:
     """Proposition 1: water-filling style closed form for P3.1.
 
-    cw = V * dsigma/dzeta * beta / ln(2) (nats); q = kappa * queue weight.
-    Maximizes cw*ln(1 + gain*p/noise) - q*kappa*p over [0, p_max].
+    Maximizes the objective (21a) restricted to one DT candidate,
+        cw * ln(1 + gain * p / noise) - q * p      over p in [0, p_max],
+    where cw = V * dsigma/dzeta * kappa * beta / ln(2) (nats) and q is
+    the *slot-scaled* queue weight the call sites pass in
+    (q = kappa * Q_m(t), so the kappa factor lives in q — it is NOT
+    applied again here). Interior optimum p* = cw/q - noise/gain,
+    clipped to the box.
     """
     a = gain / noise
     p = cw / jnp.maximum(q, 1e-12) - 1.0 / jnp.maximum(a, 1e-30)
@@ -61,20 +72,46 @@ def _project_feasible(p, d, p_max, margin=0.999):
     return jnp.concatenate([p[:1], rest * scale])
 
 
+def p4_seed_table(shape, p_max: float) -> jax.Array:
+    """The cold starting point of `solve_p4`, broadcast to `shape` (whose
+    trailing axis is the P4 power vector [1+U]). Warm-start tables are
+    seeded with this so a warm solve at the full iteration budget from an
+    untouched table is bit-for-bit the cold solve (DESIGN.md §3)."""
+    tab = jnp.full(shape, 0.25 * p_max)
+    return tab.at[..., 0].set(0.5 * p_max)
+
+
 def solve_p4(cw: jax.Array, a: jax.Array, q: jax.Array, d: jax.Array,
              p_max: jax.Array, *, iters: int = 25,
-             mu_final: float = 1e-3):
+             mu_final: float = 1e-3, p_init=None, warm_iters: int = 0):
     """Interior-point solve of P4. All args vectors [1+U] except cw scalar.
 
     Unscheduled OPVs must have a=0, q arbitrary, p_max>0; their optimum is 0.
     Returns (p_opt, value) with value = cw*ln(1+a.p) - q.p.
+
+    Warm start (DESIGN.md §3): `p_init` seeds the Newton iteration from a
+    previous solve of a correlated instance (round-to-round / slot-to-slot
+    channel correlation makes the last optimum an excellent interior
+    point). The seed is pulled strictly into the interior by the same
+    margin-0.5 projection the cold start uses, and the barrier schedule
+    becomes the *tail* of the cold schedule: the last `warm_iters` of the
+    cold path's mu values (a near-optimal start does not need the
+    high-mu exploration phase). The gradient-polish phase shortens
+    proportionally. `warm_iters <= 0` keeps the full budget, so
+    `p_init = p4_seed_table(...)` + full budget is bit-for-bit the
+    cold solve.
     """
     n = a.shape[0]
-    p0 = jnp.full((n,), 0.25) * p_max
-    p0 = p0.at[0].set(0.5 * p_max[0])
+    if p_init is None:
+        p0 = jnp.full((n,), 0.25) * p_max
+        p0 = p0.at[0].set(0.5 * p_max[0])
+        n_it = iters
+    else:
+        p0 = p_init
+        n_it = min(int(warm_iters), iters) if warm_iters > 0 else iters
     p0 = _project_feasible(p0, d, p_max, margin=0.5)
 
-    mus = jnp.geomspace(1e-1, mu_final, iters)
+    mus = jnp.geomspace(1e-1, mu_final, iters)[iters - n_it:]
 
     def step(p, mu):
         grad, hess = _phi_grad_hess(p, a, q, cw, d, p_max, mu)
@@ -88,14 +125,19 @@ def solve_p4(cw: jax.Array, a: jax.Array, q: jax.Array, d: jax.Array,
         return p_new, None
 
     p, _ = jax.lax.scan(step, p0, mus)
-    # gradient polish: a few projected-ascent steps on the raw objective
+    # gradient polish: a few projected-ascent steps on the raw objective.
+    # The warm path shortens it with the Newton budget (a near-optimal
+    # seed needs less sharpening); n_it == iters keeps the cold count,
+    # preserving the bit-for-bit full-budget equivalence.
+    n_pol = 10 if n_it == iters else max(2, (10 * n_it) // iters)
+
     def polish(p, i):
         s = 1.0 + jnp.dot(a, p)
         g = cw * a / s - q
         lr = 0.05 * jnp.max(p_max) / (jnp.linalg.norm(g) + 1e-12)
         return _project_feasible(p + lr * g, d, p_max), None
 
-    p, _ = jax.lax.scan(polish, p, jnp.arange(10))
+    p, _ = jax.lax.scan(polish, p, jnp.arange(n_pol))
     val = cw * jnp.log1p(jnp.dot(a, p)) - jnp.dot(q, p)
     # zero-power value as a floor (solver never worse than not transmitting)
     val0 = jnp.zeros(())

@@ -53,6 +53,18 @@ ghost queue behind (`tests/test_handoff.py` pins all three legs).
                  full VEDS+COT streaming cheap enough to measure
                  (`benchmarks/fig4_speed.cot_stream_sweep`).
 
+Warm-started interior point (persistent VEDS+COT, DESIGN.md §3): with
+`VedsParams.ipm_warm_iters > 0` the per-vehicle P4 warm-start table
+(`FleetState.p4_tab`, seeded with the solver's cold starting point) rides
+the scan carry: each round gathers the SOV slots' tables into
+`SchedulerCarry.p4`, VEDS re-solves every candidate from the previous
+optimum with the shortened warm budget (the table also chains
+slot-to-slot inside the round), and the refreshed table scatters back
+under the queue freeze rule — only slots that played update, and under
+handoff the table migrates with the vehicle. This removes the dominant
+per-round IPM cost that `round_chunk` cannot touch in persistent mode
+(`benchmarks/fig4_speed.warm_ipm_sweep`).
+
 The per-round scheduling step is exposed as `sched_state0` /
 `sched_round_step` / `round_keys` so the fused training engine
 (`repro.fl.engine`) can run the *same* scheduling program with model
@@ -112,13 +124,31 @@ SchedState = Union[FleetState, SchedulerCarry]
 
 
 def validate_stream_config(cfg: StreamConfig) -> None:
-    """Reject silently-ignorable flag combinations up front."""
+    """Reject silently-ignorable flag combinations up front.
+
+    The single home of every `round_chunk` rejection: all callers —
+    `stream_rounds`, the fused engine's (possibly segmented)
+    `fused_rollout` — validate here before any construction happens, so
+    a bad combination fails with the same message regardless of the
+    entry point instead of blowing up mid-build."""
     if cfg.fresh_fleet and cfg.handover_delay:
         raise ValueError("handover_delay needs the persistent fleet's "
                          "coverage memory (fresh_fleet=False)")
     if cfg.fresh_fleet and cfg.handoff:
         raise ValueError("handoff moves vehicles between persistent "
                          "cells (fresh_fleet=False)")
+    C = int(cfg.round_chunk)
+    if C < 1:
+        raise ValueError(f"round_chunk={C} must be >= 1")
+    if C > 1:
+        if not cfg.fresh_fleet:
+            raise ValueError("round_chunk > 1 requires fresh_fleet=True")
+        if cfg.carry_queues:
+            raise ValueError("round_chunk > 1 solves chunk rounds in "
+                             "parallel and cannot thread carry_queues")
+        if int(cfg.n_rounds) % C:
+            raise ValueError(f"n_rounds={int(cfg.n_rounds)} not "
+                             f"divisible by round_chunk={C}")
 
 
 def round_keys(key: jax.Array, cfg: StreamConfig, n_rounds: int,
@@ -140,7 +170,8 @@ def round_keys(key: jax.Array, cfg: StreamConfig, n_rounds: int,
 
 def sched_state0(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
                  cfg: StreamConfig,
-                 fleet: Optional[FleetState] = None) -> SchedState:
+                 fleet: Optional[FleetState] = None,
+                 ch: Optional[ChannelParams] = None) -> SchedState:
     """Initial scheduling-side scan carry: a zero `SchedulerCarry` in
     fresh-fleet mode, a (possibly freshly initialized) `FleetState` in
     persistent mode. `key` must be the same key later given to
@@ -149,15 +180,28 @@ def sched_state0(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
     With `cfg.handoff` the default fleet's RSUs sit on the
     overlapping-coverage grid (`rsu_grid`) — the B cells share one road
     network, so independent random placements would make migration an
-    accident of the draw. Pass an explicit `fleet` to override."""
+    accident of the draw. Pass an explicit `fleet` to override. `ch`
+    seeds the P4 warm-start table at the rollout's actual `p_max`
+    (defaulting keeps the §3 full-budget bit-for-bit-cold contract only
+    for the default `ChannelParams`)."""
     if cfg.fresh_fleet:
         return _zero_carry(sc, int(cfg.batch))
     if fleet is None:
         rsu = rsu_grid(int(cfg.batch), mob) if cfg.handoff else None
         fleet = init_fleet(jax.random.fold_in(key, 0xF1EE7), sc, mob,
                            int(cfg.batch), n_fleet=cfg.n_fleet,
-                           energy_horizon=cfg.energy_horizon, rsu_xy=rsu)
+                           energy_horizon=cfg.energy_horizon, rsu_xy=rsu,
+                           p_max=None if ch is None else ch.p_max)
     return fleet
+
+
+def warm_p4(sched: Scheduler, prm: VedsParams) -> bool:
+    """Whether this rollout threads the P4 warm-start table: VEDS with
+    cooperation enabled (the only scheduler that solves P4) and a
+    nonzero warm budget. Persistent fleets only — fresh-fleet rounds
+    draw independent channels, so there is no correlation to seed from."""
+    return prm.ipm_warm_iters > 0 and bool(
+        getattr(sched, "enable_cot", False))
 
 
 def sched_round_step(state: SchedState, k: jax.Array, sched: Scheduler,
@@ -166,7 +210,13 @@ def sched_round_step(state: SchedState, k: jax.Array, sched: Scheduler,
     """One round of scheduling inside the scan: advance the fleet (or
     draw a fresh one from `k`), run the scheduler with the carried
     queues, scatter queue/energy updates back. Returns
-    (state', RoundOutputs)."""
+    (state', RoundOutputs).
+
+    Persistent mode with `warm_p4(sched, prm)`: the per-vehicle P4
+    warm-start table (`FleetState.p4_tab`) is gathered for this round's
+    SOV slots, threaded through the scheduler (`SchedulerCarry.p4`), and
+    the refreshed table scattered back under the same freeze rule as the
+    virtual queue — only slots that actually played update."""
     if cfg.fresh_fleet:
         rnd = make_round_batch(k, sc, mob, ch, prm, int(cfg.batch),
                                hetero_fleet=cfg.hetero_fleet)
@@ -183,8 +233,17 @@ def sched_round_step(state: SchedState, k: jax.Array, sched: Scheduler,
     rows = jnp.arange(B)[:, None]
     qs_old = jnp.take_along_axis(fl.queue, sel.sov_idx, axis=1)
     qu_old = jnp.take_along_axis(fl.queue, sel.opv_idx, axis=1)
-    c_in = (SchedulerCarry(qs=qs_old, qu=qu_old)
-            if cfg.carry_queues else None)
+    warm = warm_p4(sched, prm)
+    p4_old = fl.p4_tab[rows, sel.sov_idx] if warm else None  # [B,S,U,1+U]
+    if cfg.carry_queues:
+        c_in = SchedulerCarry(qs=qs_old, qu=qu_old, p4=p4_old)
+    elif warm:
+        # warm table without queue carry: queues start at zero each
+        # round (seed semantics), only the P4 seeds thread through
+        c_in = SchedulerCarry(qs=jnp.zeros_like(qs_old),
+                              qu=jnp.zeros_like(qu_old), p4=p4_old)
+    else:
+        c_in = None
     out = sched.solve_round(rnd, prm, ch, c_in)
     # Freeze/restore (module doc): round-end queues scatter back ONLY to
     # the fleet slots that actually played this round — a vehicle in a
@@ -200,11 +259,16 @@ def sched_round_step(state: SchedState, k: jax.Array, sched: Scheduler,
             jnp.where(rnd.valid_sov, out.carry.qs, qs_old))
         queue = queue.at[rows, sel.opv_idx].set(
             jnp.where(rnd.valid_opv, out.carry.qu, qu_old))
+    p4_tab = fl.p4_tab
+    if warm:
+        p4_tab = p4_tab.at[rows, sel.sov_idx].set(
+            jnp.where(rnd.valid_sov[..., None, None],
+                      out.carry.p4, p4_old))
     energy = fl.energy.at[rows, sel.sov_idx].add(
         -jnp.where(rnd.valid_sov, out.energy_sov, 0.0))
     energy = energy.at[rows, sel.opv_idx].add(
         -jnp.where(rnd.valid_opv, out.energy_opv, 0.0))
-    fl = dataclasses.replace(fl, queue=queue,
+    fl = dataclasses.replace(fl, queue=queue, p4_tab=p4_tab,
                              energy=jnp.maximum(energy, 0.0))
     return fl, out
 
@@ -223,7 +287,7 @@ def stream_rounds(key: jax.Array, sched: Scheduler, sc: ScenarioParams,
     if int(cfg.round_chunk) > 1:
         return _stream_fresh_chunked(key, sched, sc, mob, ch, prm, cfg,
                                      B, R)
-    state0 = sched_state0(key, sc, mob, cfg, fleet)
+    state0 = sched_state0(key, sc, mob, cfg, fleet, ch)
     state, outs = jax.lax.scan(
         lambda s, k: sched_round_step(s, k, sched, sc, mob, ch, prm, cfg),
         state0, round_keys(key, cfg, R))
@@ -241,15 +305,10 @@ def _stream_fresh_chunked(key, sched, sc, mob, ch, prm, cfg: StreamConfig,
     widened [C * B] batch — the P4 interior-point candidate solves are
     batched across rounds, which is what makes full VEDS+COT streaming
     tractable. Incompatible with `carry_queues` (rounds inside a chunk
-    are solved in parallel, so queues cannot thread through them)."""
+    are solved in parallel, so queues cannot thread through them); every
+    flag rejection lives in `validate_stream_config`, which the caller
+    already ran."""
     C = int(cfg.round_chunk)
-    if not cfg.fresh_fleet:
-        raise ValueError("round_chunk > 1 requires fresh_fleet=True")
-    if cfg.carry_queues:
-        raise ValueError("round_chunk > 1 solves chunk rounds in parallel "
-                         "and cannot thread carry_queues")
-    if R % C:
-        raise ValueError(f"n_rounds={R} not divisible by round_chunk={C}")
 
     def body(carry, c0):
         rs = c0 * C + jnp.arange(C)

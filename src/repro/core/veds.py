@@ -35,7 +35,7 @@ import jax.numpy as jnp
 from repro.channel.v2x import ChannelParams
 from repro.core import lyapunov as lyp
 from repro.core.scheduler import (RoundOutputs, SchedulerCarry, init_queues,
-                                  unbatch)
+                                  masked_e_cp, unbatch)
 from repro.core.solver import dt_power_opt, solve_p4
 from repro.kernels.veds_score.ops import veds_dt_score_tpu
 
@@ -103,12 +103,16 @@ def _dt_candidates(w, qs, g_sr, eligible, prm: lyp.VedsParams,
 
 
 def _cot_candidates(w, qs, qu, g_sr, g_or, g_so, eligible,
-                    prm: lyp.VedsParams, ch: ChannelParams):
+                    prm: lyp.VedsParams, ch: ChannelParams, p_init=None):
     """P4 for every (SOV m, prefix size i) of one cell. Proposition 2: only
     prefixes of OPVs sorted by h_{m,n} descending need be enumerated.
 
+    `p_init [S, U, 1+U]` warm-starts every candidate's interior-point
+    solve from the previous slot/round's optimum with the shortened
+    `prm.ipm_warm_iters` budget (None = cold, full `prm.ipm_iters`).
+
     Returns y [S,U], p_m [S,U], p_opv [S,U,U] (in *sorted* OPV order),
-    order [S,U], z [S,U].
+    order [S,U], z [S,U], p_all [S,U,1+U] (this slot's warm-start table).
     """
     S = g_sr.shape[0]
     U = g_or.shape[0]
@@ -138,13 +142,16 @@ def _cot_candidates(w, qs, qu, g_sr, g_or, g_so, eligible,
     q_full = jnp.maximum(q_full, 1e-9)
     pmax_full = jnp.full((S, U, U + 1), ch.p_max)
 
-    def solve_one(cw_m, a, q, d, pm):
+    def solve_one(cw_m, a, q, d, pm, p0):
         return solve_p4(cw_m, a, q, d, pm, iters=prm.ipm_iters,
-                        mu_final=prm.ipm_mu)
+                        mu_final=prm.ipm_mu, p_init=p0,
+                        warm_iters=prm.ipm_warm_iters)
 
-    p_all, _ = jax.vmap(jax.vmap(solve_one, in_axes=(None, 0, 0, 0, 0)),
-                        in_axes=(0, 0, 0, 0, 0))(cw, a_full, q_full,
-                                                 d_full, pmax_full)
+    px = None if p_init is None else 0
+    p_all, _ = jax.vmap(jax.vmap(solve_one, in_axes=(None, 0, 0, 0, 0, px)),
+                        in_axes=(0, 0, 0, 0, 0, px))(cw, a_full, q_full,
+                                                     d_full, pmax_full,
+                                                     p_init)
     # evaluate the exact objective y (21a) for each candidate
     sinr = jnp.einsum("sik,sik->si", a_full, p_all)
     rate = ch.bandwidth * jnp.log2(1.0 + sinr)
@@ -154,7 +161,7 @@ def _cot_candidates(w, qs, qu, g_sr, g_or, g_so, eligible,
     y = (prm.V * w[:, None] * z - qs[:, None] * e_sov_cm
          - (e_opv_cm * qu_sorted[:, None, :]).sum(-1))
     y = jnp.where(feasible & eligible[:, None], y, NEG)
-    return y, p_all[..., 0], p_all[..., 1:], order, z
+    return y, p_all[..., 0], p_all[..., 1:], order, z, p_all
 
 
 def _select_slot(y_dt, p_dt, z_dt, y_cot, pm_cot, po_cot, order, z_cot,
@@ -204,12 +211,16 @@ def solve_slot(t: jax.Array, state: Dict[str, jax.Array], rnd: RoundInputs,
                prm: lyp.VedsParams, ch: ChannelParams, *,
                enable_cot: bool = True, use_kernel: bool = True):
     """Algorithm 1 for slot t, batch-native. `rnd` must be batched; state
-    leaves carry the batch axis: zeta [B,S], qs [B,S], qu [B,U].
+    leaves carry the batch axis: zeta [B,S], qs [B,S], qu [B,U]. An
+    optional state["p4"] [B,S,U,1+U] threads the P4 warm-start table
+    slot-to-slot (DESIGN.md §3): each slot's candidate solves start from
+    the previous slot's optima and write their own back.
 
     Returns decision dict + per-vehicle (z, e_sov_cm, e_opv_cm), all [B,...].
     """
     B, _, S = rnd.g_sr.shape
     U = rnd.g_or.shape[-1]
+    warm = "p4" in state
     zeta, qs, qu = state["zeta"], state["qs"], state["qu"]
     g_sr, g_or, g_so = rnd.g_sr[:, t], rnd.g_or[:, t], rnd.g_so[:, t]
     w = lyp.sigmoid_weight(zeta, prm)
@@ -221,16 +232,21 @@ def solve_slot(t: jax.Array, state: Dict[str, jax.Array], rnd: RoundInputs,
     y_dt, p_dt, z_dt = _dt_candidates(w, qs, g_sr, eligible, prm, ch,
                                       use_kernel=use_kernel)
     if enable_cot:
-        y_cot, pm_cot, po_cot, order, z_cot = jax.vmap(
+        y_cot, pm_cot, po_cot, order, z_cot, p_all = jax.vmap(
             _cot_candidates,
-            in_axes=(0, 0, 0, 0, 0, 0, 0, None, None))(
-                w, qs, qu, g_sr, g_or, g_so, eligible, prm, ch)
+            in_axes=(0, 0, 0, 0, 0, 0, 0, None, None,
+                     0 if warm else None))(
+                w, qs, qu, g_sr, g_or, g_so, eligible, prm, ch,
+                state["p4"] if warm else None)
     else:
         y_cot = jnp.full((B, S, U), NEG)
         pm_cot = jnp.zeros((B, S, U))
         po_cot = jnp.zeros((B, S, U, U))
         order = jnp.broadcast_to(jnp.arange(U)[None, None], (B, S, U))
         z_cot = jnp.zeros((B, S, U))
+        # no P4 solves without COT: a threaded table passes through
+        # untouched so the scan carry structure (and its values) hold
+        p_all = state.get("p4")
 
     m_sel, use_dt, use_cot, z_vec, e_sov_vec, e_opv_vec = jax.vmap(
         functools.partial(_select_slot, prm=prm))(
@@ -243,6 +259,8 @@ def solve_slot(t: jax.Array, state: Dict[str, jax.Array], rnd: RoundInputs,
         "qu": lyp.update_queue_opv(qu, e_opv_vec, rnd.e_opv, state["T"]),
         "T": state["T"],
     }
+    if warm:
+        new_state["p4"] = p_all
     info = {
         "m": m_sel, "use_dt": use_dt, "use_cot": use_cot,
         "z": z_vec, "e_sov": e_sov_vec, "e_opv": e_opv_vec,
@@ -260,6 +278,12 @@ def veds_round(rnd: RoundInputs, prm: lyp.VedsParams, ch: ChannelParams, *,
     from previous rounds — the long-term constraint the drift-plus-penalty
     machinery is built for; None starts them at zero (seed semantics). The
     round-end queues always come back in `RoundOutputs.carry`.
+
+    When `carry.p4` holds a warm-start table AND `prm.ipm_warm_iters > 0`
+    the P4 candidate solves run warm-started (the table threads
+    slot-to-slot through the scan and the final slot's table comes back
+    in `RoundOutputs.carry.p4` for the next round); otherwise the cold
+    path runs bit-for-bit the seed semantics and `carry.p4` stays None.
     """
     batched = rnd.batched
     rb = rnd.with_batch_axis()
@@ -268,6 +292,10 @@ def veds_round(rnd: RoundInputs, prm: lyp.VedsParams, ch: ChannelParams, *,
     qs0, qu0 = init_queues(rb, carry)
     state = {"zeta": jnp.zeros((B, S)), "qs": qs0,
              "qu": qu0, "T": jnp.asarray(float(T))}
+    warm = (enable_cot and prm.ipm_warm_iters > 0
+            and carry is not None and carry.p4 is not None)
+    if warm:
+        state["p4"] = jnp.broadcast_to(carry.p4, (B, S, U, U + 1))
 
     def body(st, t):
         st, info = solve_slot(t, st, rb, prm, ch, enable_cot=enable_cot,
@@ -282,10 +310,11 @@ def veds_round(rnd: RoundInputs, prm: lyp.VedsParams, ch: ChannelParams, *,
         success=success,
         n_success=success.sum(-1),
         zeta=state["zeta"],
-        energy_sov=infos["e_sov"].sum(0) + rb.e_cp,
+        energy_sov=infos["e_sov"].sum(0) + masked_e_cp(rb),
         energy_opv=infos["e_opv"].sum(0),
         n_cot_slots=infos["use_cot"].sum(0),
         n_dt_slots=infos["use_dt"].sum(0),
-        carry=SchedulerCarry(qs=state["qs"], qu=state["qu"]),
+        carry=SchedulerCarry(qs=state["qs"], qu=state["qu"],
+                             p4=state.get("p4")),
     )
     return unbatch(out, batched)

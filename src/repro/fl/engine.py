@@ -13,6 +13,14 @@ a `RolloutCarry`: the scheduler-side state (virtual queues / persistent
 fleet) threaded alongside the global model parameters and optimizer
 state. See DESIGN.md §10.
 
+Because the engine runs the same `sched_round_step`, the P4 warm-start
+table (persistent VEDS+COT, `VedsParams.ipm_warm_iters`) rides the fused
+carry for free. Evaluation can also run *inside* the scan
+(`fused_rollout(eval_fn=..., eval_mask=...)`): a `lax.cond` branch
+evaluates the post-aggregation params on the flagged rounds, so
+`run_fl(streaming=True)` with eval is one dispatch with a single
+trailing device sync instead of per-segment host round-trips.
+
 Client data is padded, not ragged: `ClientShards` holds every client's
 shard at a common `n_max` with the true sample counts in `n_samples`.
 Minibatch indices are drawn against the true counts and aggregation
@@ -73,6 +81,8 @@ class FusedResult(NamedTuple):
       loss       [R, B] weighted mean local training loss per round
       fleet      final FleetState (None in fresh-fleet mode)
       carry      final round's queue state [B, S]/[B, U]
+      metric     [R, B] in-scan eval values (NaN on rounds the eval
+                 branch did not run), or None without `eval_fn`
     """
     params: Any
     opt_state: Any
@@ -80,6 +90,7 @@ class FusedResult(NamedTuple):
     loss: jax.Array
     fleet: Optional[FleetState]
     carry: SchedulerCarry
+    metric: Optional[jax.Array] = None
 
 
 def replicate(tree, batch: int):
@@ -156,14 +167,16 @@ def local_grads(params, loss_fn: Callable, shards: ClientShards,
 
 def init_carry(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
                cfg: StreamConfig, params, *, opt=None,
-               fleet: Optional[FleetState] = None) -> RolloutCarry:
+               fleet: Optional[FleetState] = None,
+               ch: Optional[ChannelParams] = None) -> RolloutCarry:
     """Initial fused-rollout carry: scheduling state (per `cfg`) plus the
     model replicated over the [B] cell axis (and optimizer state when an
     `(init, update)` pair is given). `key` must match the key later fed
-    to `round_keys` for the rollout to be reproducible."""
+    to `round_keys` for the rollout to be reproducible. Pass the
+    rollout's `ch` so the P4 warm-start table seeds at its `p_max`."""
     B = int(cfg.batch)
     opt_state = None if opt is None else replicate(opt[0](params), B)
-    return RolloutCarry(sched=sched_state0(key, sc, mob, cfg, fleet),
+    return RolloutCarry(sched=sched_state0(key, sc, mob, cfg, fleet, ch),
                         params=replicate(params, B), opt_state=opt_state)
 
 
@@ -175,6 +188,8 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
                   lr: float = 0.05, clip: float = 5.0, opt=None,
                   steps: Optional[jax.Array] = None,
                   active: Optional[jax.Array] = None,
+                  eval_fn: Optional[Callable] = None,
+                  eval_mask: Optional[jax.Array] = None,
                   unroll: int = 1) -> FusedResult:
     """One `lax.scan` for a (segment of a) training run: scheduling +
     minibatch gather + local SGD + aggregation per step.
@@ -197,6 +212,17 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
                            remainder). Defaults to all-active; outputs
                            and losses of inactive rounds are garbage and
                            must be ignored by the caller.
+      eval_fn              traceable per-cell eval `params -> scalar`.
+                           Runs INSIDE the scan as a `lax.cond` branch
+                           on the rounds flagged by `eval_mask`
+                           (evaluating the post-aggregation params), so
+                           a run with eval is still ONE dispatch with a
+                           single trailing device sync — no segmentation
+                           (DESIGN.md §10). Results in
+                           `FusedResult.metric [R, B]`; non-eval rounds
+                           hold NaN.
+      eval_mask [R] bool   which rounds run the eval branch (ANDed with
+                           `active`); ignored without `eval_fn`.
       unroll               rounds unrolled per scan iteration. XLA CPU
                            executes `while`-loop bodies with degraded
                            intra-op threading, so compute-bound local
@@ -222,6 +248,8 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
         steps = jnp.arange(R)
     if active is None:
         active = jnp.ones((R,), bool)
+    if eval_mask is None:
+        eval_mask = jnp.zeros((R,), bool)
 
     def train_cell(p, os_, sel_c, u_c, mask_c, r):
         losses, grads, nf = local_grads(p, loss_fn, shards, sel_c, u_c)
@@ -233,8 +261,10 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
         loss = jnp.sum(jnp.where(w > 0, losses * w, 0.0)) / den
         return new_p, new_os, loss
 
+    B = int(cfg.batch)
+
     def body(c: RolloutCarry, x):
-        k, sel_r, u_r, r, a = x
+        k, sel_r, u_r, r, a, ev = x
         st, out = sched_round_step(c.sched, k, sched, sc, mob, ch, prm,
                                    cfg)
         mask = out.success.astype(jnp.float32)               # [B, S]
@@ -248,15 +278,30 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
         # selected back, so padded segments are bit-for-bit equal to
         # unpadded ones on the rounds that count
         new_c = jax.tree.map(lambda n, o: jnp.where(a, n, o), new_c, c)
-        return new_c, (out, loss)
+        if eval_fn is None:
+            return new_c, (out, loss)
+        # eval as a scanned branch: `cond` skips the eval computation
+        # entirely on non-eval rounds — no per-segment host round-trip
+        met = jax.lax.cond(
+            ev & a,
+            lambda p: jax.vmap(
+                lambda q: jnp.asarray(eval_fn(q), jnp.float32))(p),
+            lambda p: jnp.full((B,), jnp.nan, jnp.float32),
+            new_c.params)
+        return new_c, (out, loss, met)
 
-    end, (outs, losses) = jax.lax.scan(body, carry,
-                                       (keys, sel, mb_u, steps, active),
-                                       unroll=min(int(unroll), R))
+    end, ys = jax.lax.scan(body, carry,
+                           (keys, sel, mb_u, steps, active, eval_mask),
+                           unroll=min(int(unroll), R))
+    if eval_fn is None:
+        (outs, losses), metric = ys, None
+    else:
+        outs, losses, metric = ys
     fleet = None if cfg.fresh_fleet else end.sched
     # `.carry` reports the last ACTIVE round's queues — with a padded
     # segment the trailing scan steps are no-ops whose outputs are junk
     last = jnp.max(jnp.where(active, jnp.arange(R), -1))
     return FusedResult(params=end.params, opt_state=end.opt_state,
                        outputs=outs, loss=losses, fleet=fleet,
-                       carry=jax.tree.map(lambda x: x[last], outs.carry))
+                       carry=jax.tree.map(lambda x: x[last], outs.carry),
+                       metric=metric)

@@ -23,8 +23,10 @@ fused engine's single `lax.scan` program (`repro.fl.engine.fused_rollout`):
 a persistent fleet drives through coverage round-to-round, the virtual
 energy queues carry (`carry_queues`), client sampling is on-device
 (`jax.random` permutation per round + uniform minibatch draws), and the
-model parameters thread the scan carry alongside the queues. The run is
-segmented only at eval points. `fused=False` keeps the previous
+model parameters thread the scan carry alongside the queues. Evaluation
+runs inside the same scan by default (`eval_in_scan`): a whole run with
+eval is ONE dispatch with a single trailing sync; `eval_in_scan=False`
+keeps the segmented host-eval path. `fused=False` keeps the previous
 host-gather streaming path (one-scan scheduling, per-round host loop for
 gather + update) as a compatibility/benchmark reference; the blocked
 (`streaming=False`) path is the thin per-round-dispatch compatibility
@@ -76,6 +78,14 @@ class FLSimConfig:
     #                              raise for compute-bound local models on
     #                              CPU (loop bodies lose intra-op threads)
     handover_delay: bool = False  # streaming: one-round coverage lag
+    ipm_warm_iters: int = 0      # streaming VEDS+COT: warm-started P4
+    #                              budget (VedsParams.ipm_warm_iters);
+    #                              0 keeps the cold full-budget solves
+    eval_in_scan: bool = True    # streaming+fused: run eval_fn INSIDE
+    #                              the rollout scan (whole run = ONE
+    #                              dispatch + one trailing sync). Needs a
+    #                              jax-traceable eval_fn; set False to
+    #                              keep the segmented host-eval path
     # (No handoff knob: run_fl trains ONE cell (batch=1), where the §11
     # cross-cell exchange is the identity by construction. Multi-cell
     # handoff rollouts go through stream_rounds / fused_rollout, which
@@ -102,20 +112,23 @@ def _apply(lr: float):
 
 @functools.lru_cache(maxsize=32)
 def _fused_segment(loss_fn: Callable, sched_name: str, sc, mob, ch, prm,
-                   cfg: StreamConfig, lr: float, unroll: int):
+                   cfg: StreamConfig, lr: float, unroll: int,
+                   eval_fn: Callable | None = None):
     """Jitted fused-rollout segment, cached across `run_fl` calls (the
     per-call jit wrappers would otherwise re-trace every invocation).
     Callers normalize `cfg.n_rounds` to 0 — the segment's length comes
     from the `keys` argument, so runs that differ only in total round
     count share one cache entry (and one compiled program when their
-    segment lengths match)."""
+    segment lengths match). `eval_fn` (in-scan eval) joins the cache
+    key; the rounds it fires on arrive as the `ev` array argument."""
     sched = get_scheduler(sched_name)
 
     @jax.jit
-    def seg(carry, keys, sel, mb_u, shards, steps, active):
+    def seg(carry, keys, sel, mb_u, shards, steps, active, ev):
         return fused_rollout(keys, sel, mb_u, sched, sc, mob, ch, prm,
                              cfg, loss_fn, shards, carry, lr=lr,
-                             steps=steps, active=active, unroll=unroll)
+                             steps=steps, active=active, eval_fn=eval_fn,
+                             eval_mask=ev, unroll=unroll)
 
     return seg
 
@@ -130,10 +143,15 @@ def run_fl(key: jax.Array, params, loss_fn: Callable,
     Returns history: round, sim_time, n_success, eval metric, plus
     `scheduled_rounds` — the total number of rounds actually scheduled
     (== sim.rounds: trailing partial blocks are trimmed, not padded).
+    The fused streaming path also reports `dispatches` — how many jitted
+    rollout segments the run launched (1 with in-scan eval or no eval:
+    the whole run is one XLA program with a single trailing
+    `block_until_ready`).
     """
     mob = ManhattanParams(v_max=sim.v_max)
     ch = ChannelParams()
-    prm = VedsParams(alpha=sim.alpha, V=sim.V, Q=sim.q_bits, slot=0.1)
+    prm = VedsParams(alpha=sim.alpha, V=sim.V, Q=sim.q_bits, slot=0.1,
+                     ipm_warm_iters=sim.ipm_warm_iters)
     sc = ScenarioParams(n_sov=sim.n_sov, n_opv=sim.n_opv,
                         n_slots=sim.n_slots, batch_size=sim.batch_size)
     sched = get_scheduler(sim.scheduler)
@@ -261,26 +279,53 @@ def _stream_draws(key: jax.Array, sim: FLSimConfig):
 
 def _run_fused(key, params, loss_fn, shards: ClientShards,
                sim: FLSimConfig, sc, mob, ch, prm, eval_fn, eval_every):
-    """The fused path: the whole run is `fused_rollout` scans, segmented
-    only at eval points (one segment — one dispatch — when eval_fn is
-    None)."""
+    """The fused path. Default (`eval_in_scan`, or no eval_fn): the whole
+    run — scheduling, training, AND eval — is ONE `fused_rollout` scan:
+    eval runs as a `lax.cond` branch inside the program, so the run is a
+    single dispatch with a single trailing `block_until_ready`. With
+    `eval_in_scan=False` the run is segmented at eval points (host-side
+    eval_fn per segment, kept for non-traceable eval functions), every
+    segment padded to one compiled shape."""
     R = sim.rounds
     cfg = _stream_cfg(sim)
     k_sched, sel, mb_u = _stream_draws(key, sim)
     sel = sel[:, None]                                       # [R, 1, S]
     mb_u = mb_u[:, None]                                     # [R, 1, S, bs]
     keys = round_keys(k_sched, cfg, R)
-    carry = init_carry(k_sched, sc, mob, cfg, params)
+    carry = init_carry(k_sched, sc, mob, cfg, params, ch=ch)
+    evals = ([] if eval_fn is None else
+             [r for r in range(R) if r % eval_every == 0 or r == R - 1])
+    history = {"round": [], "time": [], "n_success": [], "metric": [],
+               "scheduled_rounds": R, "dispatches": 0}
+
+    if eval_fn is None or sim.eval_in_scan:
+        seg_fn = _fused_segment(loss_fn, sim.scheduler, sc, mob, ch, prm,
+                                dataclasses.replace(cfg, n_rounds=0),
+                                sim.lr, max(1, sim.fused_unroll),
+                                eval_fn)
+        ev = jnp.zeros((R,), bool)
+        if evals:
+            ev = ev.at[jnp.asarray(evals)].set(True)
+        res = seg_fn(carry, keys, sel, mb_u, shards, jnp.arange(R),
+                     jnp.ones((R,), bool), ev)
+        history["dispatches"] = 1
+        # the ONE trailing sync: everything read below is a materialized
+        # buffer, not a new device round-trip
+        jax.block_until_ready(res)
+        if evals:
+            n_succ = np.asarray(res.outputs.n_success[:, 0])
+            met = np.asarray(res.metric[:, 0])
+            for r in evals:
+                history["round"].append(r)
+                history["time"].append((r + 1) * sim.n_slots * prm.slot)
+                history["n_success"].append(int(n_succ[r]))
+                history["metric"].append(float(met[r]))
+        return history
+
     seg_fn = _fused_segment(loss_fn, sim.scheduler, sc, mob, ch, prm,
                             dataclasses.replace(cfg, n_rounds=0),
-                            sim.lr, max(1, sim.fused_unroll))
-
-    if eval_fn is None:
-        cuts = [R]
-    else:
-        evals = [r for r in range(R)
-                 if r % eval_every == 0 or r == R - 1]
-        cuts = [e + 1 for e in evals]
+                            sim.lr, max(1, sim.fused_unroll), None)
+    cuts = [e + 1 for e in evals]
     # one compiled segment length for the whole run: every segment is
     # padded to the longest with no-op (inactive) tail rounds, so the
     # run compiles ONE program instead of up to three (the 1-round
@@ -294,28 +339,26 @@ def _run_fused(key, params, loss_fn, shards: ClientShards,
                 [s, jnp.broadcast_to(s[-1:], (L - n,) + s.shape[1:])])
         return s
 
-    history = {"round": [], "time": [], "n_success": [], "metric": [],
-               "scheduled_rounds": R}
+    no_ev = jnp.zeros((L,), bool)
     r0 = 0
     for cut in cuts:
         n = cut - r0
         res = seg_fn(carry, padded(keys, r0, n), padded(sel, r0, n),
                      padded(mb_u, r0, n), shards,
-                     padded(jnp.arange(R), r0, n), jnp.arange(L) < n)
+                     padded(jnp.arange(R), r0, n), jnp.arange(L) < n,
+                     no_ev)
         carry = RolloutCarry(
             sched=res.fleet if res.fleet is not None else res.carry,
             params=res.params, opt_state=res.opt_state)
-        if eval_fn is not None:
-            r = cut - 1
-            history["round"].append(r)
-            history["time"].append((r + 1) * sim.n_slots * prm.slot)
-            history["n_success"].append(
-                int(res.outputs.n_success[n - 1, 0]))
-            history["metric"].append(float(eval_fn(
-                jax.tree.map(lambda x: x[0], res.params))))
+        history["dispatches"] += 1
+        r = cut - 1
+        history["round"].append(r)
+        history["time"].append((r + 1) * sim.n_slots * prm.slot)
+        history["n_success"].append(
+            int(res.outputs.n_success[n - 1, 0]))
+        history["metric"].append(float(eval_fn(
+            jax.tree.map(lambda x: x[0], res.params))))
         r0 = cut
-    # run_fl reports a *finished* run: without eval there is no host sync
-    # above, so block before returning (also keeps timing honest)
     jax.block_until_ready(carry.params)
     return history
 

@@ -49,6 +49,11 @@ _DEFAULT_TABLE: Mapping[str, Optional[str]] = {
     "fleet": None,         # per-cell vehicle pool slot axis: the §11
     #                        exchange permutes the flat cell x fleet
     #                        layout, so it must stay whole per shard
+    "prefix": None,        # P4 warm-start table [.., U, 1+U] candidate
+    "power": None,         # axes (FleetState.p4_tab / SchedulerCarry.p4):
+    #                        per-vehicle payload, never sharded — the
+    #                        table rides the §11 exchange all-to-all
+    #                        with its vehicle
     "seq": None,
     "cache_seq": "model",   # decode caches: sequence dim sharded (flash-decode)
     # params
@@ -129,7 +134,10 @@ def fused_batch_spec(rules: LogicalRules, ndim: int) -> P:
 def fleet_spec(rules: LogicalRules, ndim: int) -> P:
     """PartitionSpec for a persistent-fleet leaf `[B, N, ...]`
     (DESIGN.md §9/§11): the cell axis shards over the data axes, the
-    per-cell vehicle slots and any trailing dims stay local.
+    per-cell vehicle slots and any trailing dims stay local. The P4
+    warm-start table `FleetState.p4_tab [B, N, U, 1+U]` is such a leaf
+    (ndim=4): its trailing candidate/power axes are per-vehicle payload
+    and travel with the vehicle through the exchange collective.
 
     Sharding contract of the §11 cross-cell exchange
     (`repro.core.scenario.exchange_fleet`): the exchange is a

@@ -296,33 +296,81 @@ def test_fused_run_fl_matches_host_gather_streaming(fl_setup):
     np.testing.assert_allclose(hf["time"], hg["time"], rtol=1e-6)
 
 
-def test_fused_run_fl_compiles_one_segment_shape(fl_setup):
-    """Satellite: with eval segmentation the run used to compile up to
-    three distinct segment lengths (1, eval_every, remainder); the
-    padded no-op tail now serves every segment from ONE compiled shape
-    — asserted via the jitted segment's compile-cache size."""
+def _seg_of(sim: FLSimConfig, eval_fn=None):
+    """Reconstruct the lru-cached jitted segment a `run_fl` call used."""
     from repro.channel.mobility import ManhattanParams
     from repro.channel.v2x import ChannelParams
     from repro.core.lyapunov import VedsParams
     from repro.fl.simulator import _fused_segment, _stream_cfg
 
+    return _fused_segment(
+        _loss_fn, sim.scheduler,
+        ScenarioParams(n_sov=sim.n_sov, n_opv=sim.n_opv,
+                       n_slots=sim.n_slots, batch_size=sim.batch_size),
+        ManhattanParams(v_max=sim.v_max), ChannelParams(),
+        VedsParams(alpha=sim.alpha, V=sim.V, Q=sim.q_bits, slot=0.1,
+                   ipm_warm_iters=sim.ipm_warm_iters),
+        dataclasses.replace(_stream_cfg(sim), n_rounds=0), sim.lr, 1,
+        eval_fn)
+
+
+def test_fused_run_fl_eval_in_scan_is_one_dispatch(fl_setup, monkeypatch):
+    """Tentpole: with the in-scan eval hook, `run_fl(streaming=True)`
+    with eval compiles ONE program and performs exactly one trailing
+    `block_until_ready` — no per-segment host round-trips."""
     params, data, eval_fn = fl_setup
+    blocks = []
+    real = jax.block_until_ready
+    monkeypatch.setattr(jax, "block_until_ready",
+                        lambda x: (blocks.append(1), real(x))[1])
     # scheduler "sa" keeps this test's segment distinct from the madca
     # segments other tests in this module share via the lru cache
     sim = FLSimConfig(n_clients=N_CLIENTS, rounds=7, scheduler="sa",
                       n_slots=10, n_sov=4, n_opv=3, batch_size=BS,
                       streaming=True)
+    h = run_fl(jax.random.key(7), params, _loss_fn, data, sim,
+               eval_fn=eval_fn, eval_every=3)
+    assert h["round"] == [0, 3, 6]
+    assert h["dispatches"] == 1
+    assert len(blocks) == 1
+    seg = _seg_of(sim, eval_fn)
+    if hasattr(seg, "_cache_size"):
+        assert seg._cache_size() == 1
+
+
+def test_fused_run_fl_eval_in_scan_matches_segmented(fl_setup):
+    """The in-scan eval branch reproduces the segmented host-eval path:
+    same schedule, metrics to fp32 tolerance, 1 vs per-segment
+    dispatches."""
+    hi = _go(fl_setup, streaming=True)
+    hs = _go(fl_setup, streaming=True, eval_in_scan=False)
+    assert hi["round"] == hs["round"]
+    assert hi["n_success"] == hs["n_success"]
+    assert hi["time"] == hs["time"]
+    np.testing.assert_allclose(hi["metric"], hs["metric"], rtol=1e-5)
+    assert hi["dispatches"] == 1
+    assert hs["dispatches"] == len(hs["round"])
+
+
+def test_fused_run_fl_segmented_compiles_one_segment_shape(fl_setup):
+    """Satellite (kept from the pre-in-scan design, now the
+    `eval_in_scan=False` compatibility path): eval segmentation used to
+    compile up to three distinct segment lengths (1, eval_every,
+    remainder); the padded no-op tail serves every segment from ONE
+    compiled shape — asserted via the jitted segment's compile-cache
+    size."""
+    params, data, eval_fn = fl_setup
+    # scheduler "optimal" keeps this segment distinct from every other
+    # cached segment in this module
+    sim = FLSimConfig(n_clients=N_CLIENTS, rounds=7, scheduler="optimal",
+                      n_slots=10, n_sov=4, n_opv=3, batch_size=BS,
+                      streaming=True, eval_in_scan=False)
     # rounds=7, eval_every=3 -> evals at 0, 3, 6: segment lengths 1/3/3
     h = run_fl(jax.random.key(7), params, _loss_fn, data, sim,
                eval_fn=eval_fn, eval_every=3)
     assert h["round"] == [0, 3, 6]
-    seg = _fused_segment(
-        _loss_fn, sim.scheduler,
-        ScenarioParams(n_sov=sim.n_sov, n_opv=sim.n_opv,
-                       n_slots=sim.n_slots, batch_size=sim.batch_size),
-        ManhattanParams(v_max=sim.v_max), ChannelParams(),
-        VedsParams(alpha=sim.alpha, V=sim.V, Q=sim.q_bits, slot=0.1),
-        dataclasses.replace(_stream_cfg(sim), n_rounds=0), sim.lr, 1)
+    assert h["dispatches"] == 3
+    seg = _seg_of(sim)
     if not hasattr(seg, "_cache_size"):
         pytest.skip("jax has no jit _cache_size introspection")
     assert seg._cache_size() == 1

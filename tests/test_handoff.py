@@ -36,19 +36,22 @@ KEY = jax.random.key(0)
 B, N = 3, 8
 
 PER_VEHICLE = ("pos", "dir", "speed", "jitter", "allowance", "energy",
-               "queue", "covered")
+               "queue", "covered", "p4_tab")
 
 
 
 
 def _tagged_fleet(key, batch=B, n_fleet=N, rsu=None, **kw) -> FleetState:
-    """A fleet whose jitter/queue fields are unique per-vehicle tags, so
-    identity can be tracked through any permutation."""
+    """A fleet whose jitter/queue/p4_tab fields are unique per-vehicle
+    tags, so identity can be tracked through any permutation."""
     fl = init_fleet(key, SC, MOB, batch,
                     n_fleet=n_fleet, rsu_xy=rsu, **kw)
     tags = jnp.arange(batch * n_fleet, dtype=jnp.float32).reshape(
         batch, n_fleet)
-    return dataclasses.replace(fl, jitter=tags, queue=10.0 * tags)
+    p4 = jnp.broadcast_to(100.0 * tags[..., None, None],
+                          fl.p4_tab.shape)
+    return dataclasses.replace(fl, jitter=tags, queue=10.0 * tags,
+                               p4_tab=p4)
 
 
 def _row_of(fleet: FleetState):
@@ -198,6 +201,25 @@ def test_queue_freezes_while_out_and_restores_on_readmission():
                                   np.asarray(ref.carry.qs))
     np.testing.assert_array_equal(np.asarray(out2.carry.qu),
                                   np.asarray(ref.carry.qu))
+
+
+def test_p4_table_travels_with_vehicle_across_cells(grid_fleet, exchanged):
+    """Satellite: the P4 warm-start table is per-vehicle state like the
+    virtual queue — it migrates with the vehicle in `exchange_fleet`
+    (tag coupling: every vehicle's table rows equal 100x its jitter
+    tag after any permutation)."""
+    np.testing.assert_allclose(
+        np.asarray(exchanged.p4_tab),
+        100.0 * np.broadcast_to(
+            np.asarray(exchanged.jitter)[..., None, None],
+            exchanged.p4_tab.shape))
+    row0, row1 = _row_of(grid_fleet), _row_of(exchanged)
+    moved_tags = [t for t in row0 if row0[t] != row1[t]]
+    assert moved_tags
+    tab1 = np.asarray(exchanged.p4_tab)
+    for t in moved_tags[:5]:
+        assert (tab1[row1[t]] == 100.0 * t).any()
+        assert not (tab1[row0[t]] == 100.0 * t).any()
 
 
 def test_queue_travels_with_vehicle_across_cells(grid_fleet, exchanged):

@@ -1,16 +1,25 @@
 """Solver correctness: Prop-1 closed form, the interior-point P4 solver vs
-scipy SLSQP, plus hypothesis property tests on feasibility."""
+scipy SLSQP, warm-start contracts, plus hypothesis property tests on
+feasibility (only the property tests need the hypothesis dev extra —
+everything else runs on a bare toolchain)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="dev extra; pip install -r "
-                    "requirements-dev.txt")
-from hypothesis import given, settings, strategies as st  # noqa: E402
-from scipy.optimize import minimize  # noqa: E402
+from repro.core.solver import dt_power_opt, p4_seed_table, solve_p4
 
-from repro.core.solver import dt_power_opt, solve_p4
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                       # dev extra; CI installs it
+    HAS_HYPOTHESIS = False
+
+try:
+    from scipy.optimize import minimize
+    HAS_SCIPY = True
+except ImportError:                       # dev extra; CI installs it
+    HAS_SCIPY = False
 
 
 def test_dt_power_is_argmax():
@@ -29,6 +38,37 @@ def test_dt_power_is_argmax():
             abs(f.max()) + 1e-9)
 
 
+def test_dt_power_doc_objective_pinned():
+    """Satellite: Prop. 1 maximizes cw*ln(1+gain*p/noise) - q*p with the
+    kappa factor already folded into q by the call sites (the docstring
+    used to double-count it). Pins the closed form against a dense grid
+    of exactly that objective, including both clipping boundaries."""
+    noise, pmax = 8e-14, 0.3
+    grid = np.linspace(0.0, pmax, 20001)
+
+    def grid_argmax(cw, q, gain):
+        return grid[np.argmax(cw * np.log1p(gain * grid / noise)
+                              - q * grid)]
+
+    rng = np.random.default_rng(7)
+    for _ in range(10):                       # interior optima
+        cw = abs(rng.normal(1.0, 1.0)) + 1e-3
+        gain = abs(rng.normal(1e-11, 1e-11)) + 1e-13
+        # pick q so the interior optimum cw/q - noise/gain is in (0, pmax)
+        q = cw / (rng.uniform(0.05, 0.95) * pmax + noise / gain)
+        p = float(dt_power_opt(jnp.float32(cw), jnp.float32(q),
+                               jnp.float32(gain), noise, pmax))
+        assert abs(p - grid_argmax(cw, q, gain)) < 2 * (pmax / 20000)
+    # clip at p_max (cheap energy): optimum is the upper boundary
+    p_hi = float(dt_power_opt(jnp.float32(1.0), jnp.float32(1e-6),
+                              jnp.float32(1e-11), noise, pmax))
+    assert abs(p_hi - pmax) < 1e-6 and grid_argmax(1.0, 1e-6, 1e-11) == pmax
+    # clip at 0 (queue dominates): not transmitting is optimal
+    p_lo = float(dt_power_opt(jnp.float32(1e-4), jnp.float32(1e3),
+                              jnp.float32(1e-13), noise, pmax))
+    assert p_lo == 0.0 == grid_argmax(1e-4, 1e3, 1e-13)
+
+
 def _rand_instance(rng, n):
     a = np.abs(rng.normal(0, 5, n))
     a[rng.random(n) < 0.3] = 0
@@ -40,6 +80,8 @@ def _rand_instance(rng, n):
     return a, q, d, np.full(n, 0.3), abs(rng.normal(0.5, 0.5)) + 0.01
 
 
+@pytest.mark.skipif(not HAS_SCIPY, reason="dev extra; pip install -r "
+                    "requirements-dev.txt")
 def test_p4_vs_scipy():
     rng = np.random.default_rng(1)
     gaps = []
@@ -68,17 +110,88 @@ def test_p4_vs_scipy():
     assert np.percentile(gaps, 90) < 0.15, gaps
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(2, 9), st.integers(0, 10_000))
-def test_p4_always_feasible(n, seed):
-    """Property: the solver's output always satisfies box + decodability."""
-    rng = np.random.default_rng(seed)
-    a, q, d, pmax, cw = _rand_instance(rng, n)
-    p, val = solve_p4(jnp.float32(cw), jnp.asarray(a, jnp.float32),
-                      jnp.asarray(q, jnp.float32),
-                      jnp.asarray(d, jnp.float32),
-                      jnp.asarray(pmax, jnp.float32))
-    p = np.asarray(p)
-    assert (p >= -1e-6).all() and (p <= 0.3 + 1e-6).all()
-    assert d @ p <= 1e-5
-    assert float(val) >= -1e-6  # never worse than not transmitting
+# ---- warm start (DESIGN.md §3) ------------------------------------------
+
+def test_p4_warm_from_seed_at_full_budget_is_cold_bit_for_bit():
+    """The warm path seeded with `p4_seed_table` at the full iteration
+    budget takes the exact cold trajectory: same projection, same mu
+    schedule — p and value bit-for-bit."""
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        n = 1 + rng.integers(1, 8)
+        a, q, d, pmax, cw = _rand_instance(rng, n)
+        args = (jnp.float32(cw), jnp.asarray(a, jnp.float32),
+                jnp.asarray(q, jnp.float32), jnp.asarray(d, jnp.float32),
+                jnp.asarray(pmax, jnp.float32))
+        p_c, v_c = solve_p4(*args, iters=12)
+        p_w, v_w = solve_p4(*args, iters=12,
+                            p_init=p4_seed_table((n,), 0.3),
+                            warm_iters=12)
+        np.testing.assert_array_equal(np.asarray(p_c), np.asarray(p_w))
+        np.testing.assert_array_equal(np.asarray(v_c), np.asarray(v_w))
+
+
+def test_p4_warm_matches_cold_fp32_on_random_grids():
+    """Satellite: warm-started solves (seeded from the cold optimum, as
+    a streaming round would be after one round of convergence) match the
+    cold solve to fp32 tolerance — at the full budget AND at half."""
+    rng = np.random.default_rng(4)
+    for _ in range(15):
+        n = 1 + rng.integers(1, 8)
+        a, q, d, pmax, cw = _rand_instance(rng, n)
+        args = (jnp.float32(cw), jnp.asarray(a, jnp.float32),
+                jnp.asarray(q, jnp.float32), jnp.asarray(d, jnp.float32),
+                jnp.asarray(pmax, jnp.float32))
+        p_c, v_c = solve_p4(*args, iters=16)
+        # full budget: fp32-tight; half budget: the shortened Newton +
+        # polish path is approximate by design, bounded not bit-exact
+        for wi, rt, at in ((16, 1e-3, 1e-5), (8, 1e-2, 1e-3)):
+            p_w, v_w = solve_p4(*args, iters=16, p_init=p_c,
+                                warm_iters=wi)
+            np.testing.assert_allclose(float(v_w), float(v_c),
+                                       rtol=rt, atol=at)
+            # warm output is still feasible
+            p_w = np.asarray(p_w)
+            assert (p_w >= -1e-6).all() and (p_w <= 0.3 + 1e-6).all()
+            assert d @ p_w <= 1e-5
+
+
+def test_p4_warm_never_poisoned_by_garbage_init():
+    """A stale/garbage warm seed (zeros, or the box corner) is projected
+    into the interior and the solve stays feasible, finite and no worse
+    than not transmitting — the table can never poison a round, only
+    cost solution quality until it re-converges."""
+    rng = np.random.default_rng(5)
+    for bad in (np.zeros, lambda n: np.full(n, 0.3)):
+        for _ in range(5):
+            n = 1 + rng.integers(1, 8)
+            a, q, d, pmax, cw = _rand_instance(rng, n)
+            p_w, v_w = solve_p4(jnp.float32(cw),
+                                jnp.asarray(a, jnp.float32),
+                                jnp.asarray(q, jnp.float32),
+                                jnp.asarray(d, jnp.float32),
+                                jnp.asarray(pmax, jnp.float32), iters=16,
+                                p_init=jnp.asarray(bad(n), jnp.float32),
+                                warm_iters=16)
+            p_w = np.asarray(p_w)
+            assert np.isfinite(p_w).all()
+            assert (p_w >= -1e-6).all() and (p_w <= 0.3 + 1e-6).all()
+            assert d @ p_w <= 1e-5
+            assert float(v_w) >= -1e-6
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 9), st.integers(0, 10_000))
+    def test_p4_always_feasible(n, seed):
+        """Property: solver output always satisfies box + decodability."""
+        rng = np.random.default_rng(seed)
+        a, q, d, pmax, cw = _rand_instance(rng, n)
+        p, val = solve_p4(jnp.float32(cw), jnp.asarray(a, jnp.float32),
+                          jnp.asarray(q, jnp.float32),
+                          jnp.asarray(d, jnp.float32),
+                          jnp.asarray(pmax, jnp.float32))
+        p = np.asarray(p)
+        assert (p >= -1e-6).all() and (p <= 0.3 + 1e-6).all()
+        assert d @ p <= 1e-5
+        assert float(val) >= -1e-6  # never worse than not transmitting

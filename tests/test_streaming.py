@@ -373,6 +373,99 @@ def test_round_chunk_rejects_bad_configs():
         stream_rounds(KEY, get_scheduler("sa"), SC, MOB, CH, PRM, cfg)
 
 
+def test_round_chunk_validation_is_centralized():
+    """Satellite: every `round_chunk` rejection lives in
+    `validate_stream_config` itself — callers that never reach the
+    chunked constructor (segmented fused-engine configs with a
+    normalized n_rounds) still reject bad combos up front."""
+    from repro.core.streaming import validate_stream_config
+
+    good = StreamConfig(n_rounds=4, batch=1, fresh_fleet=True,
+                        round_chunk=2)
+    validate_stream_config(good)                    # no error
+    for cfg in (
+        StreamConfig(n_rounds=4, round_chunk=0),    # sub-1 chunk
+        StreamConfig(n_rounds=4, fresh_fleet=True, round_chunk=3),
+        StreamConfig(n_rounds=4, fresh_fleet=True, round_chunk=2,
+                     carry_queues=True),
+        StreamConfig(n_rounds=4, fresh_fleet=False, round_chunk=2),
+        # the fused engine's normalized n_rounds=0 cfg still rejects
+        # the carry/persistent combos (0 % C == 0 passes divisibility)
+        StreamConfig(n_rounds=0, fresh_fleet=False, round_chunk=2),
+        StreamConfig(n_rounds=0, fresh_fleet=True, round_chunk=2,
+                     carry_queues=True),
+    ):
+        with pytest.raises(ValueError):
+            validate_stream_config(cfg)
+
+
+# ---- warm-started interior point (persistent VEDS+COT) -----------------
+
+WARM_SC = ScenarioParams(n_sov=3, n_opv=2, n_slots=8)
+WARM_PRM = VedsParams(alpha=2.0, V=0.2, Q=1e7, slot=0.1, ipm_iters=8)
+
+
+def _warm_stream(prm, fleet, R=3):
+    cfg = StreamConfig(n_rounds=R, batch=1, carry_queues=True)
+    return jax.jit(lambda k, f, p=prm: stream_rounds(
+        k, get_scheduler("veds"), WARM_SC, MOB, CH, p, cfg, fleet=f))(
+        KEY, fleet)
+
+
+def test_warm_stream_full_budget_matches_cold_success():
+    """Acceptance: persistent VEDS+COT streaming with the warm-start
+    table at the FULL iteration budget reproduces the cold-start success
+    masks bit-for-bit (both budgets converge; the boolean zeta >= Q
+    outcome is insensitive to the solver trajectory)."""
+    fleet = init_fleet(jax.random.key(30), WARM_SC, MOB, 1, n_fleet=8)
+    cold = _warm_stream(WARM_PRM, fleet)
+    warm = _warm_stream(dataclasses.replace(
+        WARM_PRM, ipm_warm_iters=WARM_PRM.ipm_iters), fleet)
+    np.testing.assert_array_equal(np.asarray(warm.outputs.success),
+                                  np.asarray(cold.outputs.success))
+    # the table is genuinely consumed and refreshed, not passed through
+    assert (np.asarray(warm.fleet.p4_tab)
+            != np.asarray(fleet.p4_tab)).any()
+    # cold path never touches the table
+    np.testing.assert_array_equal(np.asarray(cold.fleet.p4_tab),
+                                  np.asarray(fleet.p4_tab))
+
+
+def test_warm_stream_short_budget_stays_sane():
+    """ipm_warm_iters = ipm_iters / 2 (the speed configuration): the
+    rollout stays finite, queues nonnegative, and the delivered bits
+    stay close to the cold solve (the warm seeds are near-optimal)."""
+    fleet = init_fleet(jax.random.key(31), WARM_SC, MOB, 1, n_fleet=8)
+    cold = _warm_stream(WARM_PRM, fleet)
+    warm = _warm_stream(dataclasses.replace(
+        WARM_PRM, ipm_warm_iters=WARM_PRM.ipm_iters // 2), fleet)
+    tab = np.asarray(warm.fleet.p4_tab)
+    assert np.isfinite(tab).all()
+    assert (tab >= 0).all() and (tab <= CH.p_max + 1e-6).all()
+    q = np.asarray(warm.outputs.carry.qs)
+    assert np.isfinite(q).all() and (q >= 0).all()
+    z_c = np.asarray(cold.outputs.zeta).sum()
+    z_w = np.asarray(warm.outputs.zeta).sum()
+    assert z_w >= 0.9 * z_c, (z_w, z_c)
+
+
+def test_warm_solver_ignored_by_non_cot_schedulers():
+    """ipm_warm_iters > 0 with schedulers that never solve P4 (madca,
+    v2i_only) must be a no-op: identical rollouts, untouched table."""
+    prm_w = dataclasses.replace(PRM, ipm_warm_iters=4)
+    fleet = init_fleet(jax.random.key(32), SC, MOB, 1, n_fleet=8)
+    for name in ("madca", "v2i_only"):
+        cfg = StreamConfig(n_rounds=2, batch=1, carry_queues=True)
+        run = lambda p: jax.jit(lambda k, f, p=p: stream_rounds(
+            k, get_scheduler(name), SC, MOB, CH, p, cfg, fleet=f))(
+            KEY, fleet)
+        base, warm = run(PRM), run(prm_w)
+        np.testing.assert_array_equal(np.asarray(base.outputs.success),
+                                      np.asarray(warm.outputs.success))
+        np.testing.assert_array_equal(np.asarray(warm.fleet.p4_tab),
+                                      np.asarray(fleet.p4_tab))
+
+
 # ---- cross-round queue dynamics (acceptance) ---------------------------
 
 def test_queues_grow_under_infeasible_budget():

@@ -1,4 +1,6 @@
 """System-level properties of the VEDS scheduler and its baselines."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +10,7 @@ from repro.channel.mobility import ManhattanParams
 from repro.channel.v2x import ChannelParams
 from repro.core.baselines import SCHEDULERS
 from repro.core.lyapunov import VedsParams, psi, sigmoid_weight
-from repro.core.scenario import ScenarioParams, make_round
+from repro.core.scenario import ScenarioParams, make_round, make_round_batch
 
 MOB = ManhattanParams(v_max=10.0)
 CH = ChannelParams()
@@ -61,6 +63,33 @@ def test_energy_bounded_violation(outcomes, rounds):
     for o, r in zip(outcomes["veds"], rounds):
         overshoot = np.asarray(o["energy_sov"]) - np.asarray(r.e_sov)
         assert overshoot.max() < 0.2  # J; bounded by sqrt(2 T^2 Phi) scale
+
+
+def test_padded_slots_report_zero_energy_all_schedulers():
+    """ISSUE 5 bugfix pin: `energy_sov` must be exactly zero for
+    padded / never-eligible SOV slots (`valid_sov == False`) in every
+    scheduler, even when the round's `e_cp` field is NOT pre-masked —
+    generated rounds zero it, but consumers that sum `RoundOutputs`
+    directly (blocked/benchmark paths) must not see phantom compute
+    energy from slots that never existed."""
+    sc = ScenarioParams(n_sov=3, n_opv=2, n_slots=6)
+    prm = VedsParams(alpha=2.0, V=0.2, Q=1e7, slot=0.1, ipm_iters=6)
+    rnd = jax.jit(lambda k: make_round_batch(
+        k, sc, MOB, CH, prm, 2, hetero_fleet=False))(jax.random.key(3))
+    # hetero fleet with UNMASKED e_cp: slot (0,2) and all of cell 1's
+    # tail are padding that a careless consumer would still charge
+    valid_sov = jnp.array([[True, True, False],
+                           [True, False, False]])
+    poisoned = dataclasses.replace(rnd, e_cp=jnp.full((2, 3), 0.123),
+                                   valid_sov=valid_sov)
+    for name, sched in SCHEDULERS.items():
+        out = jax.jit(lambda r, s=sched: s.solve_round(r, prm, CH))(
+            poisoned)
+        e = np.asarray(out.energy_sov)
+        assert (e[~np.asarray(valid_sov)] == 0.0).all(), \
+            f"{name}: padded slots report energy {e}"
+        # real slots still pay their compute energy
+        assert (e[np.asarray(valid_sov)] >= 0.123 - 1e-7).all(), name
 
 
 def test_sigmoid_weight_monotone():
