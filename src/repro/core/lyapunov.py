@@ -27,6 +27,14 @@ class VedsParams:
     #                          re-solves from the previous optimum with
     #                          this many Newton steps (tail of the cold mu
     #                          schedule). 0 disables the warm path.
+    ipm_far_iters: int = 0   # adaptive two-tier warm budget: candidates
+    #                          whose warm seed is far from stationary
+    #                          (gradient norm > ipm_far_grad_tol) apply
+    #                          this many steps instead of ipm_warm_iters.
+    #                          Needs ipm_far_iters > ipm_warm_iters and
+    #                          ipm_far_grad_tol > 0; otherwise single-tier.
+    ipm_far_grad_tol: float = 0.0  # gradient-norm threshold splitting the
+    #                          near/far tiers (0 disables the split).
 
 
 def sigmoid_shifted(z: jax.Array, prm: VedsParams) -> jax.Array:

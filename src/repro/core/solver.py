@@ -81,9 +81,17 @@ def p4_seed_table(shape, p_max: float) -> jax.Array:
     return tab.at[..., 0].set(0.5 * p_max)
 
 
+def _polish_count(n_it: int, iters: int) -> int:
+    """Gradient-polish steps for a Newton budget of `n_it` out of the cold
+    `iters`: the full 10 at the full budget (bit-for-bit cold contract),
+    proportionally fewer on a shortened warm budget."""
+    return 10 if n_it == iters else max(2, (10 * n_it) // iters)
+
+
 def solve_p4(cw: jax.Array, a: jax.Array, q: jax.Array, d: jax.Array,
              p_max: jax.Array, *, iters: int = 25,
-             mu_final: float = 1e-3, p_init=None, warm_iters: int = 0):
+             mu_final: float = 1e-3, p_init=None, warm_iters: int = 0,
+             far_iters: int = 0, far_grad_tol: float = 0.0):
     """Interior-point solve of P4. All args vectors [1+U] except cw scalar.
 
     Unscheduled OPVs must have a=0, q arbitrary, p_max>0; their optimum is 0.
@@ -100,8 +108,24 @@ def solve_p4(cw: jax.Array, a: jax.Array, q: jax.Array, d: jax.Array,
     proportionally. `warm_iters <= 0` keeps the full budget, so
     `p_init = p4_seed_table(...)` + full budget is bit-for-bit the
     cold solve.
+
+    Adaptive two-tier budget (warm path only; `far_iters > warm_iters`
+    and `far_grad_tol > 0` enable it): candidates whose projected seed is
+    already near-stationary (raw-objective gradient norm <= tol) apply
+    only the last `warm_iters` steps of the schedule; far-from-stationary
+    seeds (a migrated vehicle, a channel jump) apply the full `far_iters`
+    tail. The selection is a branch-free `where` on masked updates, so
+    the program shape is one `far_iters`-length scan for every vmapped
+    candidate lane: the *applied* steps of a near lane are bit-for-bit
+    the plain `warm_iters` schedule, and a far lane with
+    `far_iters == iters` is bit-for-bit the cold solve from the seed.
+    (Uniform lanes mean compute scales with `far_iters`; the lever is
+    that `warm_iters` can drop far lower than a single-tier budget could
+    afford, because stragglers keep full-budget quality.)
     """
     n = a.shape[0]
+    adaptive = (p_init is not None and warm_iters > 0
+                and far_iters > warm_iters and far_grad_tol > 0.0)
     if p_init is None:
         p0 = jnp.full((n,), 0.25) * p_max
         p0 = p0.at[0].set(0.5 * p_max[0])
@@ -111,9 +135,23 @@ def solve_p4(cw: jax.Array, a: jax.Array, q: jax.Array, d: jax.Array,
         n_it = min(int(warm_iters), iters) if warm_iters > 0 else iters
     p0 = _project_feasible(p0, d, p_max, margin=0.5)
 
-    mus = jnp.geomspace(1e-1, mu_final, iters)[iters - n_it:]
+    if adaptive:
+        n_run = min(int(far_iters), iters)
+        s0 = 1.0 + jnp.dot(a, p0)
+        g0 = jnp.linalg.norm(cw * a / s0 - q)
+        far = g0 > far_grad_tol
+        budget = jnp.where(far, n_run, n_it)
+        budget_pol = jnp.where(far, _polish_count(n_run, iters),
+                               _polish_count(n_it, iters))
+    else:
+        n_run = n_it
+        budget = n_run
+        budget_pol = _polish_count(n_it, iters)
 
-    def step(p, mu):
+    mus = jnp.geomspace(1e-1, mu_final, iters)[iters - n_run:]
+
+    def step(p, x):
+        mu, i = x
         grad, hess = _phi_grad_hess(p, a, q, cw, d, p_max, mu)
         # damped Newton ascent on the concave barrier objective
         hess = hess - 1e-9 * jnp.eye(n)
@@ -122,20 +160,23 @@ def solve_p4(cw: jax.Array, a: jax.Array, q: jax.Array, d: jax.Array,
         norm = jnp.linalg.norm(dlt)
         dlt = dlt * jnp.minimum(1.0, 0.5 * jnp.max(p_max) / (norm + 1e-12))
         p_new = _project_feasible(p + dlt, d, p_max)
-        return p_new, None
+        # two-tier select: a lane applies only the last `budget` steps of
+        # the schedule (all of them when budget == n_run)
+        return jnp.where(i >= n_run - budget, p_new, p), None
 
-    p, _ = jax.lax.scan(step, p0, mus)
+    p, _ = jax.lax.scan(step, p0, (mus, jnp.arange(n_run)))
     # gradient polish: a few projected-ascent steps on the raw objective.
     # The warm path shortens it with the Newton budget (a near-optimal
     # seed needs less sharpening); n_it == iters keeps the cold count,
     # preserving the bit-for-bit full-budget equivalence.
-    n_pol = 10 if n_it == iters else max(2, (10 * n_it) // iters)
+    n_pol = _polish_count(n_run, iters)
 
-    def polish(p, i):
+    def polish(p, j):
         s = 1.0 + jnp.dot(a, p)
         g = cw * a / s - q
         lr = 0.05 * jnp.max(p_max) / (jnp.linalg.norm(g) + 1e-12)
-        return _project_feasible(p + lr * g, d, p_max), None
+        p_new = _project_feasible(p + lr * g, d, p_max)
+        return jnp.where(j >= n_pol - budget_pol, p_new, p), None
 
     p, _ = jax.lax.scan(polish, p, jnp.arange(n_pol))
     val = cw * jnp.log1p(jnp.dot(a, p)) - jnp.dot(q, p)

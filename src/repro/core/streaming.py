@@ -123,14 +123,19 @@ def _zero_carry(sc: ScenarioParams, B: int) -> SchedulerCarry:
 SchedState = Union[FleetState, SchedulerCarry]
 
 
-def validate_stream_config(cfg: StreamConfig) -> None:
+def validate_stream_config(cfg: StreamConfig, *,
+                           threads_params: bool = False) -> None:
     """Reject silently-ignorable flag combinations up front.
 
     The single home of every `round_chunk` rejection: all callers —
     `stream_rounds`, the fused engine's (possibly segmented)
     `fused_rollout` — validate here before any construction happens, so
     a bad combination fails with the same message regardless of the
-    entry point instead of blowing up mid-build."""
+    entry point instead of blowing up mid-build. `threads_params` marks
+    callers that thread model parameters round-to-round (the fused
+    training engine): those cannot honor `round_chunk > 1` because the
+    chunk's rounds are solved in parallel, with no sequential carry for
+    the params to ride."""
     if cfg.fresh_fleet and cfg.handover_delay:
         raise ValueError("handover_delay needs the persistent fleet's "
                          "coverage memory (fresh_fleet=False)")
@@ -141,6 +146,9 @@ def validate_stream_config(cfg: StreamConfig) -> None:
     if C < 1:
         raise ValueError(f"round_chunk={C} must be >= 1")
     if C > 1:
+        if threads_params:
+            raise ValueError("fused_rollout threads params round-to-round "
+                             "and cannot honor round_chunk > 1")
         if not cfg.fresh_fleet:
             raise ValueError("round_chunk > 1 requires fresh_fleet=True")
         if cfg.carry_queues:
@@ -149,6 +157,41 @@ def validate_stream_config(cfg: StreamConfig) -> None:
         if int(cfg.n_rounds) % C:
             raise ValueError(f"n_rounds={int(cfg.n_rounds)} not "
                              f"divisible by round_chunk={C}")
+
+
+# bf16 storage lever (DESIGN.md §12): the FleetState fields that tolerate
+# reduced-precision carry storage. Only the P4 warm-start table
+# qualifies — and it is the field that matters: at [B, N, U, 1+U] it is
+# ~95% of FleetState bytes (U = 10 makes it 110 floats per vehicle vs 5
+# for everything else), and the solver re-projects and polishes from
+# the seed, so quantization perturbs only the warm path's low bits.
+# Every [B, N] world field stays a full-precision master: positions,
+# speeds, jitter and allowances feed hard per-round thresholds
+# (coverage radius, t_cp eligibility, energy budgets), where one bf16
+# ulp measurably flips scheduling decisions — demoting them changes
+# the simulated world, not just numeric noise.
+FLEET_CAST_FIELDS = ("p4_tab",)
+
+
+def cast_sched_state(state: SchedState, dtype) -> SchedState:
+    """Demote the cast-tolerant fields of a persistent `FleetState` to
+    `dtype` for carry storage. A `SchedulerCarry` (fresh mode) passes
+    through untouched — its virtual queues ARE the masters. No-op when
+    `dtype` is None."""
+    if dtype is None or not isinstance(state, FleetState):
+        return state
+    return dataclasses.replace(state, **{
+        f: getattr(state, f).astype(dtype) for f in FLEET_CAST_FIELDS})
+
+
+def promote_sched_state(state: SchedState,
+                        dtype=jnp.float32) -> SchedState:
+    """Inverse of `cast_sched_state`: promote the stored fields back to
+    the compute dtype at round start so every round's math runs fp32."""
+    if not isinstance(state, FleetState):
+        return state
+    return dataclasses.replace(state, **{
+        f: getattr(state, f).astype(dtype) for f in FLEET_CAST_FIELDS})
 
 
 def round_keys(key: jax.Array, cfg: StreamConfig, n_rounds: int,

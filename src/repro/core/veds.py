@@ -145,7 +145,9 @@ def _cot_candidates(w, qs, qu, g_sr, g_or, g_so, eligible,
     def solve_one(cw_m, a, q, d, pm, p0):
         return solve_p4(cw_m, a, q, d, pm, iters=prm.ipm_iters,
                         mu_final=prm.ipm_mu, p_init=p0,
-                        warm_iters=prm.ipm_warm_iters)
+                        warm_iters=prm.ipm_warm_iters,
+                        far_iters=prm.ipm_far_iters,
+                        far_grad_tol=prm.ipm_far_grad_tol)
 
     px = None if p_init is None else 0
     p_all, _ = jax.vmap(jax.vmap(solve_one, in_axes=(None, 0, 0, 0, 0, px)),

@@ -43,7 +43,8 @@ from repro.core.lyapunov import VedsParams
 from repro.core.scenario import FleetState, ScenarioParams
 from repro.core.scheduler import (RolloutCarry, RoundOutputs, Scheduler,
                                   SchedulerCarry)
-from repro.core.streaming import (StreamConfig, sched_round_step,
+from repro.core.streaming import (StreamConfig, cast_sched_state,
+                                  promote_sched_state, sched_round_step,
                                   sched_state0, validate_stream_config)
 from repro.data.synthetic import pad_client_shards
 
@@ -151,6 +152,27 @@ def minibatch_indices(u: jax.Array, n: jax.Array) -> jax.Array:
     return jnp.minimum(idx, jnp.maximum(n[..., None] - 1, 0))
 
 
+def _cast_opt_state(os_, dtype):
+    """Demote an optimizer state's floating leaves (momentum/second-moment
+    accumulators) to `dtype` for carry storage; integer leaves (step
+    counters) pass through. None/None-dtype are no-ops."""
+    if os_ is None or dtype is None:
+        return os_
+    return jax.tree.map(
+        lambda x: x.astype(dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, os_)
+
+
+def _promote_opt_state(os_, dtype=jnp.float32):
+    """Inverse of `_cast_opt_state`: floating leaves back to fp32 so the
+    optimizer update itself always runs full precision."""
+    if os_ is None:
+        return os_
+    return jax.tree.map(
+        lambda x: x.astype(dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, os_)
+
+
 def local_grads(params, loss_fn: Callable, shards: ClientShards,
                 sel: jax.Array, u: jax.Array):
     """Gather each selected client's minibatch from the padded layout and
@@ -190,7 +212,8 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
                   active: Optional[jax.Array] = None,
                   eval_fn: Optional[Callable] = None,
                   eval_mask: Optional[jax.Array] = None,
-                  unroll: int = 1) -> FusedResult:
+                  unroll: int = 1, history_chunk: int = 1,
+                  state_dtype=None) -> FusedResult:
     """One `lax.scan` for a (segment of a) training run: scheduling +
     minibatch gather + local SGD + aggregation per step.
 
@@ -232,17 +255,38 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
                            execution at linear compile cost. Leave at 1
                            for dispatch-bound (small-model) runs and on
                            accelerator backends.
+      history_chunk        memory lever (DESIGN.md §12): with k > 1 the
+                           scan runs as R/k outer steps of k inner
+                           rounds each, writing every k-round history
+                           block into preallocated [R, ...] buffers via
+                           `lax.dynamic_update_slice_in_dim` instead of
+                           letting one monolithic scan stack all R
+                           steps. The buffers thread through the outer
+                           carry, so a jitted whole-run step that
+                           donates its carry updates the history IN
+                           PLACE — chunked output is bit-for-bit equal
+                           to unchunked (same body, same order). R must
+                           divide by k.
+      state_dtype          memory lever (DESIGN.md §12): storage dtype
+                           (e.g. jnp.bfloat16) for the cast-tolerant
+                           carry state between rounds — the persistent
+                           fleet's P4 warm-start table
+                           (`streaming.FLEET_CAST_FIELDS`, ~95% of
+                           FleetState bytes) and the optimizer
+                           accumulators. Params, virtual queues,
+                           batteries, and the [B, N] world fields stay
+                           fp32 masters, and every round's compute runs
+                           fp32 (promote at round start, demote at
+                           round end); results come back promoted.
+                           None = fp32 throughout.
 
     Resumable: feed `FusedResult`'s (fleet-or-carry, params, opt_state)
     back as the next segment's carry with the next slice of keys/sel/mb_u
     — a segmented rollout replays the one-scan program exactly.
     """
-    validate_stream_config(cfg)
-    if int(cfg.round_chunk) > 1:
-        # chunked mode solves rounds in parallel — params cannot thread
-        # through them; refuse rather than silently drop the setting
-        raise ValueError("fused_rollout threads params round-to-round "
-                         "and cannot honor round_chunk > 1")
+    # chunked round_chunk mode solves rounds in parallel — params cannot
+    # thread through them; validate_stream_config owns the rejection
+    validate_stream_config(cfg, threads_params=True)
     R = keys.shape[0]
     if steps is None:
         steps = jnp.arange(R)
@@ -265,15 +309,23 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
 
     def body(c: RolloutCarry, x):
         k, sel_r, u_r, r, a, ev = x
-        st, out = sched_round_step(c.sched, k, sched, sc, mob, ch, prm,
+        # bf16 lever: the carry is STORED demoted; every round's compute
+        # runs on the promoted fp32 view (no-ops when state_dtype=None)
+        st_in = promote_sched_state(c.sched) if state_dtype else c.sched
+        os_in = (_promote_opt_state(c.opt_state) if state_dtype
+                 else c.opt_state)
+        st, out = sched_round_step(st_in, k, sched, sc, mob, ch, prm,
                                    cfg)
         mask = out.success.astype(jnp.float32)               # [B, S]
-        in_axes = (0, None if c.opt_state is None else 0, 0, 0, 0, None)
+        in_axes = (0, None if os_in is None else 0, 0, 0, 0, None)
         new_p, new_os, loss = jax.vmap(train_cell, in_axes=in_axes)(
-            c.params, c.opt_state, sel_r, u_r, mask, r)
-        if c.opt_state is None:
+            c.params, os_in, sel_r, u_r, mask, r)
+        if os_in is None:
             new_os = None
-        new_c = RolloutCarry(sched=st, params=new_p, opt_state=new_os)
+        new_c = RolloutCarry(sched=cast_sched_state(st, state_dtype),
+                             params=new_p,
+                             opt_state=_cast_opt_state(new_os,
+                                                       state_dtype))
         # inactive (padding) rounds are pure no-ops: the whole carry is
         # selected back, so padded segments are bit-for-bit equal to
         # unpadded ones on the rounds that count
@@ -290,9 +342,50 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
             new_c.params)
         return new_c, (out, loss, met)
 
-    end, ys = jax.lax.scan(body, carry,
-                           (keys, sel, mb_u, steps, active, eval_mask),
-                           unroll=min(int(unroll), R))
+    if state_dtype is not None:
+        carry = RolloutCarry(
+            sched=cast_sched_state(carry.sched, state_dtype),
+            params=carry.params,
+            opt_state=_cast_opt_state(carry.opt_state, state_dtype))
+
+    xs = (keys, sel, mb_u, steps, active, eval_mask)
+    K = int(history_chunk)
+    if K <= 1 or K >= R:
+        end, ys = jax.lax.scan(body, carry, xs,
+                               unroll=min(int(unroll), R))
+    else:
+        if R % K:
+            raise ValueError(f"segment length {R} not divisible by "
+                             f"history_chunk={K}")
+        # chunked emission: R/K outer steps, each scanning K rounds and
+        # writing the block into the preallocated [R, ...] buffers. Same
+        # body in the same order -> bit-for-bit equal to the plain scan;
+        # the buffers live in the outer carry, so a donating jit updates
+        # them in place instead of stacking a fresh [R, ...] history.
+        ys_shape = jax.eval_shape(
+            lambda c, x: jax.lax.scan(body, c, x)[1], carry, xs)
+        bufs0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             ys_shape)
+
+        def chunk_body(cb, c0):
+            c, bufs = cb
+            xs_c = jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(x, c0 * K, K, 0),
+                xs)
+            c2, ys_c = jax.lax.scan(body, c, xs_c,
+                                    unroll=min(int(unroll), K))
+            bufs = jax.tree.map(
+                lambda b, y: jax.lax.dynamic_update_slice_in_dim(
+                    b, y, c0 * K, 0), bufs, ys_c)
+            return (c2, bufs), None
+
+        (end, ys), _ = jax.lax.scan(chunk_body, (carry, bufs0),
+                                    jnp.arange(R // K))
+
+    if state_dtype is not None:
+        end = RolloutCarry(sched=promote_sched_state(end.sched),
+                           params=end.params,
+                           opt_state=_promote_opt_state(end.opt_state))
     if eval_fn is None:
         (outs, losses), metric = ys, None
     else:

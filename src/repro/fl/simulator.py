@@ -86,6 +86,12 @@ class FLSimConfig:
     #                              dispatch + one trailing sync). Needs a
     #                              jax-traceable eval_fn; set False to
     #                              keep the segmented host-eval path
+    fused_history_chunk: int = 1  # streaming+fused memory lever: emit the
+    #                              per-round history in chunks of this
+    #                              many rounds into preallocated [R,...]
+    #                              buffers (fused_rollout history_chunk;
+    #                              DESIGN.md §12). Bit-for-bit equal to 1;
+    #                              segment lengths must divide by it
     # (No handoff knob: run_fl trains ONE cell (batch=1), where the §11
     # cross-cell exchange is the identity by construction. Multi-cell
     # handoff rollouts go through stream_rounds / fused_rollout, which
@@ -113,7 +119,8 @@ def _apply(lr: float):
 @functools.lru_cache(maxsize=32)
 def _fused_segment(loss_fn: Callable, sched_name: str, sc, mob, ch, prm,
                    cfg: StreamConfig, lr: float, unroll: int,
-                   eval_fn: Callable | None = None):
+                   eval_fn: Callable | None = None,
+                   history_chunk: int = 1):
     """Jitted fused-rollout segment, cached across `run_fl` calls (the
     per-call jit wrappers would otherwise re-trace every invocation).
     Callers normalize `cfg.n_rounds` to 0 — the segment's length comes
@@ -128,7 +135,8 @@ def _fused_segment(loss_fn: Callable, sched_name: str, sc, mob, ch, prm,
         return fused_rollout(keys, sel, mb_u, sched, sc, mob, ch, prm,
                              cfg, loss_fn, shards, carry, lr=lr,
                              steps=steps, active=active, eval_fn=eval_fn,
-                             eval_mask=ev, unroll=unroll)
+                             eval_mask=ev, unroll=unroll,
+                             history_chunk=history_chunk)
 
     return seg
 
@@ -302,7 +310,7 @@ def _run_fused(key, params, loss_fn, shards: ClientShards,
         seg_fn = _fused_segment(loss_fn, sim.scheduler, sc, mob, ch, prm,
                                 dataclasses.replace(cfg, n_rounds=0),
                                 sim.lr, max(1, sim.fused_unroll),
-                                eval_fn)
+                                eval_fn, max(1, sim.fused_history_chunk))
         ev = jnp.zeros((R,), bool)
         if evals:
             ev = ev.at[jnp.asarray(evals)].set(True)
@@ -324,7 +332,7 @@ def _run_fused(key, params, loss_fn, shards: ClientShards,
 
     seg_fn = _fused_segment(loss_fn, sim.scheduler, sc, mob, ch, prm,
                             dataclasses.replace(cfg, n_rounds=0),
-                            sim.lr, max(1, sim.fused_unroll), None)
+                            sim.lr, max(1, sim.fused_unroll), None, 1)
     cuts = [e + 1 for e in evals]
     # one compiled segment length for the whole run: every segment is
     # padded to the longest with no-op (inactive) tail rounds, so the

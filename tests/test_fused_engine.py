@@ -311,7 +311,7 @@ def _seg_of(sim: FLSimConfig, eval_fn=None):
         VedsParams(alpha=sim.alpha, V=sim.V, Q=sim.q_bits, slot=0.1,
                    ipm_warm_iters=sim.ipm_warm_iters),
         dataclasses.replace(_stream_cfg(sim), n_rounds=0), sim.lr, 1,
-        eval_fn)
+        eval_fn, max(1, sim.fused_history_chunk))
 
 
 def test_fused_run_fl_eval_in_scan_is_one_dispatch(fl_setup, monkeypatch):

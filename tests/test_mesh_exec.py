@@ -1,0 +1,227 @@
+"""Mesh-native fused execution (`repro.sharding.mesh_exec`,
+DESIGN.md §12).
+
+Two lanes share this file:
+
+* single-device tests (always run): the memory levers — chunked history
+  emission, bf16 scheduler state, donated-carry no-retrace — and the
+  up-front validation errors. These exercise `mesh_fused_rollout` on a
+  1-device mesh, where the mesh machinery is a no-op placement and the
+  contracts (bit-for-bit chunking, mask-preserving bf16) must hold
+  exactly.
+* 8-device tests (CI mesh lane): sharded-vs-single parity for the fused
+  rollout and the handoff stream. These need
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` set BEFORE jax
+  imports (the CI lane does; a plain local run skips them).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import mark_slow_unless
+from repro.channel.mobility import ManhattanParams
+from repro.channel.v2x import ChannelParams
+from repro.core.baselines import SCHEDULERS, get_scheduler
+from repro.core.lyapunov import VedsParams
+from repro.core.scenario import ScenarioParams
+from repro.core.streaming import StreamConfig, round_keys
+from repro.fl.engine import ClientShards, init_carry
+from repro.sharding.mesh_exec import (_fused_exec, check_batch_divisible,
+                                      fleet_mesh, mesh_fused_rollout,
+                                      mesh_stream_rounds, place_batch,
+                                      place_carry, place_shards)
+
+needs_8_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices (CI mesh lane sets XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8 before jax imports)")
+
+MOB = ManhattanParams(v_max=10.0)
+CH = ChannelParams()
+PRM = VedsParams(alpha=2.0, V=0.2, Q=1e7, slot=0.1)
+SC = ScenarioParams(n_sov=4, n_opv=3, n_slots=10)
+KEY = jax.random.key(0)
+N_CLIENTS, DIM, CLASSES, BS = 8, 6, 3, 4
+R, B, S = 4, 8, SC.n_sov
+
+
+def _loss_fn(p, b):
+    logits = b["x"] @ p["w"]
+    return -jnp.mean(jax.nn.log_softmax(logits)[
+        jnp.arange(b["y"].shape[0]), b["y"]])
+
+
+def _make_problem():
+    ks = jax.random.split(jax.random.key(1), N_CLIENTS + 1)
+    protos = jax.random.normal(ks[-1], (CLASSES, DIM))
+    data = []
+    for i in range(N_CLIENTS):
+        n = 5 + 3 * (i % 3)
+        y = jax.random.randint(ks[i], (n,), 0, CLASSES)
+        x = protos[y] + 0.5 * jax.random.normal(
+            jax.random.fold_in(ks[i], 1), (n, DIM))
+        data.append({"x": x, "y": y})
+    return {"w": jnp.zeros((DIM, CLASSES))}, ClientShards.from_ragged(data)
+
+
+PARAMS, SHARDS = _make_problem()
+CFG = StreamConfig(n_rounds=R, batch=B, fresh_fleet=False,
+                   carry_queues=True, handoff=True)
+SEL = jax.random.randint(jax.random.key(2), (R, B, S), 0, N_CLIENTS)
+MB_U = jax.random.uniform(jax.random.key(3), (R, B, S, BS))
+KEYS = round_keys(KEY, CFG, R)
+
+
+def _run(n_devices, name="madca", **kw):
+    mesh = fleet_mesh(n_devices)
+    carry = init_carry(KEY, SC, MOB, CFG, PARAMS, ch=CH)
+    return mesh_fused_rollout(mesh, KEYS, SEL, MB_U, get_scheduler(name),
+                              SC, MOB, CH, PRM, CFG, _loss_fn, SHARDS,
+                              carry, lr=0.1, **kw)
+
+
+# ---- single-device lane: memory levers and validation -------------------
+
+def test_history_chunk_is_bit_for_bit():
+    """Chunked emission (outer scan over R/K chunks writing into
+    preallocated history buffers) is the SAME computation in a different
+    loop nest — every output must match the unchunked run exactly."""
+    ref = _run(1)
+    for k in (2, 4):
+        chk = _run(1, history_chunk=k)
+        np.testing.assert_array_equal(np.asarray(ref.outputs.success),
+                                      np.asarray(chk.outputs.success))
+        np.testing.assert_array_equal(np.asarray(ref.loss),
+                                      np.asarray(chk.loss))
+        np.testing.assert_array_equal(np.asarray(ref.params["w"]),
+                                      np.asarray(chk.params["w"]))
+
+
+def test_history_chunk_must_divide_rounds():
+    with pytest.raises(ValueError, match="not divisible"):
+        _run(1, history_chunk=3)        # R=4
+
+
+@pytest.mark.parametrize("name,b", mark_slow_unless(
+    [("madca", B), ("veds", 1), ("veds", 3)], quick=[("madca", B)]))
+def test_bf16_state_preserves_success_masks(name, b):
+    """The bf16 lever casts only `FLEET_CAST_FIELDS` (p4_tab) and the
+    optimizer accumulators — nothing that feeds a coverage/eligibility
+    threshold — so the scheduling decisions must be bit-for-bit, and the
+    returned state must be promoted back to fp32."""
+    prm = (VedsParams(alpha=2.0, V=0.2, Q=1e7, slot=0.1,
+                      ipm_warm_iters=6) if name == "veds" else PRM)
+    cfg = StreamConfig(n_rounds=3, batch=b, fresh_fleet=False,
+                       carry_queues=True)
+    keys = round_keys(KEY, cfg, 3)
+    sel = jax.random.randint(jax.random.key(2), (3, b, S), 0, N_CLIENTS)
+    mb_u = jax.random.uniform(jax.random.key(3), (3, b, S, BS))
+    mesh = fleet_mesh(1)
+
+    def run(dt):
+        carry = init_carry(KEY, SC, MOB, cfg, PARAMS, ch=CH)
+        return mesh_fused_rollout(mesh, keys, sel, mb_u,
+                                  get_scheduler(name), SC, MOB, CH, prm,
+                                  cfg, _loss_fn, SHARDS, carry, lr=0.1,
+                                  state_dtype=dt)
+
+    f32, b16 = run(None), run(jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(f32.outputs.success),
+                                  np.asarray(b16.outputs.success))
+    assert b16.fleet.pos.dtype == jnp.float32
+    assert b16.fleet.p4_tab.dtype == jnp.float32   # promoted at exit
+
+
+def test_donated_step_does_not_retrace():
+    """Donation contract: repeated calls with freshly-placed carries on
+    the same mesh hit the SAME executable — the compile cache must not
+    grow (a growth here means donation forces per-call relayout)."""
+    step = _fused_exec(get_scheduler("madca"), SC, MOB, CH, PRM, CFG,
+                       _loss_fn, 0.1, 5.0, None, 1, 1, None, None, True)
+    mesh = fleet_mesh(1)
+    sel = place_batch(mesh, SEL)
+    mb_u = place_batch(mesh, MB_U)
+    shards = place_shards(mesh, SHARDS)
+
+    def call():
+        carry = place_carry(mesh, init_carry(KEY, SC, MOB, CFG, PARAMS,
+                                             ch=CH))
+        res = step(carry, KEYS, sel, mb_u, shards, jnp.arange(R),
+                   jnp.ones((R,), bool), jnp.zeros((R,), bool))
+        jax.block_until_ready(res.params)
+
+    call()                              # one entry for this placement
+    n0 = step._cache_size()
+    call()
+    call()
+    assert step._cache_size() == n0
+
+
+def test_uneven_batch_is_rejected_up_front():
+    if len(jax.devices()) < 2:
+        mesh = fleet_mesh(1)
+        check_batch_divisible(mesh, B)  # always fine on one device
+        return
+    mesh = fleet_mesh(2)
+    with pytest.raises(ValueError, match="shard evenly"):
+        check_batch_divisible(mesh, 3)
+
+
+def test_round_chunk_rejected_on_mesh_path():
+    """The fused engine threads params round-to-round; `round_chunk > 1`
+    is a stream_rounds-only knob and must be refused before any
+    placement work happens."""
+    cfg = StreamConfig(n_rounds=R, batch=B, round_chunk=2)
+    with pytest.raises(ValueError, match="round_chunk"):
+        mesh_fused_rollout(fleet_mesh(1), KEYS, SEL, MB_U,
+                           get_scheduler("madca"), SC, MOB, CH, PRM, cfg,
+                           _loss_fn, SHARDS,
+                           init_carry(KEY, SC, MOB, cfg, PARAMS, ch=CH))
+
+
+# ---- 8-device lane: sharded-vs-single parity ----------------------------
+
+@needs_8_devices
+@pytest.mark.parametrize("name", mark_slow_unless(
+    sorted(SCHEDULERS), quick=["madca"]))
+def test_fused_parity_1_vs_8_devices(name):
+    """The tentpole contract: committing the carry/xs/shards to an
+    8-device mesh changes the PLACEMENT, not the program — success masks
+    bit-for-bit, floats to fp32 reduction tolerance."""
+    ref = _run(1, name)
+    r8 = _run(8, name)
+    np.testing.assert_array_equal(np.asarray(ref.outputs.success),
+                                  np.asarray(r8.outputs.success))
+    np.testing.assert_allclose(np.asarray(ref.params["w"]),
+                               np.asarray(r8.params["w"]),
+                               rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ref.loss), np.asarray(r8.loss),
+                               rtol=2e-5, atol=1e-6)
+
+
+@needs_8_devices
+def test_stream_handoff_parity_1_vs_8_devices():
+    """Scheduling-only stream with handoff on: the §11 cross-cell
+    exchange lowers to an all-to-all when the cell axis is sharded, and
+    must land every vehicle in the same cell as the 1-device run."""
+    sched = get_scheduler("madca")
+    s1 = mesh_stream_rounds(fleet_mesh(1), KEY, sched, SC, MOB, CH, PRM,
+                            CFG)
+    s8 = mesh_stream_rounds(fleet_mesh(8), KEY, sched, SC, MOB, CH, PRM,
+                            CFG)
+    np.testing.assert_array_equal(np.asarray(s1.outputs.success),
+                                  np.asarray(s8.outputs.success))
+    np.testing.assert_allclose(np.asarray(s1.fleet.pos),
+                               np.asarray(s8.fleet.pos),
+                               rtol=2e-5, atol=1e-6)
+
+
+@needs_8_devices
+def test_fused_bf16_parity_on_8_devices():
+    """The levers compose: bf16 state on the sharded mesh keeps the
+    1-device fp32 masks."""
+    ref = _run(1)
+    b16 = _run(8, state_dtype=jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(ref.outputs.success),
+                                  np.asarray(b16.outputs.success))

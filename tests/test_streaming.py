@@ -399,6 +399,23 @@ def test_round_chunk_validation_is_centralized():
             validate_stream_config(cfg)
 
 
+def test_round_chunk_rejected_when_params_thread():
+    """Satellite: the fused engine threads model params round-to-round,
+    so even a cfg that is perfectly chunkable for scheduling-only
+    streaming (fresh fleet, no queue carry) must be refused under
+    `threads_params=True` — and accepted without it."""
+    from repro.core.streaming import validate_stream_config
+
+    cfg = StreamConfig(n_rounds=4, batch=1, fresh_fleet=True,
+                       round_chunk=2)
+    validate_stream_config(cfg)                     # stream path: fine
+    with pytest.raises(ValueError, match="threads params"):
+        validate_stream_config(cfg, threads_params=True)
+    # chunk 1 threads params trivially — always accepted
+    validate_stream_config(StreamConfig(n_rounds=4, batch=1),
+                           threads_params=True)
+
+
 # ---- warm-started interior point (persistent VEDS+COT) -----------------
 
 WARM_SC = ScenarioParams(n_sov=3, n_opv=2, n_slots=8)
