@@ -36,6 +36,12 @@ exchange running every scan step, vs the same rollout with handoff
 disabled — the exchange's cost inside the one-dispatch program, plus
 the fraction of vehicles that actually changed cells.
 
+`serve_sweep` carries the scheduling-as-a-service story (DESIGN.md §13):
+a `BatchServer` packing concurrent clients' rollout requests into the
+`[B]` cell axis of one compiled fused program under saturating
+closed-loop load, at two batching windows, vs sequential B=1 dispatch —
+aggregate rounds/s, p50/p99 request latency, and batch occupancy.
+
 `--smoke` runs every sweep at tiny shapes and emits one JSON line — the
 CI quick lane uses it to catch perf-path regressions (imports, shapes,
 jit contracts) without paying benchmark-scale runtimes.
@@ -346,6 +352,33 @@ def fused_sweep(R: int = 50, *, n_sov: int = 4, n_opv: int = 3,
              t_host / t_fused)]
 
 
+def serve_sweep(windows=(0.0, 0.002), *, B: int = 8, clients: int = 8,
+                requests: int = 4, rounds: int = 4):
+    """Scheduling-as-a-service continuous batching (DESIGN.md §13): a
+    `BatchServer` packing concurrent clients' requests into the `[B]`
+    cell axis of one compiled fused program, under saturating
+    closed-loop load, at each batching window — vs sequential B=1
+    dispatch of the same requests. Returns rows
+    (name, window_s, rounds_per_s, p50_ms, p99_ms, occupancy, speedup);
+    the trailing row is the shared sequential baseline."""
+    from repro.launch.serve import ServeConfig, drive
+    rows = []
+    seq = None
+    for i, w in enumerate(windows):
+        cfg = ServeConfig(batch=B, max_rounds=rounds, window_s=w)
+        out = drive(cfg, n_clients=clients, n_requests=requests,
+                    baseline=(i == 0), seed=0)
+        if i == 0:
+            seq = out["sequential"]
+        b = out["batched"]
+        rows.append(("serve", w, b["rounds_per_s"], b["p50_ms"],
+                     b["p99_ms"], b["mean_occupancy"],
+                     b["rounds_per_s"] / seq["rounds_per_s"]))
+    rows.append(("serve_seq", 0.0, seq["rounds_per_s"], seq["p50_ms"],
+                 seq["p99_ms"], 1.0, 1.0))
+    return rows
+
+
 def main(csv=True, smoke=False):
     if smoke:
         rows = []
@@ -370,6 +403,8 @@ def main(csv=True, smoke=False):
                                n_opv=3, n_slots=8, n_fleet=8)
         mrows = mesh_sweep(R=4, B=8, n_sov=3, n_opv=2, n_slots=6)
         n_disp = eval_dispatch_count(R=4)
+        verows = serve_sweep(windows=(0.0, 0.001), B=4, clients=6,
+                             requests=2, rounds=2)
     else:
         rows, us = run()
         brows = b_sweep()
@@ -380,6 +415,7 @@ def main(csv=True, smoke=False):
         wrows = warm_ipm_sweep()
         mrows = mesh_sweep()
         n_disp = eval_dispatch_count()
+        verows = serve_sweep()
     veds5 = [r[2] for r in rows if r[1] == "veds"][0] if smoke else \
         [r[2] for r in rows if r[1] == "veds" and r[0] == 5.0][0]
     opt5 = [r[2] for r in rows if r[1] == "optimal"][0] if smoke else \
@@ -392,6 +428,8 @@ def main(csv=True, smoke=False):
     hand_ratio, hand_migrated = hrows[0][4], hrows[0][5]
     warm_speedup, warm_rps, cold_rps = wrows[0][5], wrows[0][4], wrows[0][3]
     mesh_by_n = {r[1]: r for r in mrows}
+    serve_rows = [r for r in verows if r[0] == "serve"]
+    serve_seq = next(r for r in verows if r[0] == "serve_seq")
     if smoke:
         out = {"bench": "fig4_speed_smoke", "us_per_round": us,
                "veds_frac_of_optimal": frac, "b_speedup": b64,
@@ -401,6 +439,17 @@ def main(csv=True, smoke=False):
                "warm_ipm_speedup": warm_speedup,
                "warm_vs_cold": warm_rps / cold_rps,
                "run_fl_eval_dispatches": n_disp}
+        # serve rows: aggregate rounds/s at each batching window, tail
+        # latency and occupancy at the widest window, and the shared
+        # sequential B=1 baseline
+        for i, r in enumerate(serve_rows):
+            out[f"serve_rps_w{i}"] = r[2]
+        wide = serve_rows[-1]
+        out["serve_p50_ms"] = wide[3]
+        out["serve_p99_ms"] = wide[4]
+        out["serve_occupancy"] = wide[5]
+        out["serve_seq_rps"] = serve_seq[2]
+        out["serve_speedup"] = wide[6]
         # mesh fields exist per available device count (the CI mesh lane
         # fakes 8 CPU devices; a plain host only emits the 1-device row)
         for n, row in sorted(mesh_by_n.items()):
@@ -413,6 +462,8 @@ def main(csv=True, smoke=False):
         assert 0.0 <= hand_migrated <= 1.0, out
         assert n_disp == 1, out
         assert mrows and all(r[3] > 0 for r in mrows), mrows
+        assert all(r[2] > 0 for r in verows), verows
+        assert 0.0 < wide[5] <= 4.0, verows    # occupancy in (0, B]
         if 1 in mesh_by_n and 8 in mesh_by_n:
             # 8 fake CPU devices share the host's cores, so sharding
             # buys no throughput here (measured ~0.1-0.2x) — the lever
@@ -428,7 +479,8 @@ def main(csv=True, smoke=False):
               f"handoff_ratio={hand_ratio:.2f},"
               f"handoff_migrated={hand_migrated:.2f},"
               f"warm_ipm_speedup={warm_speedup:.1f},"
-              f"run_fl_eval_dispatches={n_disp}")
+              f"run_fl_eval_dispatches={n_disp},"
+              f"serve_speedup={serve_rows[-1][6]:.1f}")
     for v, name, s in rows:
         print(f"#  v={v:5.1f}  {name:10s} n_success={s:.2f}")
     for name, B, rps_loop, rps_batch, speedup in brows:
@@ -452,6 +504,10 @@ def main(csv=True, smoke=False):
     for name, n, Rm, rps, peak in mrows:
         print(f"#  dev={n}  R={Rm:3d}  {name:12s} {rps:9.1f} rounds/s  "
               f"peak={peak / 1e6:8.1f} MB")
+    for name, w, rps, p50, p99, occ, speedup in verows:
+        print(f"#  window={1e3 * w:4.1f}ms  {name:10s} {rps:9.1f} rounds/s"
+              f"  p50={p50:6.1f}ms  p99={p99:6.1f}ms  occ={occ:4.1f}  "
+              f"speedup={speedup:4.1f}x")
     return frac
 
 

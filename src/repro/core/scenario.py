@@ -448,9 +448,19 @@ def fleet_round(key: jax.Array, fleet: FleetState, sc: ScenarioParams,
 
     With `handoff`, vehicles parked by `exchange_fleet`'s capacity
     policy (`cell_id == -1`) are ineligible for role selection; the
-    caller is expected to have run `exchange_fleet` first."""
+    caller is expected to have run `exchange_fleet` first.
+
+    `key` may be one key (split into B per-cell keys, the rollout
+    default) or a `[B]` batch of per-cell keys — the serving layer packs
+    independent sessions into the cell axis, each bringing its own round
+    key. A batched cell b consumes `split(key[b], 1)[0]`, exactly what
+    the scalar path hands cell 0 at B = 1, so a packed cell is
+    bit-for-bit the same request run alone (DESIGN.md §13)."""
     B = fleet.batch_size
-    keys = jax.random.split(key, B)
+    if key.ndim == 0:
+        keys = jax.random.split(key, B)
+    else:
+        keys = jax.vmap(lambda k: jax.random.split(k, 1)[0])(key)
     active = (fleet.cell_id >= 0 if handoff
               else jnp.ones(fleet.covered.shape, bool))
     st, rnd, sov_idx, opv_idx, cov0 = jax.vmap(

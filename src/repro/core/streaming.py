@@ -238,6 +238,29 @@ def sched_state0(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
     return fleet
 
 
+def pack_cells(states) -> SchedState:
+    """Concatenate per-session B=1 scheduling states (or any pytree with
+    a leading cell axis — `RolloutCarry`, `FleetState`, `SchedulerCarry`)
+    into one packed state along the `[B]` cell axis.
+
+    The serving layer (DESIGN.md §13) keeps every client session as a
+    B=1 state and gathers the scheduled batch's sessions into the packed
+    program's cell axis per dispatch; `unpack_cell` slices each
+    session's refreshed state back out on response. Cells of a packed
+    persistent rollout never interact (no handoff in packed mode), so
+    pack -> rollout -> unpack is bit-for-bit the solo B=1 rollout."""
+    states = list(states)
+    if len(states) == 1:
+        return states[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *states)
+
+
+def unpack_cell(state, b: int):
+    """Slice cell `b` back out of a packed state as a B=1 state — the
+    inverse of `pack_cells` for one session."""
+    return jax.tree.map(lambda x: x[b:b + 1], state)
+
+
 def warm_p4(sched: Scheduler, prm: VedsParams) -> bool:
     """Whether this rollout threads the P4 warm-start table: VEDS with
     cooperation enabled (the only scheduler that solves P4) and a
@@ -259,8 +282,17 @@ def sched_round_step(state: SchedState, k: jax.Array, sched: Scheduler,
     warm-start table (`FleetState.p4_tab`) is gathered for this round's
     SOV slots, threaded through the scheduler (`SchedulerCarry.p4`), and
     the refreshed table scattered back under the same freeze rule as the
-    virtual queue — only slots that actually played update."""
+    virtual queue — only slots that actually played update.
+
+    `k` may be one key per round (the rollout default) or a `[B]` batch
+    of per-cell keys (the serving layer's packed sessions, DESIGN.md
+    §13) — per-cell keys need the persistent fleet's per-cell RNG split
+    (`fleet_round`), so fresh-fleet mode rejects them."""
     if cfg.fresh_fleet:
+        if k.ndim != 0:
+            raise ValueError("per-cell keys [B] need a persistent fleet "
+                             "(fresh_fleet draws the whole batch from "
+                             "one round key)")
         rnd = make_round_batch(k, sc, mob, ch, prm, int(cfg.batch),
                                hetero_fleet=cfg.hetero_fleet)
         out = sched.solve_round(rnd, prm, ch,

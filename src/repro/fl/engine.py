@@ -217,14 +217,22 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
     """One `lax.scan` for a (segment of a) training run: scheduling +
     minibatch gather + local SGD + aggregation per step.
 
-      keys  [R]            per-round scheduling keys (`round_keys`)
+      keys  [R] | [R, B]   per-round scheduling keys (`round_keys`). The
+                           [R, B] layout gives every cell its own key
+                           per round — the serving layer (DESIGN.md §13)
+                           packs independent client sessions into the
+                           cell axis, each bringing its own key
+                           schedule, and a packed cell reproduces the
+                           same request run alone at B = 1 bit-for-bit.
+                           Persistent fleets only (`sched_round_step`
+                           rejects per-cell keys in fresh-fleet mode).
       sel   [R, B, S]      client id of each cell's SOV slot per round
       mb_u  [R, B, S, bs]  uniform minibatch draws
       carry                `init_carry(...)` or a previous segment's
                            (sched=fleet-or-queues, params, opt_state)
       steps [R]            absolute round indices (optimizer schedules);
                            defaults to arange(R)
-      active [R] bool      no-op mask: an inactive round's scan step
+      active [R] | [R, B]  no-op mask: an inactive round's scan step
                            computes and then discards everything — the
                            carry (scheduling state, params, optimizer
                            state) passes through untouched, bit-for-bit.
@@ -232,9 +240,18 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
                            common length with inactive tail rounds, so a
                            whole run compiles a single segment shape
                            instead of up to three (1 / eval_every /
-                           remainder). Defaults to all-active; outputs
-                           and losses of inactive rounds are garbage and
-                           must be ignored by the caller.
+                           remainder). The [R, B] layout deactivates
+                           per CELL and per round: the serving layer
+                           packs requests of ragged round counts (cell b
+                           active for its own R_b rounds, padding slots
+                           all-inactive), and an inactive cell's carry
+                           passes through untouched while its neighbors
+                           train. Incompatible with `cfg.handoff` (the
+                           exchange moves vehicles between cells, which
+                           a per-cell no-op mask cannot revert).
+                           Defaults to all-active; outputs and losses of
+                           inactive rounds are garbage and must be
+                           ignored by the caller.
       eval_fn              traceable per-cell eval `params -> scalar`.
                            Runs INSIDE the scan as a `lax.cond` branch
                            on the rounds flagged by `eval_mask`
@@ -292,6 +309,11 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
         steps = jnp.arange(R)
     if active is None:
         active = jnp.ones((R,), bool)
+    if active.ndim == 2 and cfg.handoff:
+        raise ValueError("per-cell active masks [R, B] cannot compose "
+                         "with handoff: the cross-cell exchange moves "
+                         "vehicles between cells, which an inactive "
+                         "cell's carry pass-through cannot revert")
     if eval_mask is None:
         eval_mask = jnp.zeros((R,), bool)
 
@@ -326,20 +348,29 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
                              params=new_p,
                              opt_state=_cast_opt_state(new_os,
                                                        state_dtype))
+
         # inactive (padding) rounds are pure no-ops: the whole carry is
         # selected back, so padded segments are bit-for-bit equal to
-        # unpadded ones on the rounds that count
-        new_c = jax.tree.map(lambda n, o: jnp.where(a, n, o), new_c, c)
+        # unpadded ones on the rounds that count. With a per-cell mask
+        # (`a` is [B]) the select broadcasts against each leaf's leading
+        # cell axis, so only the inactive CELLS pass through.
+        def keep(n, o):
+            return jnp.where(
+                a.reshape(a.shape + (1,) * (n.ndim - a.ndim)), n, o)
+
+        new_c = jax.tree.map(keep, new_c, c)
         if eval_fn is None:
             return new_c, (out, loss)
         # eval as a scanned branch: `cond` skips the eval computation
         # entirely on non-eval rounds — no per-segment host round-trip
         met = jax.lax.cond(
-            ev & a,
+            ev & (a if a.ndim == 0 else a.any()),
             lambda p: jax.vmap(
                 lambda q: jnp.asarray(eval_fn(q), jnp.float32))(p),
             lambda p: jnp.full((B,), jnp.nan, jnp.float32),
             new_c.params)
+        if a.ndim:
+            met = jnp.where(a, met, jnp.nan)
         return new_c, (out, loss, met)
 
     if state_dtype is not None:
@@ -392,9 +423,16 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
         outs, losses, metric = ys
     fleet = None if cfg.fresh_fleet else end.sched
     # `.carry` reports the last ACTIVE round's queues — with a padded
-    # segment the trailing scan steps are no-ops whose outputs are junk
-    last = jnp.max(jnp.where(active, jnp.arange(R), -1))
+    # segment the trailing scan steps are no-ops whose outputs are junk.
+    # Per-cell active masks report per-cell last-active rounds (an
+    # all-inactive padding cell gathers junk its caller never reads).
+    if active.ndim == 2:
+        last = jnp.max(jnp.where(active, jnp.arange(R)[:, None], -1), 0)
+        carry_out = jax.tree.map(
+            lambda x: x[last, jnp.arange(B)], outs.carry)
+    else:
+        last = jnp.max(jnp.where(active, jnp.arange(R), -1))
+        carry_out = jax.tree.map(lambda x: x[last], outs.carry)
     return FusedResult(params=end.params, opt_state=end.opt_state,
                        outputs=outs, loss=losses, fleet=fleet,
-                       carry=jax.tree.map(lambda x: x[last], outs.carry),
-                       metric=metric)
+                       carry=carry_out, metric=metric)

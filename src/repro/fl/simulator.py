@@ -330,15 +330,20 @@ def _run_fused(key, params, loss_fn, shards: ClientShards,
                 history["metric"].append(float(met[r]))
         return history
 
+    K = max(1, sim.fused_history_chunk)
     seg_fn = _fused_segment(loss_fn, sim.scheduler, sc, mob, ch, prm,
                             dataclasses.replace(cfg, n_rounds=0),
-                            sim.lr, max(1, sim.fused_unroll), None, 1)
+                            sim.lr, max(1, sim.fused_unroll), None, K)
     cuts = [e + 1 for e in evals]
     # one compiled segment length for the whole run: every segment is
     # padded to the longest with no-op (inactive) tail rounds, so the
     # run compiles ONE program instead of up to three (the 1-round
-    # r=0-eval segment, the eval_every middle, and the remainder)
+    # r=0-eval segment, the eval_every middle, and the remainder).
+    # Chunked history emission (`fused_history_chunk`) needs the padded
+    # length to divide by the chunk — extend the no-op tail to the next
+    # multiple, which the active mask makes bit-for-bit free.
     L = max(cut - r0 for r0, cut in zip([0] + cuts[:-1], cuts))
+    L = -(-L // K) * K
 
     def padded(x, r0, n):
         s = x[r0:r0 + n]

@@ -1,98 +1,625 @@
-"""Batched serving driver: prefill a prompt batch, then decode N tokens.
+"""Scheduling-as-a-service: continuous batching of per-cell rollout
+requests under live traffic (DESIGN.md §13).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch zamba2-2.7b \
-      --batch 4 --prompt-len 64 --gen 32
+The paper's VEDS algorithm is an *online* scheduler: each round the edge
+must answer "which vehicles upload, with what cooperation and power"
+against the current fleet state, under latency pressure. This module
+serves that question. Many concurrent clients submit per-cell
+scheduling/rollout requests (`ServeRequest`: a session id, a round
+count, a seed); a `BatchServer` packs the requests that arrive within a
+configurable batching window into the `[B]` cell axis of ONE compiled
+fused program (`repro.fl.engine.fused_rollout` via the simulator's
+lru-cached jitted segment) and slices each client's results back out.
+
+Exactness contract: a packed cell is bit-for-bit the same request run
+alone at B = 1. Three pieces make that hold (pinned in
+`tests/test_serve.py`):
+
+  per-cell keys      the packed program's `keys [L, B]` gives every cell
+                     its own request's round-key column; `fleet_round`
+                     consumes batched keys exactly as the scalar B = 1
+                     path does (`split(k, 1)[0]` per cell).
+  per-cell active    requests of ragged round counts pack at the common
+                     compiled horizon L = `ServeConfig.max_rounds`:
+                     `active [L, B]` keeps cell b live for its own R_b
+                     rounds; inactive (and padding) cells compute and
+                     discard, their carry passing through untouched.
+  session cache      each session's state — persistent fleet with the
+                     PR-5 P4 warm-start table (`FleetState.p4_tab`),
+                     model params, optimizer state — lives server-side
+                     as a B=1 `RolloutCarry`, gathered into the packed
+                     batch (`pack_cells`) and scattered back on response
+                     (`unpack_cell`): the per-client KV-cache analogue.
+                     Repeat clients therefore ride the warm-IPM path
+                     (~2.5x rounds/s for VEDS+COT) across requests.
+
+Observability: `ServeMetrics` decomposes every request into queue-wait /
+compute / total latency and tracks batch occupancy; `summary()` reports
+p50/p99 latency, aggregate rounds/s, and mean occupancy. `poisson_load`
+(open-loop arrivals) and `closed_loop_load` (saturating: one request in
+flight per client) drive the fig4 `serve_sweep`.
+
+  PYTHONPATH=src python -m repro.launch.serve --clients 8 --batch 8
 """
 from __future__ import annotations
 
 import argparse
-import os
+import asyncio
+import concurrent.futures
+import dataclasses
+import functools
+import json
 import sys
 import time
+import zlib
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.channel.mobility import ManhattanParams
+from repro.channel.v2x import ChannelParams
+from repro.core.lyapunov import VedsParams
+from repro.core.scenario import ScenarioParams
+from repro.core.scheduler import RolloutCarry
+from repro.core.streaming import StreamConfig, pack_cells, unpack_cell
+from repro.fl.engine import ClientShards, init_carry
+# the simulator's lru-cached jitted fused segment IS the server's
+# compiled program: sharing it means a service and a run_fl call with
+# matching shapes share one executable
+from repro.fl.simulator import _fused_segment
 
 
-def build_cross_cache(cfg, params, cache, src, tp):
-    """Populate cross-attention K/V cache slots from the source memory."""
-    import jax
-    import jax.numpy as jnp
-    from repro.models import engine
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Static service configuration (fixes the ONE compiled shape).
 
-    mem = engine.source_memory(params, cfg, src, tp)
-    new_cache = list(cache)
-    for i, kind in enumerate(cfg.pattern):
-        if kind != "cross":
-            continue
-        bp = params["blocks"][i]
+      batch        B: packed cell slots per dispatch
+      max_rounds   L: compiled round horizon; requests with fewer rounds
+                   pad with inactive tail rounds, more are rejected
+      window_s     batching window: after the first request of a batch
+                   arrives, how long the server waits for more
+    """
+    batch: int = 4
+    max_rounds: int = 4
+    window_s: float = 0.002
+    scheduler: str = "madca"
+    n_sov: int = 4
+    n_opv: int = 3
+    n_slots: int = 10
+    batch_size: int = 8          # minibatch size per selected client
+    n_clients: int = 10          # default service-wide dataset size
+    n_fleet: Optional[int] = None
+    carry_queues: bool = True
+    ipm_warm_iters: int = 0      # VEDS+COT: warm P4 budget per candidate
+    ipm_iters: Optional[int] = None
+    lr: float = 0.05
+    alpha: float = 2.0
+    V: float = 0.2
+    q_bits: float = 1e7
+    seed: int = 0
 
-        def kv(bp_l):
-            k = jnp.einsum("bsd,dhk->bshk", mem, bp_l["wk"].astype(mem.dtype))
-            v = jnp.einsum("bsd,dhk->bshk", mem, bp_l["wv"].astype(mem.dtype))
-            return k, v
 
-        ks, vs = jax.vmap(kv)(bp)
-        new_cache[i] = {"k": ks.astype(cache[i]["k"].dtype),
-                        "v": vs.astype(cache[i]["v"].dtype)}
-    return list(new_cache)
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One client request: roll `n_rounds` scheduling+training rounds of
+    the session's cell forward, with RNG derived from `seed`."""
+    session: str
+    n_rounds: int
+    seed: int = 0
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="zamba2-2.7b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--devices", type=int, default=1)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+@dataclasses.dataclass
+class ServeResponse:
+    """Per-request results sliced out of the packed dispatch, plus the
+    request's latency decomposition (filled by `BatchServer`)."""
+    session: str
+    n_rounds: int
+    success: np.ndarray          # [R, S] bool upload-success masks
+    n_success: np.ndarray        # [R]
+    loss: np.ndarray             # [R] weighted mean local training loss
+    queue_wait_s: float = 0.0
+    compute_s: float = 0.0
+    total_s: float = 0.0
 
-    os.environ.setdefault(
-        "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
-    import jax
-    import jax.numpy as jnp
-    from repro.configs.registry import get_smoke_config
-    from repro.models import engine
-    from repro.models.module import materialize
-    from repro.sharding.policy import attention_tp_mode
 
-    mesh = jax.make_mesh((1, args.devices), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    cfg = get_smoke_config(args.arch)
-    tp = attention_tp_mode(cfg.num_heads, args.devices)
-    key = jax.random.key(args.seed)
-    params = materialize(key, engine.model_decl(cfg, tp))
+@functools.lru_cache(maxsize=8)
+def default_problem(n_clients: int = 10, dim: int = 8, classes: int = 3,
+                    seed: int = 42):
+    """Tiny linear-softmax FL problem the service trains by default (the
+    serving benchmarks' workload); cached so every service built from the
+    same shape shares one `loss_fn` identity — and therefore one
+    compiled-segment cache entry per (B, L) shape."""
+    key = jax.random.key(seed)
+    ks = jax.random.split(key, n_clients + 1)
+    protos = jax.random.normal(ks[-1], (classes, dim))
+    data = []
+    for i in range(n_clients):
+        n = 24 + 4 * (i % 3)
+        y = jax.random.randint(ks[i], (n,), 0, classes)
+        x = protos[y] + 0.5 * jax.random.normal(
+            jax.random.fold_in(ks[i], 1), (n, dim))
+        data.append({"x": x, "y": y})
+    params = {"w": jnp.zeros((dim, classes))}
 
-    B, P, G = args.batch, args.prompt_len, args.gen
-    S = P + G
-    prompts = jax.random.randint(jax.random.fold_in(key, 1), (B, P), 0,
-                                 cfg.vocab_size)
-    src = None
-    if cfg.family in ("vlm", "audio"):
-        src = 0.1 * jax.random.normal(
-            jax.random.fold_in(key, 2), (B, cfg.num_src_tokens, cfg.src_dim))
+    def loss_fn(p, b):
+        logits = b["x"] @ p["w"]
+        return -jnp.mean(jax.nn.log_softmax(logits)[
+            jnp.arange(b["y"].shape[0]), b["y"]])
 
-    with jax.set_mesh(mesh):
-        step = jax.jit(lambda p, c, t, pos: engine.decode_step(
-            p, c, t, pos, cfg, mesh, tp=tp))
-        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                             engine.cache_decl(cfg, B, S))
-        if src is not None:
-            cache = build_cross_cache(cfg, params, cache, src, tp)
-        # teacher-forced prefill through the decode path (exercises the same
-        # kernels the production server uses), then greedy generation
-        t0 = time.time()
-        toks = prompts[:, 0]
+    return params, loss_fn, ClientShards.from_ragged(data)
+
+
+def request_draws(key: jax.Array, n_rounds: int, n_clients: int,
+                  n_sov: int, batch_size: int):
+    """A request's on-device draw contract (mirrors the simulator's
+    `_stream_draws`): per-round scheduling keys, client selections, and
+    uniform minibatch draws. The solo B=1 reference run and the packed
+    cell consume byte-identical draws because both call this."""
+    k_r, k_sel, k_mb = jax.random.split(key, 3)
+    keys = jax.random.split(k_r, n_rounds)                   # [R]
+    sel = jax.vmap(
+        lambda k: jax.random.permutation(k, n_clients)[:n_sov]
+    )(jax.random.split(k_sel, n_rounds))                     # [R, S]
+    mb_u = jax.random.uniform(k_mb, (n_rounds, n_sov, batch_size))
+    return keys, sel, mb_u
+
+
+def _pad_rows(x: jax.Array, length: int) -> jax.Array:
+    """Pad `[R, ...]` to `[length, ...]` by repeating the last row — the
+    tail rows belong to inactive rounds, computed then discarded."""
+    R = x.shape[0]
+    if R == length:
+        return x
+    reps = (length - R,) + (1,) * (x.ndim - 1)
+    return jnp.concatenate([x, jnp.tile(x[-1:], reps)], axis=0)
+
+
+# Host-side packing is latency-critical: at B=8 the eager per-request
+# draw/pad/stack/slice ops cost several times the packed XLA dispatch
+# itself, so each stage is a single jitted call instead.
+
+@functools.lru_cache(maxsize=128)
+def _padded_draws(R: int, L: int, n_clients: int, n_sov: int,
+                  batch_size: int):
+    """Jitted per-request draw column: `request_draws` padded from the
+    request's R rounds to the compiled horizon L, plus its active mask.
+    Cached per shape so a request costs one dispatch, not ~10 eager ops."""
+
+    @jax.jit
+    def go(seed):
+        keys, sel, mb_u = request_draws(jax.random.key(seed), R,
+                                        n_clients, n_sov, batch_size)
+        return (_pad_rows(keys, L), _pad_rows(sel, L), _pad_rows(mb_u, L),
+                jnp.arange(L) < R)
+
+    return go
+
+
+@jax.jit
+def _assemble(carries, cols):
+    """One fused dispatch for batch assembly: pack the session carries
+    along the cell axis and stack the per-request draw columns into the
+    program's `[L, B, ...]` inputs."""
+    carry = pack_cells(carries)
+    keys = jnp.stack([c[0] for c in cols], axis=1)           # [L, B]
+    sel = jnp.stack([c[1] for c in cols], axis=1)            # [L, B, S]
+    mb_u = jnp.stack([c[2] for c in cols], axis=1)           # [L, B, S, bs]
+    active = jnp.stack([c[3] for c in cols], axis=1)         # [L, B]
+    return carry, keys, sel, mb_u, active
+
+
+@functools.partial(jax.jit, static_argnames="n")
+def _split_cells(state, n: int):
+    """Slice the first `n` cells back out as B=1 states in one dispatch."""
+    return tuple(unpack_cell(state, b) for b in range(n))
+
+
+def _pct(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else \
+        float("nan")
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    """Per-request latency decomposition + batch occupancy counters."""
+    queue_wait_s: List[float] = dataclasses.field(default_factory=list)
+    compute_s: List[float] = dataclasses.field(default_factory=list)
+    total_s: List[float] = dataclasses.field(default_factory=list)
+    rounds: List[int] = dataclasses.field(default_factory=list)
+    occupancy: List[int] = dataclasses.field(default_factory=list)
+    t_first: Optional[float] = None
+    t_last: Optional[float] = None
+
+    def observe_batch(self, reqs: Sequence[ServeRequest],
+                      t_submit: Sequence[float], t_start: float,
+                      t_end: float) -> None:
+        for r, ts in zip(reqs, t_submit):
+            self.queue_wait_s.append(t_start - ts)
+            self.compute_s.append(t_end - t_start)
+            self.total_s.append(t_end - ts)
+            self.rounds.append(int(r.n_rounds))
+            self.t_first = ts if self.t_first is None \
+                else min(self.t_first, ts)
+        self.t_last = t_end if self.t_last is None \
+            else max(self.t_last, t_end)
+        self.occupancy.append(len(reqs))
+
+    def summary(self) -> Dict[str, float]:
+        """Aggregate view: p50/p99 total latency, mean queue-wait and
+        compute, aggregate rounds/s over the observed wall span, and
+        mean batch occupancy (packed cells per dispatch)."""
+        wall = (self.t_last - self.t_first
+                if self.total_s and self.t_last > self.t_first else
+                float("nan"))
+        return {
+            "n_requests": len(self.total_s),
+            "n_batches": len(self.occupancy),
+            "p50_ms": 1e3 * _pct(self.total_s, 50),
+            "p99_ms": 1e3 * _pct(self.total_s, 99),
+            "mean_queue_wait_ms": 1e3 * float(
+                np.mean(self.queue_wait_s)) if self.queue_wait_s
+            else float("nan"),
+            "mean_compute_ms": 1e3 * float(np.mean(self.compute_s))
+            if self.compute_s else float("nan"),
+            "rounds_per_s": sum(self.rounds) / wall,
+            "mean_occupancy": float(np.mean(self.occupancy))
+            if self.occupancy else float("nan"),
+        }
+
+
+class SchedulingService:
+    """The packing core: sessions, the compiled program, `run_batch`.
+
+    Synchronous and event-loop-free so it is directly testable; the
+    asyncio front-end (`BatchServer`) owns windows and futures. A custom
+    FL workload plugs in via (`params`, `loss_fn`, `client_data`);
+    omitted, the service trains `default_problem()`.
+    """
+
+    def __init__(self, cfg: ServeConfig, *, params=None, loss_fn=None,
+                 client_data=None):
+        self.cfg = cfg
+        if int(cfg.batch) < 1 or int(cfg.max_rounds) < 1:
+            raise ValueError("batch and max_rounds must be >= 1")
+        self.mob = ManhattanParams()
+        self.ch = ChannelParams()
+        prm_kw = {} if cfg.ipm_iters is None else \
+            {"ipm_iters": int(cfg.ipm_iters)}
+        self.prm = VedsParams(alpha=cfg.alpha, V=cfg.V, Q=cfg.q_bits,
+                              slot=0.1,
+                              ipm_warm_iters=cfg.ipm_warm_iters, **prm_kw)
+        self.sc = ScenarioParams(n_sov=cfg.n_sov, n_opv=cfg.n_opv,
+                                 n_slots=cfg.n_slots,
+                                 batch_size=cfg.batch_size)
+        if loss_fn is None:
+            params, loss_fn, client_data = default_problem(cfg.n_clients)
+        self.params0, self.loss_fn = params, loss_fn
+        self.shards = (client_data if isinstance(client_data, ClientShards)
+                       else ClientShards.from_ragged(client_data))
+        # no handoff in packed mode: cells are independent sessions, and
+        # per-cell active masks cannot compose with the exchange
+        self._stream = StreamConfig(n_rounds=0, batch=int(cfg.batch),
+                                    carry_queues=cfg.carry_queues,
+                                    n_fleet=cfg.n_fleet)
+        self._step = _fused_segment(loss_fn, cfg.scheduler, self.sc,
+                                    self.mob, self.ch, self.prm,
+                                    self._stream, cfg.lr, 1, None, 1)
+        self.sessions: Dict[str, RolloutCarry] = {}
+        self.metrics = ServeMetrics()
+        L = int(cfg.max_rounds)
+        self._steps = jnp.arange(L)
+        self._ev = jnp.zeros((L,), bool)
+        self._off = jnp.zeros((L,), bool)    # padding cells' active col
+        # session creation sits on the serving path (every first-contact
+        # request pays it, eagerly ~10x a packed dispatch) — jit it; the
+        # warmup session triggers the one-time compile
+        stream1 = dataclasses.replace(self._stream, batch=1)
+        self._init = jax.jit(lambda k: init_carry(
+            k, self.sc, self.mob, stream1, self.params0, ch=self.ch))
+
+    def session_carry(self, session: str) -> RolloutCarry:
+        """The session's B=1 carry — persistent fleet (incl. the P4
+        warm-start table), model params, optimizer state — created
+        deterministically from (service seed, session id) on first use."""
+        carry = self.sessions.get(session)
+        if carry is None:
+            k = jax.random.fold_in(jax.random.key(self.cfg.seed),
+                                   zlib.crc32(session.encode()))
+            carry = self._init(k)
+            self.sessions[session] = carry
+        return carry
+
+    def warmup(self) -> None:
+        """Compile the packed program outside any timed load."""
+        self.run_batch([ServeRequest("__warmup__",
+                                     n_rounds=int(self.cfg.max_rounds))])
+        self.sessions.pop("__warmup__", None)
+
+    def run_batch(self, reqs: Sequence[ServeRequest]
+                  ) -> List[ServeResponse]:
+        """Pack up to B requests into the cell axis of ONE dispatch of
+        the compiled fused program and slice responses back out.
+
+        Ragged batches pad on both axes: occupancy < B fills the spare
+        cell slots with a replica of the first session under an
+        all-inactive column, and R_b < L rounds pad with inactive tail
+        rounds — padding is computed and discarded, never perturbing a
+        real cell. Each session's refreshed carry is scattered back to
+        the store before responses return."""
+        cfg = self.cfg
+        B, L, S = int(cfg.batch), int(cfg.max_rounds), cfg.n_sov
+        reqs = list(reqs)
+        if not 0 < len(reqs) <= B:
+            raise ValueError(f"{len(reqs)} requests for {B} cell slots")
+        if len({r.session for r in reqs}) != len(reqs):
+            raise ValueError("duplicate sessions in one batch: packed "
+                             "cells would race on one session's state")
+        for r in reqs:
+            if not 0 < int(r.n_rounds) <= L:
+                raise ValueError(f"n_rounds={r.n_rounds} outside the "
+                                 f"compiled horizon 1..{L}")
+        carries = [self.session_carry(r.session) for r in reqs]
+        cols = [_padded_draws(int(r.n_rounds), L, self.shards.n_clients,
+                              S, cfg.batch_size)(int(r.seed))
+                for r in reqs]
+        n_pad = B - len(reqs)
+        if n_pad:
+            carries = carries + [carries[0]] * n_pad
+            cols = cols + [(cols[0][0], cols[0][1], cols[0][2],
+                            self._off)] * n_pad
+        carry, keys, sel, mb_u, active = _assemble(tuple(carries),
+                                                   tuple(cols))
+        res = self._step(carry, keys, sel, mb_u, self.shards,
+                         self._steps, active, self._ev)
+        # always split all B cells (padding slices are lazy views): a
+        # static arity means occupancy changes never re-trace
+        fleets = _split_cells(res.fleet, B)
+        params = _split_cells(res.params, B)
+        opts = (None,) * B if res.opt_state is None else \
+            _split_cells(res.opt_state, B)
+        # one device->host transfer per output array, numpy slicing after
+        succ = np.asarray(res.outputs.success)
+        n_succ = np.asarray(res.outputs.n_success)
+        loss = np.asarray(res.loss)
         out = []
-        for t in range(S - 1):
-            logits, cache = step(params, cache, toks, jnp.int32(t))
-            nxt = logits.argmax(-1).astype(jnp.int32)
-            toks = jnp.where(t + 1 < P, prompts[:, min(t + 1, P - 1)], nxt)
-            if t + 1 >= P:
-                out.append(toks)
-        dt = time.time() - t0
-        gen = jnp.stack(out, 1)
-        print(f"arch={cfg.name} served batch={B} prompt={P} gen={gen.shape[1]}"
-              f" tokens in {dt:.1f}s ({B*gen.shape[1]/dt:.1f} tok/s)")
-        print("sample:", gen[0, :16].tolist())
+        for b, r in enumerate(reqs):
+            self.sessions[r.session] = RolloutCarry(
+                sched=fleets[b], params=params[b], opt_state=opts[b])
+            R = int(r.n_rounds)
+            out.append(ServeResponse(
+                session=r.session, n_rounds=R, success=succ[:R, b],
+                n_success=n_succ[:R, b], loss=loss[:R, b]))
+        return out
+
+
+class BatchServer:
+    """Continuous-batching front-end over a `SchedulingService`.
+
+    `submit` enqueues a request and awaits its response. A collector
+    task takes the first queued request, waits up to `window_s` for more
+    (up to `max_batch`), then executes the packed dispatch on a
+    single-thread executor — off the event loop, so arrivals keep
+    flowing during compute, and serialized, so two in-flight batches can
+    never race on one session's state."""
+
+    def __init__(self, service: SchedulingService, *,
+                 window_s: Optional[float] = None,
+                 max_batch: Optional[int] = None):
+        self.service = service
+        self.window_s = float(service.cfg.window_s if window_s is None
+                              else window_s)
+        self.max_batch = int(service.cfg.batch if max_batch is None
+                             else max_batch)
+        if not 0 < self.max_batch <= int(service.cfg.batch):
+            raise ValueError(f"max_batch={self.max_batch} outside "
+                             f"1..{service.cfg.batch}")
+        self._queue: asyncio.Queue = asyncio.Queue()
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        self._task: Optional[asyncio.Task] = None
+
+    async def __aenter__(self) -> "BatchServer":
+        self._task = asyncio.get_running_loop().create_task(self._run())
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        self._queue.put_nowait(None)
+        if self._task is not None:
+            await self._task
+        self._pool.shutdown(wait=True)
+
+    async def submit(self, req: ServeRequest) -> ServeResponse:
+        fut = asyncio.get_running_loop().create_future()
+        self._queue.put_nowait((req, fut, time.perf_counter()))
+        return await fut
+
+    async def _run(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            item = await self._queue.get()
+            if item is None:
+                return
+            batch = [item]
+            sessions = {item[0].session}
+            deferred = []
+            deadline = loop.time() + self.window_s
+            stop = False
+            while len(batch) < self.max_batch:
+                timeout = deadline - loop.time()
+                try:
+                    nxt = (self._queue.get_nowait() if timeout <= 0 else
+                           await asyncio.wait_for(self._queue.get(),
+                                                  timeout))
+                except (asyncio.QueueEmpty, asyncio.TimeoutError):
+                    break
+                if nxt is None:
+                    stop = True
+                    break
+                if nxt[0].session in sessions:
+                    # a session's requests are sequential by contract
+                    # (each resumes the state the previous one left) —
+                    # defer the duplicate to a later batch
+                    deferred.append(nxt)
+                    continue
+                sessions.add(nxt[0].session)
+                batch.append(nxt)
+            # deferred items go back BEFORE any re-enqueued sentinel, so
+            # a stop never abandons a deferred request's future
+            for d in deferred:
+                self._queue.put_nowait(d)
+            if stop:
+                self._queue.put_nowait(None)
+            reqs = [b[0] for b in batch]
+            t_start = time.perf_counter()
+            try:
+                resps = await loop.run_in_executor(
+                    self._pool, self.service.run_batch, reqs)
+                t_end = time.perf_counter()
+                self.service.metrics.observe_batch(
+                    reqs, [b[2] for b in batch], t_start, t_end)
+                for (req, fut, ts), resp in zip(batch, resps):
+                    resp.queue_wait_s = t_start - ts
+                    resp.compute_s = t_end - t_start
+                    resp.total_s = t_end - ts
+                    if not fut.done():
+                        fut.set_result(resp)
+            except Exception as e:          # noqa: BLE001 — fail the batch
+                for _, fut, _ in batch:
+                    if not fut.done():
+                        fut.set_exception(e)
+            # a seen stop sentinel was re-enqueued behind any deferred
+            # items: keep draining until it comes back around
+
+
+async def closed_loop_load(server: BatchServer, *, n_clients: int,
+                           n_requests: int, n_rounds: int,
+                           seed: int = 0) -> List[ServeResponse]:
+    """Saturating load: every client keeps exactly one request in flight
+    (submits the next the moment its response lands). This is the load
+    the batched-vs-sequential rounds/s acceptance is measured under."""
+    async def client(c: int) -> List[ServeResponse]:
+        out = []
+        for i in range(n_requests):
+            out.append(await server.submit(ServeRequest(
+                session=f"client-{c}", n_rounds=n_rounds,
+                seed=seed + 1000 * c + i)))
+        return out
+
+    res = await asyncio.gather(*(client(c) for c in range(n_clients)))
+    return [r for rs in res for r in rs]
+
+
+async def poisson_load(server: BatchServer, *, n_clients: int,
+                       rate_hz: float, n_requests: int, n_rounds: int,
+                       seed: int = 0) -> List[ServeResponse]:
+    """Open-loop Poisson arrivals: each client draws exponential
+    inter-arrival gaps at `rate_hz / n_clients`, so the aggregate is a
+    Poisson process at `rate_hz` requests/s. Latency under this load —
+    not the saturating closed loop — is what the batching-window
+    tail-latency tradeoff is measured on."""
+    gap = n_clients / float(rate_hz)
+
+    async def client(c: int) -> List[ServeResponse]:
+        rng = np.random.default_rng(seed + c)
+        out = []
+        for i in range(n_requests):
+            await asyncio.sleep(float(rng.exponential(gap)))
+            out.append(await server.submit(ServeRequest(
+                session=f"client-{c}", n_rounds=n_rounds,
+                seed=seed + 1000 * c + i)))
+        return out
+
+    res = await asyncio.gather(*(client(c) for c in range(n_clients)))
+    return [r for rs in res for r in rs]
+
+
+def drive(cfg: ServeConfig, *, n_clients: int = 8, n_requests: int = 4,
+          n_rounds: Optional[int] = None, rate_hz: float = 0.0,
+          window_s: Optional[float] = None, baseline: bool = True,
+          seed: int = 0) -> Dict[str, object]:
+    """Build a service, drive it under synthetic load, and return the
+    metrics summary — plus the sequential per-request baseline (a
+    `batch=1` service dispatching every request alone, the B=1 lower
+    bound) and the aggregate rounds/s speedup over it."""
+    n_rounds = int(cfg.max_rounds if n_rounds is None else n_rounds)
+
+    def load(service: SchedulingService, w: float, mb: int):
+        service.warmup()
+
+        async def go():
+            async with BatchServer(service, window_s=w,
+                                   max_batch=mb) as srv:
+                if rate_hz > 0:
+                    await poisson_load(srv, n_clients=n_clients,
+                                       rate_hz=rate_hz,
+                                       n_requests=n_requests,
+                                       n_rounds=n_rounds, seed=seed)
+                else:
+                    await closed_loop_load(srv, n_clients=n_clients,
+                                           n_requests=n_requests,
+                                           n_rounds=n_rounds, seed=seed)
+
+        asyncio.run(go())
+        return service.metrics.summary()
+
+    w = float(cfg.window_s if window_s is None else window_s)
+    out: Dict[str, object] = {
+        "batched": load(SchedulingService(cfg), w, int(cfg.batch))}
+    if baseline:
+        seq = SchedulingService(dataclasses.replace(cfg, batch=1))
+        out["sequential"] = load(seq, 0.0, 1)
+        out["speedup"] = (out["batched"]["rounds_per_s"]
+                          / out["sequential"]["rounds_per_s"])
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Batched scheduling service under synthetic load")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="B: packed cell slots per dispatch")
+    ap.add_argument("--max-rounds", type=int, default=4,
+                    help="L: compiled round horizon per dispatch")
+    ap.add_argument("--window-ms", type=float, default=2.0,
+                    help="batching window after the first request")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=4,
+                    help="requests per client")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="rounds per request (default: max-rounds)")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="aggregate Poisson arrival rate in requests/s "
+                         "(0 = saturating closed loop)")
+    ap.add_argument("--scheduler", default="madca")
+    ap.add_argument("--warm-iters", type=int, default=0,
+                    help="VEDS+COT: warm P4 budget per candidate")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="skip the sequential B=1 baseline")
+    ap.add_argument("--json", action="store_true",
+                    help="emit one JSON line instead of text")
+    args = ap.parse_args(argv)
+
+    cfg = ServeConfig(batch=args.batch, max_rounds=args.max_rounds,
+                      window_s=1e-3 * args.window_ms,
+                      scheduler=args.scheduler,
+                      ipm_warm_iters=args.warm_iters, seed=args.seed)
+    out = drive(cfg, n_clients=args.clients, n_requests=args.requests,
+                n_rounds=args.rounds, rate_hz=args.rate,
+                baseline=not args.no_baseline, seed=args.seed)
+    if args.json:
+        print(json.dumps(out))
+        return 0
+    b = out["batched"]
+    print(f"batched  B={args.batch} window={args.window_ms}ms: "
+          f"{b['rounds_per_s']:8.1f} rounds/s  p50={b['p50_ms']:.1f}ms "
+          f"p99={b['p99_ms']:.1f}ms  occupancy={b['mean_occupancy']:.1f}")
+    if "sequential" in out:
+        s = out["sequential"]
+        print(f"sequential B=1:          {s['rounds_per_s']:8.1f} rounds/s"
+              f"  p50={s['p50_ms']:.1f}ms p99={s['p99_ms']:.1f}ms")
+        print(f"speedup: {out['speedup']:.1f}x aggregate rounds/s")
     return 0
 
 

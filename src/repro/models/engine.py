@@ -127,6 +127,27 @@ def source_memory(params, cfg: ModelConfig, src: Optional[jax.Array],
     return src.astype(cfg.dtype)
 
 
+def build_cross_cache(cfg: ModelConfig, params, cache, src, tp: str):
+    """Populate cross-attention K/V cache slots from the source memory
+    (VLM/audio decode: the encoder runs once, its K/V are static)."""
+    mem = source_memory(params, cfg, src, tp)
+    new_cache = list(cache)
+    for i, kind in enumerate(cfg.pattern):
+        if kind != "cross":
+            continue
+        bp = params["blocks"][i]
+
+        def kv(bp_l):
+            k = jnp.einsum("bsd,dhk->bshk", mem, bp_l["wk"].astype(mem.dtype))
+            v = jnp.einsum("bsd,dhk->bshk", mem, bp_l["wv"].astype(mem.dtype))
+            return k, v
+
+        ks, vs = jax.vmap(kv)(bp)
+        new_cache[i] = {"k": ks.astype(cache[i]["k"].dtype),
+                        "v": vs.astype(cache[i]["v"].dtype)}
+    return list(new_cache)
+
+
 # ---------------------------------------------------------------------------
 # forward (train / prefill)
 # ---------------------------------------------------------------------------

@@ -6,8 +6,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs.registry import get_smoke_config
-from repro.launch.serve import build_cross_cache
 from repro.models import engine
+from repro.models.engine import build_cross_cache
 from repro.models.module import materialize
 from repro.sharding.policy import attention_tp_mode
 

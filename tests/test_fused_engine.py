@@ -376,6 +376,27 @@ def test_fused_run_fl_segmented_compiles_one_segment_shape(fl_setup):
     assert seg._cache_size() == 1
 
 
+def test_fused_run_fl_segmented_threads_history_chunk(fl_setup):
+    """Bugfix regression: the segmented host-eval path used to hard-code
+    `history_chunk=1`, silently ignoring `fused_history_chunk` (the
+    memory lever) and compiling a segment the in-scan path's cache key
+    never matches. The chunked segmented run must be bit-for-bit the
+    unchunked one (same dispatches, same history — chunk > segment
+    length also exercises the pad-to-chunk-multiple no-op tail), and the
+    segment actually used must live under the chunked cache key."""
+    hu = _go(fl_setup, streaming=True, eval_in_scan=False)
+    hc = _go(fl_setup, streaming=True, eval_in_scan=False,
+             fused_history_chunk=4)
+    assert hc == hu
+    sim = FLSimConfig(n_clients=N_CLIENTS, rounds=6, scheduler="madca",
+                      n_slots=10, n_sov=4, n_opv=3, batch_size=BS,
+                      streaming=True, eval_in_scan=False,
+                      fused_history_chunk=4)
+    seg = _seg_of(sim)
+    if hasattr(seg, "_cache_size"):
+        assert seg._cache_size() == 1
+
+
 def test_run_fl_accepts_prepadded_shards(fl_setup):
     params, data, eval_fn = fl_setup
     shards = ClientShards.from_ragged(data)

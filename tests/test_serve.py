@@ -1,0 +1,317 @@
+"""Scheduling-as-a-service (DESIGN.md §13).
+
+The serving contract under test: K ragged requests packed into the `[B]`
+cell axis of one compiled fused program are bit-for-bit the same
+requests dispatched alone at B=1 — per scheduler, at any occupancy, with
+padding cells never perturbing real cells, and each session's
+server-side state (persistent fleet incl. the PR-5 P4 warm-start table,
+model params) chaining across requests exactly as the solo run chains.
+Plus the continuous-batching front-end: window packing, duplicate-
+session deferral, latency metrics, and the in-process entrypoints.
+"""
+import asyncio
+import importlib.util
+import json
+import math
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import mark_slow_unless
+
+from repro.core.baselines import SCHEDULERS
+from repro.launch.serve import (BatchServer, SchedulingService,
+                                ServeConfig, ServeRequest,
+                                closed_loop_load, drive)
+from repro.launch.serve import main as serve_main
+
+L = 3           # compiled round horizon shared by most tests (one
+#                 _fused_segment entry per (B, L) via the lru cache)
+
+
+def _cfg(B, **kw):
+    kw.setdefault("max_rounds", L)
+    return ServeConfig(batch=B, **kw)
+
+
+def _assert_same(a, b):
+    """Responses bit-for-bit equal (the serving acceptance contract)."""
+    assert a.n_rounds == b.n_rounds
+    np.testing.assert_array_equal(a.success, b.success)
+    np.testing.assert_array_equal(a.n_success, b.n_success)
+    np.testing.assert_array_equal(a.loss, b.loss)
+
+
+def _solo_replay(schedule, **cfg_kw):
+    """Replay per-session request sequences on a fresh B=1 service —
+    the reference every packed response must match bit-for-bit."""
+    svc = SchedulingService(_cfg(1, **cfg_kw))
+    return svc, {s: [svc.run_batch([r])[0] for r in reqs]
+                 for s, reqs in schedule.items()}
+
+
+@pytest.mark.parametrize("name,B", mark_slow_unless(
+    [(n, b) for n in sorted(SCHEDULERS) for b in (1, 3)],
+    {("madca", 1), ("madca", 3)}))
+def test_packed_ragged_requests_match_solo(name, B):
+    """K ragged requests packed into [B] cells are exact per scheduler:
+    every packed response — and the second round of requests resuming
+    each session's server-side state — is bit-for-bit the solo B=1
+    run. Quick lane runs madca at both batch shapes; the full
+    scheduler matrix is slow-lane."""
+    kw = dict(scheduler=name, ipm_iters=4, ipm_warm_iters=2)
+    svc = SchedulingService(_cfg(B, **kw))
+    sessions = [f"s{i}" for i in range(B)]
+    # ragged round counts, distinct seeds; a second wave resumes state
+    waves = [[ServeRequest(s, 1 + (i + w) % L, seed=10 * w + i)
+              for i, s in enumerate(sessions)] for w in range(2)]
+    packed = [svc.run_batch(wave) for wave in waves]
+    _, solo = _solo_replay(
+        {s: [waves[0][i], waves[1][i]] for i, s in enumerate(sessions)},
+        **kw)
+    for w in range(2):
+        for i, s in enumerate(sessions):
+            _assert_same(packed[w][i], solo[s][w])
+
+
+def test_padding_cells_never_perturb_real_cells():
+    """An under-occupied batch pads spare cell slots with all-inactive
+    replica cells: a request served at occupancy 1 of B=3 (2 padding
+    cells) is bit-for-bit the same request at B=1, and the padding
+    leaves no trace in the session store."""
+    svc = SchedulingService(_cfg(3))
+    reqs = [ServeRequest("only", L, seed=5), ServeRequest("only", 2, seed=6)]
+    got = [svc.run_batch([r])[0] for r in reqs]
+    _, solo = _solo_replay({"only": reqs})
+    for g, s in zip(got, solo["only"]):
+        _assert_same(g, s)
+    assert set(svc.sessions) == {"only"}
+
+
+def test_repeat_session_state_roundtrips_bitwise():
+    """The session cache IS the serving state: after a packed request,
+    the gathered-and-scattered per-session carry (fleet incl. p4_tab,
+    params) equals the solo B=1 service's stored carry bit-for-bit."""
+    svc = SchedulingService(_cfg(3))
+    svc.run_batch([ServeRequest("a", L, seed=1),
+                   ServeRequest("b", 2, seed=2)])
+    ref, _ = _solo_replay({"a": [ServeRequest("a", L, seed=1)],
+                           "b": [ServeRequest("b", 2, seed=2)]})
+    for s in ("a", "b"):
+        jax.tree.map(
+            lambda x, y: np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y)),
+            svc.sessions[s], ref.sessions[s])
+
+
+def test_repeat_session_rides_warm_p4():
+    """PR-5 warm path through the serving layer: with VEDS+COT and
+    `ipm_warm_iters > 0`, a session's P4 warm-start table updates on the
+    first request, the per-session scatter/gather of the table is
+    bit-for-bit lossless (re-packing the unpacked sessions reproduces
+    the dispatch's packed fleet exactly), and a second request's
+    responses are bit-for-bit the solo B=1 warm run. The table itself is
+    only compared to the B=1 run at tolerance: XLA batches the IPM's
+    linear solves differently at B=2 vs B=1 and Newton amplifies the
+    last-ulp difference — the response-level contract is what stays
+    bitwise. Tiny shapes keep the VEDS compile quick-lane affordable."""
+    from repro.core.streaming import pack_cells
+    kw = dict(max_rounds=2, scheduler="veds", n_sov=3, n_opv=2,
+              n_slots=6, ipm_iters=4, ipm_warm_iters=2)
+    svc = SchedulingService(ServeConfig(batch=2, **kw))
+    tab0 = np.asarray(svc.session_carry("x").sched.p4_tab)
+    reqs = {s: [ServeRequest(s, 2, seed=i), ServeRequest(s, 2, seed=i + 7)]
+            for i, s in enumerate(("x", "y"))}
+    captured = []
+    orig = svc._step
+    svc._step = lambda *a: captured.append(orig(*a)) or captured[-1]
+    p1 = svc.run_batch([reqs["x"][0], reqs["y"][0]])
+    tab1 = np.asarray(svc.sessions["x"].sched.p4_tab)
+    assert not np.array_equal(tab1, tab0), "warm table never updated"
+    # the session KV-cache contract: unpack -> store -> re-pack is the
+    # identity on the dispatch's packed fleet (p4_tab included), bitwise
+    repacked = pack_cells([svc.sessions[s].sched for s in ("x", "y")])
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), repacked, captured[-1].fleet)
+    p2 = svc.run_batch([reqs["x"][1], reqs["y"][1]])
+    ref = SchedulingService(ServeConfig(batch=1, **kw))
+    s1 = [ref.run_batch([reqs[s][0]])[0] for s in ("x", "y")]
+    np.testing.assert_allclose(
+        tab1, np.asarray(ref.sessions["x"].sched.p4_tab), atol=1e-3)
+    s2 = [ref.run_batch([reqs[s][1]])[0] for s in ("x", "y")]
+    for i in range(2):
+        _assert_same(p1[i], s1[i])
+        _assert_same(p2[i], s2[i])
+
+
+def test_run_batch_validation():
+    svc = SchedulingService(_cfg(2))
+    with pytest.raises(ValueError, match="cell slots"):
+        svc.run_batch([ServeRequest(f"s{i}", 1) for i in range(3)])
+    with pytest.raises(ValueError, match="duplicate sessions"):
+        svc.run_batch([ServeRequest("s", 1), ServeRequest("s", 2)])
+    with pytest.raises(ValueError, match="compiled horizon"):
+        svc.run_batch([ServeRequest("s", L + 1)])
+    with pytest.raises(ValueError, match="compiled horizon"):
+        svc.run_batch([ServeRequest("s", 0)])
+
+
+def test_per_cell_active_rejected_with_handoff():
+    """The serving layer's per-cell no-op masks cannot compose with the
+    cross-cell exchange — the engine must reject, not silently corrupt."""
+    import dataclasses
+    from repro.core.baselines import get_scheduler
+    from repro.fl.engine import fused_rollout, init_carry
+    from repro.launch.serve import default_problem, request_draws
+    svc = SchedulingService(_cfg(2))
+    cfg = dataclasses.replace(svc._stream, handoff=True)
+    params, loss_fn, shards = default_problem()
+    carry = init_carry(jax.random.key(0), svc.sc, svc.mob, cfg, params,
+                       ch=svc.ch)
+    keys, sel, mb_u = request_draws(jax.random.key(0), 2, 10, 4, 8)
+    with pytest.raises(ValueError, match="handoff"):
+        fused_rollout(keys, jnp.tile(sel[:, None], (1, 2, 1)),
+                      jnp.tile(mb_u[:, None], (1, 2, 1, 1)),
+                      get_scheduler("madca"), svc.sc, svc.mob, svc.ch,
+                      svc.prm, cfg, loss_fn, shards, carry,
+                      active=jnp.ones((2, 2), bool))
+
+
+def test_per_cell_keys_rejected_in_fresh_fleet_mode():
+    """Per-cell key batches need a persistent fleet — fresh-fleet mode
+    draws the whole batch from one round key, so a [B] key layout would
+    be silently misinterpreted."""
+    import dataclasses
+    from repro.core.baselines import get_scheduler
+    from repro.core.streaming import sched_round_step
+    from repro.core.streaming import _zero_carry
+    svc = SchedulingService(_cfg(2))
+    cfg = dataclasses.replace(svc._stream, fresh_fleet=True)
+    with pytest.raises(ValueError, match="per-cell keys"):
+        sched_round_step(_zero_carry(svc.sc, 2),
+                         jax.random.split(jax.random.key(0), 2),
+                         get_scheduler("madca"), svc.sc, svc.mob,
+                         svc.ch, svc.prm, cfg)
+
+
+def _serve(svc, coro_fn, **server_kw):
+    async def go():
+        async with BatchServer(svc, **server_kw) as srv:
+            return await coro_fn(srv)
+    return asyncio.run(go())
+
+
+def test_batch_server_packs_within_window_and_records_metrics():
+    """Five concurrent clients against B=3 under a wide window pack into
+    two dispatches (occupancy 3 + 2); every response is bit-for-bit the
+    solo replay, and the latency decomposition is sane."""
+    svc = SchedulingService(_cfg(3))
+    svc.warmup()
+    reqs = [ServeRequest(f"c{i}", 1 + i % L, seed=i) for i in range(5)]
+
+    async def load(srv):
+        return await asyncio.gather(*(srv.submit(r) for r in reqs))
+
+    got = _serve(svc, load, window_s=0.25)
+    assert svc.metrics.occupancy == [3, 2]
+    _, solo = _solo_replay({r.session: [r] for r in reqs})
+    for r, g in zip(reqs, got):
+        _assert_same(g, solo[r.session][0])
+        assert g.total_s >= g.compute_s >= 0
+        assert g.queue_wait_s >= 0
+    s = svc.metrics.summary()
+    assert s["n_requests"] == 5 and s["n_batches"] == 2
+    assert s["mean_occupancy"] == pytest.approx(2.5)
+    for k in ("p50_ms", "p99_ms", "rounds_per_s", "mean_queue_wait_ms",
+              "mean_compute_ms"):
+        assert math.isfinite(s[k]) and s[k] > 0, (k, s)
+
+
+def test_batch_server_defers_duplicate_session_to_next_batch():
+    """Two in-flight requests from ONE session must not co-occupy a
+    batch (they would race on the session's state): the server defers
+    the duplicate, and the pair still chains exactly like the solo
+    sequential replay."""
+    svc = SchedulingService(_cfg(3))
+    svc.warmup()
+    r1 = ServeRequest("dup", L, seed=1)
+    r2 = ServeRequest("dup", 2, seed=2)
+    other = ServeRequest("other", 1, seed=3)
+
+    async def load(srv):
+        return await asyncio.gather(srv.submit(r1), srv.submit(r2),
+                                    srv.submit(other))
+
+    g1, g2, go_ = _serve(svc, load, window_s=0.25)
+    assert svc.metrics.occupancy == [2, 1]        # dup deferred
+    _, solo = _solo_replay({"dup": [r1, r2], "other": [other]})
+    _assert_same(g1, solo["dup"][0])
+    _assert_same(g2, solo["dup"][1])
+    _assert_same(go_, solo["other"][0])
+
+
+def test_batch_server_failed_batch_fails_every_future():
+    svc = SchedulingService(_cfg(2))
+    svc.warmup()
+
+    def boom(reqs):
+        raise RuntimeError("scheduler down")
+
+    svc.run_batch = boom
+
+    async def load(srv):
+        return await asyncio.gather(srv.submit(ServeRequest("a", 1)),
+                                    srv.submit(ServeRequest("b", 1)),
+                                    return_exceptions=True)
+
+    out = _serve(svc, load, window_s=0.1)
+    assert all(isinstance(e, RuntimeError) for e in out)
+
+
+def test_serve_main_in_process(capsys):
+    """The entrypoint takes explicit argv (no sys.argv mutation) and its
+    --json output carries finite metrics."""
+    argv_before = list(sys.argv)
+    rc = serve_main(["--batch", "3", "--max-rounds", str(L),
+                     "--clients", "3", "--requests", "1",
+                     "--window-ms", "1", "--json"])
+    assert rc == 0
+    assert sys.argv == argv_before
+    out = json.loads(capsys.readouterr().out)
+    assert out["batched"]["n_requests"] == 3
+    assert math.isfinite(out["speedup"]) and out["speedup"] > 0
+    for k in ("p50_ms", "p99_ms", "rounds_per_s", "mean_occupancy"):
+        assert math.isfinite(out["batched"][k]), out
+
+
+def test_example_entrypoint_in_process(capsys):
+    """examples/serve_batch.py is importable and runs in-process with
+    explicit argv; exit code 0 certifies its own packed-vs-solo
+    bit-for-bit check."""
+    path = (pathlib.Path(__file__).parent.parent / "examples"
+            / "serve_batch.py")
+    spec = importlib.util.spec_from_file_location("serve_batch_example",
+                                                  path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    argv_before = list(sys.argv)
+    rc = mod.main(["--clients", "3", "--requests", "1", "--batch", "3",
+                   "--rounds", str(L), "--window-ms", "1"])
+    assert rc == 0
+    assert sys.argv == argv_before
+    assert "(bit-for-bit): True" in capsys.readouterr().out
+
+
+@pytest.mark.slow
+def test_batched_serving_sustains_2x_rounds_per_s():
+    """Acceptance: under saturating closed-loop load from 8 concurrent
+    clients, the batched server sustains >= 2x the aggregate rounds/s of
+    sequential B=1 dispatch on CPU (the packed program amortizes both
+    dispatch and per-round overhead across the cell axis)."""
+    cfg = ServeConfig(batch=8, max_rounds=4, window_s=5e-4)
+    out = drive(cfg, n_clients=8, n_requests=8, baseline=True, seed=0)
+    assert out["batched"]["mean_occupancy"] > 4.0, out
+    assert out["speedup"] >= 2.0, out
