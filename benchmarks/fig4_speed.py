@@ -42,9 +42,20 @@ a `BatchServer` packing concurrent clients' rollout requests into the
 closed-loop load, at two batching windows, vs sequential B=1 dispatch —
 aggregate rounds/s, p50/p99 request latency, and batch occupancy.
 
+`serve_tier_sweep` carries the horizon-tiered serving story (DESIGN.md
+§13): the service's (horizon x occupancy) executable ladder routing a
+mixed-round-count load to the smallest fitting tier, vs the single
+max-horizon program padding every request to the worst case — aggregate
+rounds/s and the realized padding fractions — plus a bounded-session-
+store probe certifying that a `max_sessions`-bounded service answers
+bit-for-bit like the unbounded one after its sessions spill to host
+numpy and restore.
+
 `--smoke` runs every sweep at tiny shapes and emits one JSON line — the
 CI quick lane uses it to catch perf-path regressions (imports, shapes,
-jit contracts) without paying benchmark-scale runtimes.
+jit contracts) without paying benchmark-scale runtimes — and writes the
+serving fields to `BENCH_serve.json` (the serving lane's benchmark
+artifact).
 """
 from __future__ import annotations
 
@@ -379,6 +390,60 @@ def serve_sweep(windows=(0.0, 0.002), *, B: int = 8, clients: int = 8,
     return rows
 
 
+def serve_tier_sweep(tiers=(2, 4, 8), *, B: int = 8, clients: int = 8,
+                     requests: int = 3, window_s: float = 1e-3):
+    """Horizon-tiered serving vs the single max-horizon program
+    (DESIGN.md §13), under the same mixed-round-count closed-loop load:
+    the tier ladder routes each window's batch to the smallest
+    (horizon x occupancy) executable that fits it, so short requests
+    stop paying for the worst case's padded round-slots. Also runs the
+    bounded-session-store probe: a `max_sessions=1` service whose
+    sessions all spill to host and restore must answer every request
+    bit-for-bit like the unbounded service, with spills and restores
+    actually observed. Returns one flat dict of scalars (the smoke JSON
+    / BENCH_serve.json payload)."""
+    import numpy as np
+    from repro.launch.serve import (SchedulingService, ServeConfig,
+                                    ServeRequest, drive)
+    tiers = tuple(sorted(tiers))
+    mix = tiers + tiers[:-1]                # mostly short requests
+    load = dict(n_clients=clients, n_requests=requests, n_rounds=mix,
+                baseline=False, seed=0)
+    tiered = drive(ServeConfig(batch=B, max_rounds=tiers[-1],
+                               tiers=tiers, window_s=window_s),
+                   **load)["batched"]
+    single = drive(ServeConfig(batch=B, max_rounds=tiers[-1],
+                               window_s=window_s), **load)["batched"]
+    # spill/restore probe at B=1 (bitwise, so no timing noise): three
+    # sessions churn through a one-slot device store twice; every
+    # response must equal the never-evicted service's
+    kw = dict(batch=1, max_rounds=tiers[0])
+    bounded = SchedulingService(ServeConfig(max_sessions=1, **kw))
+    free = SchedulingService(ServeConfig(**kw))
+    ok = True
+    for wave in range(2):
+        for s in ("s0", "s1", "s2"):
+            r = ServeRequest(s, tiers[0], seed=wave)
+            a = bounded.run_batch([r])[0]
+            b = free.run_batch([r])[0]
+            ok = ok and (np.array_equal(a.success, b.success)
+                         and np.array_equal(a.n_success, b.n_success)
+                         and np.array_equal(a.loss, b.loss))
+    ok = (ok and bounded.metrics.n_spills > 0
+          and bounded.metrics.n_restores > 0
+          and free.metrics.n_spills == 0)
+    return {
+        "tier_speedup": tiered["rounds_per_s"] / single["rounds_per_s"],
+        "pad_frac_rounds": tiered["pad_frac_rounds"],
+        "pad_frac_cells": tiered["pad_frac_cells"],
+        "single_pad_frac_rounds": single["pad_frac_rounds"],
+        "tiered_rps": tiered["rounds_per_s"],
+        "single_rps": single["rounds_per_s"],
+        "n_tiers_hit": len(tiered["tier_hits"]),
+        "spill_restore_ok": bool(ok),
+    }
+
+
 def main(csv=True, smoke=False):
     if smoke:
         rows = []
@@ -405,6 +470,8 @@ def main(csv=True, smoke=False):
         n_disp = eval_dispatch_count(R=4)
         verows = serve_sweep(windows=(0.0, 0.001), B=4, clients=6,
                              requests=2, rounds=2)
+        trow = serve_tier_sweep(tiers=(1, 2), B=4, clients=6,
+                                requests=2)
     else:
         rows, us = run()
         brows = b_sweep()
@@ -416,6 +483,7 @@ def main(csv=True, smoke=False):
         mrows = mesh_sweep()
         n_disp = eval_dispatch_count()
         verows = serve_sweep()
+        trow = serve_tier_sweep()
     veds5 = [r[2] for r in rows if r[1] == "veds"][0] if smoke else \
         [r[2] for r in rows if r[1] == "veds" and r[0] == 5.0][0]
     opt5 = [r[2] for r in rows if r[1] == "optimal"][0] if smoke else \
@@ -450,6 +518,12 @@ def main(csv=True, smoke=False):
         out["serve_occupancy"] = wide[5]
         out["serve_seq_rps"] = serve_seq[2]
         out["serve_speedup"] = wide[6]
+        # tiered serving + bounded-store fields (BENCH_serve.json)
+        out["tier_speedup"] = trow["tier_speedup"]
+        out["pad_frac_rounds"] = trow["pad_frac_rounds"]
+        out["pad_frac_cells"] = trow["pad_frac_cells"]
+        out["single_pad_frac_rounds"] = trow["single_pad_frac_rounds"]
+        out["spill_restore_ok"] = trow["spill_restore_ok"]
         # mesh fields exist per available device count (the CI mesh lane
         # fakes 8 CPU devices; a plain host only emits the 1-device row)
         for n, row in sorted(mesh_by_n.items()):
@@ -464,6 +538,12 @@ def main(csv=True, smoke=False):
         assert mrows and all(r[3] > 0 for r in mrows), mrows
         assert all(r[2] > 0 for r in verows), verows
         assert 0.0 < wide[5] <= 4.0, verows    # occupancy in (0, B]
+        assert out["spill_restore_ok"] is True, trow
+        assert out["tier_speedup"] > 0, trow
+        # tiering strictly cuts the padded round-slot fraction: the mix
+        # pads to its own tier, not to the max horizon
+        assert out["pad_frac_rounds"] < out["single_pad_frac_rounds"], \
+            trow
         if 1 in mesh_by_n and 8 in mesh_by_n:
             # 8 fake CPU devices share the host's cores, so sharding
             # buys no throughput here (measured ~0.1-0.2x) — the lever
@@ -471,6 +551,15 @@ def main(csv=True, smoke=False):
             # executable's live bytes shrink with the device count
             assert mesh_by_n[8][4] < mesh_by_n[1][4], mrows
         print(json.dumps(out))
+        # the serving lane's benchmark artifact: every serve_* field of
+        # the smoke JSON plus the tier sweep's full payload, one file CI
+        # uploads next to the coverage report
+        bench = {k: v for k, v in out.items()
+                 if k.startswith(("serve_", "tier_", "pad_frac",
+                                  "spill_restore"))}
+        bench.update(trow)
+        with open("BENCH_serve.json", "w") as f:
+            json.dump(bench, f, indent=2)
         return out
     if csv:
         print(f"fig4_speed,{us:.0f},veds_frac_of_optimal_v5={frac:.3f},"
@@ -480,7 +569,8 @@ def main(csv=True, smoke=False):
               f"handoff_migrated={hand_migrated:.2f},"
               f"warm_ipm_speedup={warm_speedup:.1f},"
               f"run_fl_eval_dispatches={n_disp},"
-              f"serve_speedup={serve_rows[-1][6]:.1f}")
+              f"serve_speedup={serve_rows[-1][6]:.1f},"
+              f"tier_speedup={trow['tier_speedup']:.1f}")
     for v, name, s in rows:
         print(f"#  v={v:5.1f}  {name:10s} n_success={s:.2f}")
     for name, B, rps_loop, rps_batch, speedup in brows:
@@ -508,6 +598,12 @@ def main(csv=True, smoke=False):
         print(f"#  window={1e3 * w:4.1f}ms  {name:10s} {rps:9.1f} rounds/s"
               f"  p50={p50:6.1f}ms  p99={p99:6.1f}ms  occ={occ:4.1f}  "
               f"speedup={speedup:4.1f}x")
+    print(f"#  serve_tiered {trow['tiered_rps']:9.1f} rounds/s vs "
+          f"single {trow['single_rps']:9.1f} rounds/s  "
+          f"speedup={trow['tier_speedup']:4.1f}x  "
+          f"pad_frac_rounds={trow['pad_frac_rounds']:.2f} "
+          f"(single {trow['single_pad_frac_rounds']:.2f})  "
+          f"spill_restore_ok={trow['spill_restore_ok']}")
     return frac
 
 

@@ -238,7 +238,7 @@ def sched_state0(key: jax.Array, sc: ScenarioParams, mob: ManhattanParams,
     return fleet
 
 
-def pack_cells(states) -> SchedState:
+def pack_cells(states, pad_to: Optional[int] = None) -> SchedState:
     """Concatenate per-session B=1 scheduling states (or any pytree with
     a leading cell axis — `RolloutCarry`, `FleetState`, `SchedulerCarry`)
     into one packed state along the `[B]` cell axis.
@@ -248,8 +248,18 @@ def pack_cells(states) -> SchedState:
     program's cell axis per dispatch; `unpack_cell` slices each
     session's refreshed state back out on response. Cells of a packed
     persistent rollout never interact (no handoff in packed mode), so
-    pack -> rollout -> unpack is bit-for-bit the solo B=1 rollout."""
+    pack -> rollout -> unpack is bit-for-bit the solo B=1 rollout.
+
+    `pad_to` packs at a tier occupancy larger than the live session
+    count: the spare cell slots are filled with replicas of the first
+    state. The caller must deactivate those slots (all-`False` per-cell
+    active columns) so the replicas compute-and-discard."""
     states = list(states)
+    if pad_to is not None:
+        if pad_to < len(states):
+            raise ValueError(f"pad_to={pad_to} smaller than the "
+                             f"{len(states)} states to pack")
+        states = states + [states[0]] * (pad_to - len(states))
     if len(states) == 1:
         return states[0]
     return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *states)

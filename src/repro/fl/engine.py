@@ -32,6 +32,7 @@ from garbage padding cannot leak in).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
@@ -436,3 +437,38 @@ def fused_rollout(keys: jax.Array, sel: jax.Array, mb_u: jax.Array,
     return FusedResult(params=end.params, opt_state=end.opt_state,
                        outputs=outs, loss=losses, fleet=fleet,
                        carry=carry_out, metric=metric)
+
+
+# The tier-keyed segment cache. One entry per (loss_fn, scheduler,
+# params, StreamConfig, lr, unroll, eval_fn, history_chunk): the entry's
+# jitted wrapper then compiles ONE executable per horizon shape it is
+# called at (the segment length L arrives via `keys`, never via the
+# key). The serving layer's executable tiers (DESIGN.md §13) are exactly
+# this contract: each occupancy tier B is its own cache entry (B lives
+# in `cfg.batch`), each horizon tier L its own XLA compile under that
+# entry — so a tiered service, the simulator, and a test with matching
+# shapes all share executables instead of re-tracing.
+@functools.lru_cache(maxsize=32)
+def fused_segment(loss_fn: Callable, sched_name: str, sc, mob, ch, prm,
+                  cfg: StreamConfig, lr: float, unroll: int,
+                  eval_fn: Optional[Callable] = None,
+                  history_chunk: int = 1):
+    """Jitted fused-rollout segment, cached across callers (per-call jit
+    wrappers would re-trace every invocation). Callers normalize
+    `cfg.n_rounds` to 0 — the segment's length comes from the `keys`
+    argument, so runs that differ only in total round count share one
+    cache entry (and one compiled program when their segment lengths
+    match). `eval_fn` (in-scan eval) joins the cache key; the rounds it
+    fires on arrive as the `ev` array argument."""
+    from repro.core.baselines import get_scheduler
+    sched = get_scheduler(sched_name)
+
+    @jax.jit
+    def seg(carry, keys, sel, mb_u, shards, steps, active, ev):
+        return fused_rollout(keys, sel, mb_u, sched, sc, mob, ch, prm,
+                             cfg, loss_fn, shards, carry, lr=lr,
+                             steps=steps, active=active, eval_fn=eval_fn,
+                             eval_mask=ev, unroll=unroll,
+                             history_chunk=history_chunk)
+
+    return seg

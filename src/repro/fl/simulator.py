@@ -51,7 +51,7 @@ from repro.core.scheduler import RolloutCarry
 from repro.core.streaming import (StreamConfig, round_keys,
                                   stream_rounds)
 from repro.fl.engine import (ClientShards, fedavg_apply, fused_rollout,
-                             init_carry)
+                             fused_segment, init_carry)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,29 +116,11 @@ def _apply(lr: float):
         params, grads, mask, weights, lr=lr)[0])
 
 
-@functools.lru_cache(maxsize=32)
-def _fused_segment(loss_fn: Callable, sched_name: str, sc, mob, ch, prm,
-                   cfg: StreamConfig, lr: float, unroll: int,
-                   eval_fn: Callable | None = None,
-                   history_chunk: int = 1):
-    """Jitted fused-rollout segment, cached across `run_fl` calls (the
-    per-call jit wrappers would otherwise re-trace every invocation).
-    Callers normalize `cfg.n_rounds` to 0 — the segment's length comes
-    from the `keys` argument, so runs that differ only in total round
-    count share one cache entry (and one compiled program when their
-    segment lengths match). `eval_fn` (in-scan eval) joins the cache
-    key; the rounds it fires on arrive as the `ev` array argument."""
-    sched = get_scheduler(sched_name)
-
-    @jax.jit
-    def seg(carry, keys, sel, mb_u, shards, steps, active, ev):
-        return fused_rollout(keys, sel, mb_u, sched, sc, mob, ch, prm,
-                             cfg, loss_fn, shards, carry, lr=lr,
-                             steps=steps, active=active, eval_fn=eval_fn,
-                             eval_mask=ev, unroll=unroll,
-                             history_chunk=history_chunk)
-
-    return seg
+# The jitted fused-rollout segment cache now lives in the engine
+# (`repro.fl.engine.fused_segment` — the tier-keyed contract the serving
+# layer's executable ladder builds on); this alias keeps the simulator's
+# historical import surface.
+_fused_segment = fused_segment
 
 
 def run_fl(key: jax.Array, params, loss_fn: Callable,

@@ -11,9 +11,27 @@ configurable batching window into the `[B]` cell axis of ONE compiled
 fused program (`repro.fl.engine.fused_rollout` via the simulator's
 lru-cached jitted segment) and slices each client's results back out.
 
+Cost is proportional to *requested* work, not padded work: instead of
+ONE `[L, B]` executable that pads every request to the worst-case
+horizon and occupancy, the service compiles a small ladder of tiers —
+horizons `ServeConfig.tiers` x occupancy buckets
+`ServeConfig.batch_tiers` — and routes each window's batch to the
+smallest tier that fits its max `n_rounds` and its request count
+(`warmup()` pays each trace once). A 5-round request on an L=64 single
+program burns ~92% of its compute on inactive no-op rounds; on an L=8
+tier it burns ~37%. `ServeMetrics.pad_frac_rounds`/`pad_frac_cells` and
+per-tier hit counts make the saving observable, not inferred.
+
+Session state is bounded, not an unbounded host dict of device arrays:
+`SessionStore` keeps at most `ServeConfig.max_sessions` sessions
+device-resident (LRU), spilling cold `RolloutCarry`s to host numpy
+(device->host, `checkpoint/np_ckpt`-style) and restoring them bitwise on
+the session's next request — 10^4+ sessions no longer pin device memory.
+
 Exactness contract: a packed cell is bit-for-bit the same request run
-alone at B = 1. Three pieces make that hold (pinned in
-`tests/test_serve.py`):
+alone at B = 1 — at ANY tier (the tier only changes how much padding is
+computed-and-discarded around it). Three pieces make that hold (pinned
+in `tests/test_serve.py`):
 
   per-cell keys      the packed program's `keys [L, B]` gives every cell
                      its own request's round-key column; `fleet_round`
@@ -45,6 +63,7 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+import collections
 import concurrent.futures
 import dataclasses
 import functools
@@ -52,7 +71,8 @@ import json
 import sys
 import time
 import zlib
-from typing import Dict, List, Optional, Sequence
+from typing import (Any, Dict, Iterator, List, Optional, Sequence, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
@@ -64,25 +84,42 @@ from repro.core.lyapunov import VedsParams
 from repro.core.scenario import ScenarioParams
 from repro.core.scheduler import RolloutCarry
 from repro.core.streaming import StreamConfig, pack_cells, unpack_cell
-from repro.fl.engine import ClientShards, init_carry
-# the simulator's lru-cached jitted fused segment IS the server's
-# compiled program: sharing it means a service and a run_fl call with
-# matching shapes share one executable
-from repro.fl.simulator import _fused_segment
+# the engine's tier-keyed segment cache IS the server's compiled-program
+# ladder: sharing it means a service, the simulator, and a test with
+# matching shapes share one executable per (occupancy entry, horizon)
+from repro.fl.engine import ClientShards, fused_segment, init_carry
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    """Static service configuration (fixes the ONE compiled shape).
+    """Static service configuration (fixes the compiled tier ladder).
 
-      batch        B: packed cell slots per dispatch
+      batch        B: max packed cell slots per dispatch
       max_rounds   L: compiled round horizon; requests with fewer rounds
-                   pad with inactive tail rounds, more are rejected
+                   pad with inactive tail rounds, more are rejected.
+                   Ignored when `tiers` is set (the ladder's max wins)
+      tiers        optional ascending horizon ladder, e.g. (8, 32, 128):
+                   each batch routes to the smallest horizon >= its max
+                   `n_rounds`, so short requests stop paying for the
+                   worst case's padding. None = the single `max_rounds`
+                   horizon (the PR-7 behavior)
+      batch_tiers  optional ascending occupancy ladder (max must equal
+                   `batch`): each batch routes to the smallest bucket
+                   >= its request count. None = powers of two up to
+                   `batch` when `tiers` is set, else the single full
+                   `batch`
+      max_sessions optional bound on DEVICE-resident sessions: beyond
+                   it the LRU session's carry spills to host numpy and
+                   restores bitwise on its next request. None = every
+                   session stays on device (the PR-7 behavior)
       window_s     batching window: after the first request of a batch
                    arrives, how long the server waits for more
     """
     batch: int = 4
     max_rounds: int = 4
+    tiers: Optional[Tuple[int, ...]] = None
+    batch_tiers: Optional[Tuple[int, ...]] = None
+    max_sessions: Optional[int] = None
     window_s: float = 0.002
     scheduler: str = "madca"
     n_sov: int = 4
@@ -99,6 +136,30 @@ class ServeConfig:
     V: float = 0.2
     q_bits: float = 1e7
     seed: int = 0
+
+    @property
+    def horizons(self) -> Tuple[int, ...]:
+        """The ascending horizon ladder (a single rung without tiers)."""
+        if self.tiers is None:
+            return (int(self.max_rounds),)
+        return tuple(sorted({int(t) for t in self.tiers}))
+
+    @property
+    def occupancies(self) -> Tuple[int, ...]:
+        """The ascending occupancy ladder. Defaults to powers of two up
+        to `batch` when horizon tiers are on (partial windows then pay
+        for their bucket, not for B), else the single full `batch`."""
+        B = int(self.batch)
+        if self.batch_tiers is not None:
+            return tuple(sorted({int(b) for b in self.batch_tiers}))
+        if self.tiers is None:
+            return (B,)
+        ladder = []
+        b = 1
+        while b < B:
+            ladder.append(b)
+            b *= 2
+        return tuple(ladder) + (B,)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,6 +180,7 @@ class ServeResponse:
     success: np.ndarray          # [R, S] bool upload-success masks
     n_success: np.ndarray        # [R]
     loss: np.ndarray             # [R] weighted mean local training loss
+    tier: str = ""               # "L{L}xB{B}" executable that served it
     queue_wait_s: float = 0.0
     compute_s: float = 0.0
     total_s: float = 0.0
@@ -198,15 +260,19 @@ def _padded_draws(R: int, L: int, n_clients: int, n_sov: int,
 
 
 @jax.jit
-def _assemble(carries, cols):
+def _assemble(carries, cols, actives):
     """One fused dispatch for batch assembly: pack the session carries
     along the cell axis and stack the per-request draw columns into the
-    program's `[L, B, ...]` inputs."""
+    tier's `[L, B_tier, ...]` inputs. The caller pads every list to the
+    tier occupancy on the host (replicas of slot 0, all-inactive active
+    columns), so the trace is keyed by the tier's (L, B) shapes alone —
+    occupancy changes within a bucket NEVER retrace, and `warmup()`'s
+    single-request rung covers the only trace each tier ever needs."""
     carry = pack_cells(carries)
     keys = jnp.stack([c[0] for c in cols], axis=1)           # [L, B]
     sel = jnp.stack([c[1] for c in cols], axis=1)            # [L, B, S]
     mb_u = jnp.stack([c[2] for c in cols], axis=1)           # [L, B, S, bs]
-    active = jnp.stack([c[3] for c in cols], axis=1)         # [L, B]
+    active = jnp.stack(actives, axis=1)                      # [L, B]
     return carry, keys, sel, mb_u, active
 
 
@@ -223,7 +289,10 @@ def _pct(xs: Sequence[float], q: float) -> float:
 
 @dataclasses.dataclass
 class ServeMetrics:
-    """Per-request latency decomposition + batch occupancy counters."""
+    """Per-request latency decomposition + batch occupancy counters +
+    padding/tier accounting (what fraction of the computed round-slots
+    and cell slots was padding, and which tier served each dispatch) +
+    session spill/restore counts."""
     queue_wait_s: List[float] = dataclasses.field(default_factory=list)
     compute_s: List[float] = dataclasses.field(default_factory=list)
     total_s: List[float] = dataclasses.field(default_factory=list)
@@ -231,6 +300,24 @@ class ServeMetrics:
     occupancy: List[int] = dataclasses.field(default_factory=list)
     t_first: Optional[float] = None
     t_last: Optional[float] = None
+    rounds_active: int = 0       # requested rounds over real cells
+    rounds_computed: int = 0     # L_tier x real cells: round-slots paid
+    cells_active: int = 0        # real cells packed
+    cells_computed: int = 0      # B_tier per dispatch: cell slots paid
+    tier_hits: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: collections.defaultdict(int))
+    n_spills: int = 0            # session carries spilled device->host
+    n_restores: int = 0          # spilled carries restored host->device
+
+    def observe_dispatch(self, reqs: Sequence["ServeRequest"], L: int,
+                         B: int) -> None:
+        """Account one packed dispatch's padding against the tier
+        (L, B) that served it."""
+        self.rounds_active += sum(int(r.n_rounds) for r in reqs)
+        self.rounds_computed += L * len(reqs)
+        self.cells_active += len(reqs)
+        self.cells_computed += B
+        self.tier_hits[f"L{L}xB{B}"] += 1
 
     def observe_batch(self, reqs: Sequence[ServeRequest],
                       t_submit: Sequence[float], t_start: float,
@@ -266,11 +353,120 @@ class ServeMetrics:
             "rounds_per_s": sum(self.rounds) / wall,
             "mean_occupancy": float(np.mean(self.occupancy))
             if self.occupancy else float("nan"),
+            # padding actually paid for: fraction of real cells'
+            # computed round-slots that were inactive tail rounds, and
+            # fraction of computed cell slots that were inactive
+            # replicas (both 0 in a perfectly-fitted tier)
+            "pad_frac_rounds": 1.0 - self.rounds_active
+            / self.rounds_computed if self.rounds_computed
+            else float("nan"),
+            "pad_frac_cells": 1.0 - self.cells_active
+            / self.cells_computed if self.cells_computed
+            else float("nan"),
+            "tier_hits": dict(self.tier_hits),
+            "n_spills": self.n_spills,
+            "n_restores": self.n_restores,
         }
 
 
+class SessionStore:
+    """Bounded session KV-cache: at most `max_sessions` carries stay
+    device-resident (LRU); colder sessions spill to host numpy and
+    restore bitwise on their next touch.
+
+    The PR-7 cache was a plain host dict of device arrays — every
+    session ever seen pinned its `RolloutCarry` (FleetState incl. the
+    warm `p4_tab`, params, opt_state) in device memory for the process
+    lifetime. Here the device working set is flat in session count:
+    `get`/`put` move the session to the LRU front; overflowing carries
+    are flattened leaf-by-leaf to numpy (one device->host transfer per
+    leaf, `checkpoint/np_ckpt`-style) and re-uploaded with identical
+    dtypes on restore, so an evict->restore roundtrip is bitwise — a
+    spilled session's next request behaves exactly as if it had stayed
+    hot (pinned in `tests/test_serve.py`). `max_sessions=None` keeps
+    every session on device (the PR-7 behavior). Mapping-style access
+    (`store[s]`, `s in store`, `iter`, `pop`) spans hot and spilled
+    sessions alike.
+
+    Not thread-safe by itself: the service's batches are serialized
+    (BatchServer's one-thread executor), which is also what makes the
+    LRU order meaningful.
+    """
+
+    def __init__(self, max_sessions: Optional[int] = None,
+                 metrics: Optional[ServeMetrics] = None):
+        if max_sessions is not None and int(max_sessions) < 1:
+            raise ValueError("max_sessions must be >= 1 (or None)")
+        self.max_sessions = (None if max_sessions is None
+                             else int(max_sessions))
+        self.metrics = metrics
+        self._hot: "collections.OrderedDict[str, RolloutCarry]" = \
+            collections.OrderedDict()
+        self._spilled: Dict[str, Any] = {}
+
+    @property
+    def n_device(self) -> int:
+        """Sessions currently holding device memory."""
+        return len(self._hot)
+
+    @property
+    def n_spilled(self) -> int:
+        return len(self._spilled)
+
+    def __len__(self) -> int:
+        return len(self._hot) + len(self._spilled)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(list(self._hot) + list(self._spilled))
+
+    def __contains__(self, session: str) -> bool:
+        return session in self._hot or session in self._spilled
+
+    def get(self, session: str) -> Optional[RolloutCarry]:
+        """The session's device-resident carry (restored from a spill if
+        needed), refreshed to most-recently-used; None if unknown."""
+        if session in self._hot:
+            self._hot.move_to_end(session)
+            return self._hot[session]
+        host = self._spilled.pop(session, None)
+        if host is None:
+            return None
+        carry = jax.tree.map(jnp.asarray, host)
+        if self.metrics is not None:
+            self.metrics.n_restores += 1
+        self.put(session, carry)
+        return carry
+
+    def put(self, session: str, carry: RolloutCarry) -> None:
+        """Store/refresh the session at the LRU front, spilling the
+        least-recently-used carries past `max_sessions` to host."""
+        self._spilled.pop(session, None)
+        self._hot[session] = carry
+        self._hot.move_to_end(session)
+        while (self.max_sessions is not None
+               and len(self._hot) > self.max_sessions):
+            cold, c = self._hot.popitem(last=False)
+            self._spilled[cold] = jax.tree.map(np.asarray, c)
+            if self.metrics is not None:
+                self.metrics.n_spills += 1
+
+    def pop(self, session: str, default=None):
+        if session in self._hot:
+            return self._hot.pop(session)
+        return self._spilled.pop(session, default)
+
+    def __getitem__(self, session: str) -> RolloutCarry:
+        carry = self.get(session)
+        if carry is None:
+            raise KeyError(session)
+        return carry
+
+    def __setitem__(self, session: str, carry: RolloutCarry) -> None:
+        self.put(session, carry)
+
+
 class SchedulingService:
-    """The packing core: sessions, the compiled program, `run_batch`.
+    """The packing core: sessions, the compiled tier ladder, `run_batch`.
 
     Synchronous and event-loop-free so it is directly testable; the
     asyncio front-end (`BatchServer`) owns windows and futures. A custom
@@ -283,6 +479,12 @@ class SchedulingService:
         self.cfg = cfg
         if int(cfg.batch) < 1 or int(cfg.max_rounds) < 1:
             raise ValueError("batch and max_rounds must be >= 1")
+        if cfg.horizons[0] < 1:
+            raise ValueError(f"tiers must be >= 1, got {cfg.tiers}")
+        if cfg.occupancies[0] < 1 or cfg.occupancies[-1] != int(cfg.batch):
+            raise ValueError(f"batch_tiers must be within 1..batch and "
+                             f"top out at batch={cfg.batch}, got "
+                             f"{cfg.batch_tiers}")
         self.mob = ManhattanParams()
         self.ch = ChannelParams()
         prm_kw = {} if cfg.ipm_iters is None else \
@@ -303,15 +505,25 @@ class SchedulingService:
         self._stream = StreamConfig(n_rounds=0, batch=int(cfg.batch),
                                     carry_queues=cfg.carry_queues,
                                     n_fleet=cfg.n_fleet)
-        self._step = _fused_segment(loss_fn, cfg.scheduler, self.sc,
-                                    self.mob, self.ch, self.prm,
-                                    self._stream, cfg.lr, 1, None, 1)
-        self.sessions: Dict[str, RolloutCarry] = {}
+        # one segment-cache entry per occupancy tier (B lives in the
+        # StreamConfig key); each horizon tier then compiles one
+        # executable under its entry on first dispatch (warmup() pays
+        # every (L, B) trace up front)
+        self._seg = {
+            b: fused_segment(loss_fn, cfg.scheduler, self.sc, self.mob,
+                             self.ch, self.prm,
+                             dataclasses.replace(self._stream, batch=b),
+                             cfg.lr, 1, None, 1)
+            for b in cfg.occupancies}
         self.metrics = ServeMetrics()
-        L = int(cfg.max_rounds)
-        self._steps = jnp.arange(L)
-        self._ev = jnp.zeros((L,), bool)
-        self._off = jnp.zeros((L,), bool)    # padding cells' active col
+        self.sessions = SessionStore(cfg.max_sessions,
+                                     metrics=self.metrics)
+        # per-horizon constants: absolute step ids, the (empty) in-scan
+        # eval mask, and the padding cells' all-inactive active column
+        self._steps = {L: jnp.arange(L) for L in cfg.horizons}
+        self._ev = {L: jnp.zeros((L,), bool) for L in cfg.horizons}
+        self._off = {L: jnp.zeros((L,), bool) for L in cfg.horizons}
+        self._warming = False
         # session creation sits on the serving path (every first-contact
         # request pays it, eagerly ~10x a packed dispatch) — jit it; the
         # warmup session triggers the one-time compile
@@ -322,59 +534,105 @@ class SchedulingService:
     def session_carry(self, session: str) -> RolloutCarry:
         """The session's B=1 carry — persistent fleet (incl. the P4
         warm-start table), model params, optimizer state — created
-        deterministically from (service seed, session id) on first use."""
+        deterministically from (service seed, session id) on first use,
+        restored from a host spill on re-use past `max_sessions`."""
         carry = self.sessions.get(session)
         if carry is None:
             k = jax.random.fold_in(jax.random.key(self.cfg.seed),
                                    zlib.crc32(session.encode()))
             carry = self._init(k)
-            self.sessions[session] = carry
+            self.sessions.put(session, carry)
         return carry
 
-    def warmup(self) -> None:
-        """Compile the packed program outside any timed load."""
-        self.run_batch([ServeRequest("__warmup__",
-                                     n_rounds=int(self.cfg.max_rounds))])
-        self.sessions.pop("__warmup__", None)
+    def route(self, reqs: Sequence[ServeRequest]) -> Tuple[int, int]:
+        """The tier that serves this batch: the smallest horizon >= the
+        batch's max `n_rounds` x the smallest occupancy bucket >= its
+        request count (both ladders validated to cover the range)."""
+        R = max(int(r.n_rounds) for r in reqs)
+        L = next(h for h in self.cfg.horizons if h >= R)
+        B = next(b for b in self.cfg.occupancies if b >= len(reqs))
+        return L, B
 
-    def run_batch(self, reqs: Sequence[ServeRequest]
+    def warmup(self, rounds: Sequence[int] = ()) -> None:
+        """Compile every tier's executable outside any timed load (one
+        trace per (horizon, occupancy) rung); leaves metrics untouched.
+
+        `rounds` hints the expected request round counts: each rung's
+        dispatch only traces the R = L draw column, so a mixed load's
+        R < L draw/pad programs (`_padded_draws`) would otherwise
+        compile inside the first timed window that sees them."""
+        self._warming = True
+        try:
+            for L in self.cfg.horizons:
+                for B in self.cfg.occupancies:
+                    self.run_batch([ServeRequest("__warmup__",
+                                                 n_rounds=L)],
+                                   _tier=(L, B))
+                    self.sessions.pop("__warmup__", None)
+            for R in sorted({int(r) for r in rounds}):
+                for L in self.cfg.horizons:
+                    if R <= L:
+                        _padded_draws(R, L, self.shards.n_clients,
+                                      self.cfg.n_sov,
+                                      self.cfg.batch_size)(0)
+        finally:
+            self._warming = False
+
+    def run_batch(self, reqs: Sequence[ServeRequest], *,
+                  _tier: Optional[Tuple[int, int]] = None
                   ) -> List[ServeResponse]:
-        """Pack up to B requests into the cell axis of ONE dispatch of
-        the compiled fused program and slice responses back out.
+        """Pack the requests into the cell axis of ONE dispatch of the
+        smallest fitting tier's executable and slice responses back out.
 
-        Ragged batches pad on both axes: occupancy < B fills the spare
-        cell slots with a replica of the first session under an
-        all-inactive column, and R_b < L rounds pad with inactive tail
-        rounds — padding is computed and discarded, never perturbing a
-        real cell. Each session's refreshed carry is scattered back to
-        the store before responses return."""
+        Ragged batches pad on both axes of their tier: occupancy < B_t
+        fills the spare cell slots with a replica of the first session
+        under an all-inactive column, and R_b < L_t rounds pad with
+        inactive tail rounds — padding is computed and discarded, never
+        perturbing a real cell. Horizon routing and padding are
+        bitwise-inert at any L (L is only the scan trip count);
+        occupancy has an XLA boundary: B > 1 executables fuse/tile
+        differently than the B = 1 program on CPU and per-cell float
+        bits can drift from solo at large shapes (present since the
+        first single-B=8 executable; see DESIGN.md §13). Every
+        executable is itself deterministic — an identical dispatch
+        sequence replays to identical bits at any B — and co-batched
+        neighbors/padding never perturb a cell within one executable.
+        Each session's refreshed carry is scattered back to the
+        (bounded) store before responses return."""
         cfg = self.cfg
-        B, L, S = int(cfg.batch), int(cfg.max_rounds), cfg.n_sov
+        S = cfg.n_sov
+        max_B, max_L = cfg.occupancies[-1], cfg.horizons[-1]
         reqs = list(reqs)
-        if not 0 < len(reqs) <= B:
-            raise ValueError(f"{len(reqs)} requests for {B} cell slots")
+        if not 0 < len(reqs) <= max_B:
+            raise ValueError(f"{len(reqs)} requests for {max_B} cell "
+                             "slots")
         if len({r.session for r in reqs}) != len(reqs):
             raise ValueError("duplicate sessions in one batch: packed "
                              "cells would race on one session's state")
         for r in reqs:
-            if not 0 < int(r.n_rounds) <= L:
+            if not 0 < int(r.n_rounds) <= max_L:
                 raise ValueError(f"n_rounds={r.n_rounds} outside the "
-                                 f"compiled horizon 1..{L}")
+                                 f"compiled horizon 1..{max_L}")
+        L, B = self.route(reqs) if _tier is None else _tier
         carries = [self.session_carry(r.session) for r in reqs]
         cols = [_padded_draws(int(r.n_rounds), L, self.shards.n_clients,
                               S, cfg.batch_size)(int(r.seed))
                 for r in reqs]
+        # pad to the tier occupancy HERE, on the host (replicas of slot
+        # 0 under all-inactive columns): `_assemble` then always traces
+        # at arity B, so a window of any occupancy reuses the rung's one
+        # warmed trace instead of compiling per occupancy mid-load
         n_pad = B - len(reqs)
-        if n_pad:
-            carries = carries + [carries[0]] * n_pad
-            cols = cols + [(cols[0][0], cols[0][1], cols[0][2],
-                            self._off)] * n_pad
-        carry, keys, sel, mb_u, active = _assemble(tuple(carries),
-                                                   tuple(cols))
-        res = self._step(carry, keys, sel, mb_u, self.shards,
-                         self._steps, active, self._ev)
-        # always split all B cells (padding slices are lazy views): a
-        # static arity means occupancy changes never re-trace
+        actives = [c[3] for c in cols] + [self._off[L]] * n_pad
+        carries = carries + [carries[0]] * n_pad
+        cols = cols + [cols[0]] * n_pad
+        carry, keys, sel, mb_u, active = _assemble(
+            tuple(carries), tuple(cols), tuple(actives))
+        res = self._seg[B](carry, keys, sel, mb_u, self.shards,
+                           self._steps[L], active, self._ev[L])
+        # always split the tier's full B cells (padding slices are lazy
+        # views): a static per-tier arity means occupancy changes within
+        # a bucket never re-trace
         fleets = _split_cells(res.fleet, B)
         params = _split_cells(res.params, B)
         opts = (None,) * B if res.opt_state is None else \
@@ -385,12 +643,15 @@ class SchedulingService:
         loss = np.asarray(res.loss)
         out = []
         for b, r in enumerate(reqs):
-            self.sessions[r.session] = RolloutCarry(
-                sched=fleets[b], params=params[b], opt_state=opts[b])
+            self.sessions.put(r.session, RolloutCarry(
+                sched=fleets[b], params=params[b], opt_state=opts[b]))
             R = int(r.n_rounds)
             out.append(ServeResponse(
                 session=r.session, n_rounds=R, success=succ[:R, b],
-                n_success=n_succ[:R, b], loss=loss[:R, b]))
+                n_success=n_succ[:R, b], loss=loss[:R, b],
+                tier=f"L{L}xB{B}"))
+        if not self._warming:
+            self.metrics.observe_dispatch(reqs, L, B)
         return out
 
 
@@ -402,7 +663,14 @@ class BatchServer:
     (up to `max_batch`), then executes the packed dispatch on a
     single-thread executor — off the event loop, so arrivals keep
     flowing during compute, and serialized, so two in-flight batches can
-    never race on one session's state."""
+    never race on one session's state.
+
+    Deferral fairness: a request sharing a session with one already in
+    the forming batch is deferred (sessions are sequential by contract),
+    but deferred requests seed the NEXT batch FIFO-first, ahead of any
+    newer arrivals — a session whose requests keep coming can be
+    deferred at most one window, never starved by fresh traffic
+    (regression-pinned in `tests/test_serve.py`)."""
 
     def __init__(self, service: SchedulingService, *,
                  window_s: Optional[float] = None,
@@ -436,16 +704,34 @@ class BatchServer:
 
     async def _run(self) -> None:
         loop = asyncio.get_running_loop()
+        deferred: List = []       # FIFO of session-conflicted holdovers
+        stopping = False          # sentinel seen: drain, take no more
         while True:
-            item = await self._queue.get()
-            if item is None:
-                return
-            batch = [item]
-            sessions = {item[0].session}
-            deferred = []
+            # deferred requests seed the batch FIRST, in arrival order —
+            # a duplicate-session request is never starved behind newer
+            # traffic, it waits exactly the batches its own session's
+            # predecessors occupy (plus bucket-full overflow)
+            batch: List = []
+            sessions = set()
+            keep: List = []
+            for it in deferred:
+                if (len(batch) < self.max_batch
+                        and it[0].session not in sessions):
+                    sessions.add(it[0].session)
+                    batch.append(it)
+                else:
+                    keep.append(it)
+            deferred = keep
+            if not batch:
+                if stopping:
+                    return
+                item = await self._queue.get()
+                if item is None:
+                    return
+                batch = [item]
+                sessions = {item[0].session}
             deadline = loop.time() + self.window_s
-            stop = False
-            while len(batch) < self.max_batch:
+            while not stopping and len(batch) < self.max_batch:
                 timeout = deadline - loop.time()
                 try:
                     nxt = (self._queue.get_nowait() if timeout <= 0 else
@@ -454,22 +740,19 @@ class BatchServer:
                 except (asyncio.QueueEmpty, asyncio.TimeoutError):
                     break
                 if nxt is None:
-                    stop = True
+                    # drain mode: finish this batch, then keep looping
+                    # on the deferred FIFO until it is empty — a stop
+                    # never abandons a deferred request's future
+                    stopping = True
                     break
                 if nxt[0].session in sessions:
                     # a session's requests are sequential by contract
                     # (each resumes the state the previous one left) —
-                    # defer the duplicate to a later batch
+                    # defer the duplicate to the NEXT batch's front
                     deferred.append(nxt)
                     continue
                 sessions.add(nxt[0].session)
                 batch.append(nxt)
-            # deferred items go back BEFORE any re-enqueued sentinel, so
-            # a stop never abandons a deferred request's future
-            for d in deferred:
-                self._queue.put_nowait(d)
-            if stop:
-                self._queue.put_nowait(None)
             reqs = [b[0] for b in batch]
             t_start = time.perf_counter()
             try:
@@ -488,21 +771,36 @@ class BatchServer:
                 for _, fut, _ in batch:
                     if not fut.done():
                         fut.set_exception(e)
-            # a seen stop sentinel was re-enqueued behind any deferred
-            # items: keep draining until it comes back around
+
+
+def _rounds_of(n_rounds: Union[int, Sequence[int]], i: int) -> int:
+    """A request's round count under a mixed-`n_rounds` load: an int is
+    every request's count; a sequence is cycled deterministically by
+    request index — every client's i-th request draws `seq[i % len]`,
+    so the load moves through phases of like-sized work (the job-type
+    mix tier routing can exploit; cycling per (client + index) instead
+    would put a long request in nearly every window and degrade all
+    horizon routing to the max tier)."""
+    if isinstance(n_rounds, int):
+        return n_rounds
+    seq = list(n_rounds)
+    return int(seq[i % len(seq)])
 
 
 async def closed_loop_load(server: BatchServer, *, n_clients: int,
-                           n_requests: int, n_rounds: int,
+                           n_requests: int,
+                           n_rounds: Union[int, Sequence[int]],
                            seed: int = 0) -> List[ServeResponse]:
     """Saturating load: every client keeps exactly one request in flight
     (submits the next the moment its response lands). This is the load
-    the batched-vs-sequential rounds/s acceptance is measured under."""
+    the batched-vs-sequential rounds/s acceptance is measured under.
+    `n_rounds` may be a sequence — a deterministic mixed-round-count
+    load, the tiered-routing workload."""
     async def client(c: int) -> List[ServeResponse]:
         out = []
         for i in range(n_requests):
             out.append(await server.submit(ServeRequest(
-                session=f"client-{c}", n_rounds=n_rounds,
+                session=f"client-{c}", n_rounds=_rounds_of(n_rounds, i),
                 seed=seed + 1000 * c + i)))
         return out
 
@@ -511,13 +809,15 @@ async def closed_loop_load(server: BatchServer, *, n_clients: int,
 
 
 async def poisson_load(server: BatchServer, *, n_clients: int,
-                       rate_hz: float, n_requests: int, n_rounds: int,
+                       rate_hz: float, n_requests: int,
+                       n_rounds: Union[int, Sequence[int]],
                        seed: int = 0) -> List[ServeResponse]:
     """Open-loop Poisson arrivals: each client draws exponential
     inter-arrival gaps at `rate_hz / n_clients`, so the aggregate is a
     Poisson process at `rate_hz` requests/s. Latency under this load —
     not the saturating closed loop — is what the batching-window
-    tail-latency tradeoff is measured on."""
+    tail-latency tradeoff is measured on. `n_rounds` may be a sequence
+    (deterministic mixed round counts, as for `closed_loop_load`)."""
     gap = n_clients / float(rate_hz)
 
     async def client(c: int) -> List[ServeResponse]:
@@ -526,7 +826,7 @@ async def poisson_load(server: BatchServer, *, n_clients: int,
         for i in range(n_requests):
             await asyncio.sleep(float(rng.exponential(gap)))
             out.append(await server.submit(ServeRequest(
-                session=f"client-{c}", n_rounds=n_rounds,
+                session=f"client-{c}", n_rounds=_rounds_of(n_rounds, i),
                 seed=seed + 1000 * c + i)))
         return out
 
@@ -535,17 +835,20 @@ async def poisson_load(server: BatchServer, *, n_clients: int,
 
 
 def drive(cfg: ServeConfig, *, n_clients: int = 8, n_requests: int = 4,
-          n_rounds: Optional[int] = None, rate_hz: float = 0.0,
-          window_s: Optional[float] = None, baseline: bool = True,
-          seed: int = 0) -> Dict[str, object]:
+          n_rounds: Union[int, Sequence[int], None] = None,
+          rate_hz: float = 0.0, window_s: Optional[float] = None,
+          baseline: bool = True, seed: int = 0) -> Dict[str, object]:
     """Build a service, drive it under synthetic load, and return the
     metrics summary — plus the sequential per-request baseline (a
     `batch=1` service dispatching every request alone, the B=1 lower
-    bound) and the aggregate rounds/s speedup over it."""
-    n_rounds = int(cfg.max_rounds if n_rounds is None else n_rounds)
+    bound) and the aggregate rounds/s speedup over it. `n_rounds` may be
+    a sequence for a mixed-round-count load (the tiered workload)."""
+    if n_rounds is None:
+        n_rounds = cfg.horizons[-1]
 
     def load(service: SchedulingService, w: float, mb: int):
-        service.warmup()
+        service.warmup(rounds=(n_rounds,) if isinstance(n_rounds, int)
+                       else n_rounds)
 
         async def go():
             async with BatchServer(service, window_s=w,
@@ -567,7 +870,10 @@ def drive(cfg: ServeConfig, *, n_clients: int = 8, n_requests: int = 4,
     out: Dict[str, object] = {
         "batched": load(SchedulingService(cfg), w, int(cfg.batch))}
     if baseline:
-        seq = SchedulingService(dataclasses.replace(cfg, batch=1))
+        # the B=1 lower bound keeps the horizon ladder but has no
+        # occupancy to bucket (an explicit batch_tiers would not fit)
+        seq = SchedulingService(dataclasses.replace(cfg, batch=1,
+                                                    batch_tiers=None))
         out["sequential"] = load(seq, 0.0, 1)
         out["speedup"] = (out["batched"]["rounds_per_s"]
                           / out["sequential"]["rounds_per_s"])
@@ -581,6 +887,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="B: packed cell slots per dispatch")
     ap.add_argument("--max-rounds", type=int, default=4,
                     help="L: compiled round horizon per dispatch")
+    ap.add_argument("--tiers", type=str, default=None,
+                    help="comma-separated horizon ladder (e.g. 8,32,128)"
+                         ": route each batch to the smallest tier that "
+                         "fits instead of padding to one max horizon")
+    ap.add_argument("--max-sessions", type=int, default=None,
+                    help="bound on device-resident sessions (LRU spill "
+                         "to host beyond it; default unbounded)")
     ap.add_argument("--window-ms", type=float, default=2.0,
                     help="batching window after the first request")
     ap.add_argument("--clients", type=int, default=8)
@@ -601,7 +914,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="emit one JSON line instead of text")
     args = ap.parse_args(argv)
 
+    tiers = (None if args.tiers is None else
+             tuple(int(t) for t in args.tiers.split(",")))
     cfg = ServeConfig(batch=args.batch, max_rounds=args.max_rounds,
+                      tiers=tiers, max_sessions=args.max_sessions,
                       window_s=1e-3 * args.window_ms,
                       scheduler=args.scheduler,
                       ipm_warm_iters=args.warm_iters, seed=args.seed)

@@ -23,9 +23,10 @@ import pytest
 from conftest import mark_slow_unless
 
 from repro.core.baselines import SCHEDULERS
+from repro.core.scheduler import RolloutCarry
 from repro.launch.serve import (BatchServer, SchedulingService,
-                                ServeConfig, ServeRequest,
-                                closed_loop_load, drive)
+                                ServeConfig, ServeRequest, SessionStore,
+                                closed_loop_load, drive, poisson_load)
 from repro.launch.serve import main as serve_main
 
 L = 3           # compiled round horizon shared by most tests (one
@@ -126,8 +127,8 @@ def test_repeat_session_rides_warm_p4():
     reqs = {s: [ServeRequest(s, 2, seed=i), ServeRequest(s, 2, seed=i + 7)]
             for i, s in enumerate(("x", "y"))}
     captured = []
-    orig = svc._step
-    svc._step = lambda *a: captured.append(orig(*a)) or captured[-1]
+    orig = svc._seg[2]
+    svc._seg[2] = lambda *a: captured.append(orig(*a)) or captured[-1]
     p1 = svc.run_batch([reqs["x"][0], reqs["y"][0]])
     tab1 = np.asarray(svc.sessions["x"].sched.p4_tab)
     assert not np.array_equal(tab1, tab0), "warm table never updated"
@@ -303,6 +304,301 @@ def test_example_entrypoint_in_process(capsys):
     assert rc == 0
     assert sys.argv == argv_before
     assert "(bit-for-bit): True" in capsys.readouterr().out
+
+
+def _assert_carry_equal(a, b):
+    """Two RolloutCarry pytrees bitwise equal (device or host leaves)."""
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a, b)
+
+
+# ---------------------------------------------------------------------------
+# Horizon/occupancy tiering: routing, exactness across tiers, padding
+# accounting, and the compile-cache contract.
+
+def test_tiered_routing_picks_smallest_tier_and_stays_bitwise():
+    """With a (1, L) horizon ladder and explicit (1, B) occupancy
+    buckets, each batch routes to the smallest rung that fits — and
+    every response, including a session resuming across DIFFERENT tiers,
+    is bit-for-bit the single-tier solo B=1 replay."""
+    kw = dict(tiers=(1, L), batch_tiers=(1, 3))
+    svc = SchedulingService(_cfg(3, **kw))
+    r1 = ServeRequest("a", 1, seed=1)            # -> tier (L=1, B=1)
+    wave = [ServeRequest("a", L, seed=2),        # -> tier (L=3, B=3)
+            ServeRequest("b", 2, seed=3),
+            ServeRequest("c", 1, seed=4)]
+    p1 = svc.run_batch([r1])
+    p2 = svc.run_batch(wave)
+    assert dict(svc.metrics.tier_hits) == {"L1xB1": 1, f"L{L}xB3": 1}
+    # each response records the executable that served it
+    assert p1[0].tier == "L1xB1"
+    assert {r.tier for r in p2} == {f"L{L}xB3"}
+    _, solo = _solo_replay({"a": [r1, wave[0]], "b": [wave[1]],
+                            "c": [wave[2]]})
+    _assert_same(p1[0], solo["a"][0])
+    _assert_same(p2[0], solo["a"][1])
+    _assert_same(p2[1], solo["b"][0])
+    _assert_same(p2[2], solo["c"][0])
+    s = svc.metrics.summary()
+    # dispatch 1: 1/1 active; dispatch 2: (3+2+1)/9 round-slots active
+    assert s["pad_frac_rounds"] == pytest.approx(1 - 7 / 10)
+    assert s["pad_frac_cells"] == 0.0
+    # single-tier accounting of the same load pads everything to [L, B]
+    ref = SchedulingService(_cfg(3))
+    ref.run_batch([r1])
+    ref.run_batch(wave)
+    assert ref.metrics.summary()["pad_frac_rounds"] == \
+        pytest.approx(1 - 7 / 12)
+    assert ref.metrics.summary()["pad_frac_cells"] == \
+        pytest.approx(1 - 4 / 6)
+
+
+def test_tier_ladder_validation():
+    with pytest.raises(ValueError, match="batch_tiers"):
+        SchedulingService(_cfg(3, batch_tiers=(1, 2)))   # max != batch
+    with pytest.raises(ValueError, match="tiers"):
+        SchedulingService(_cfg(3, tiers=(0, 3)))
+    svc = SchedulingService(_cfg(3, tiers=(1, L)))
+    with pytest.raises(ValueError, match="compiled horizon"):
+        svc.run_batch([ServeRequest("s", L + 1)])
+
+
+def test_tier_executables_share_the_engine_segment_cache():
+    """The compile-cache contract (DESIGN.md §13): one segment-cache
+    entry per occupancy tier, shared with ANY caller that builds the
+    same key — two services with the same workload/shape reuse the same
+    jitted segment objects instead of re-tracing."""
+    import dataclasses
+    from repro.fl.engine import fused_segment
+    svc = SchedulingService(_cfg(3, tiers=(1, L), batch_tiers=(1, 3)))
+    assert sorted(svc._seg) == [1, 3]
+    twin = SchedulingService(_cfg(3, tiers=(1, L), batch_tiers=(1, 3)))
+    for b in (1, 3):
+        assert svc._seg[b] is twin._seg[b]
+        assert svc._seg[b] is fused_segment(
+            svc.loss_fn, svc.cfg.scheduler, svc.sc, svc.mob, svc.ch,
+            svc.prm, dataclasses.replace(svc._stream, batch=b),
+            svc.cfg.lr, 1, None, 1)
+
+
+def test_b4_dispatch_is_deterministic_per_executable():
+    """The occupancy-invariance boundary (DESIGN.md §13): B > 1
+    executables may fuse differently from the B=1 program on XLA CPU,
+    so packed bits are only pinned against solo at small shapes and at
+    occupancy 1 — but every executable is deterministic: replaying the
+    identical dispatch sequence on a fresh service reproduces every
+    response bit-for-bit."""
+    reqs = [ServeRequest(f"s{j}", L, seed=j) for j in range(4)]
+    runs = []
+    for _ in range(2):
+        svc = SchedulingService(_cfg(4))
+        runs.append(svc.run_batch(reqs) + svc.run_batch(
+            [ServeRequest(f"s{j}", L - 1, seed=10 + j) for j in range(4)]))
+    for a, b in zip(*runs):
+        assert a.tier == b.tier
+        _assert_same(a, b)
+
+
+def test_pack_cells_pad_to():
+    """`pack_cells(pad_to=)`: spare tier slots are replicas of the first
+    state; padding below the live count is rejected."""
+    from repro.core.streaming import pack_cells, unpack_cell
+    a = {"x": jnp.arange(4.0).reshape(1, 4)}
+    b = {"x": 1.0 + jnp.arange(4.0).reshape(1, 4)}
+    packed = pack_cells([a, b], pad_to=4)
+    assert packed["x"].shape == (4, 4)
+    _assert_carry_equal(unpack_cell(packed, 0), a)
+    _assert_carry_equal(unpack_cell(packed, 1), b)
+    _assert_carry_equal(unpack_cell(packed, 2), a)
+    _assert_carry_equal(unpack_cell(packed, 3), a)
+    with pytest.raises(ValueError, match="pad_to"):
+        pack_cells([a, b], pad_to=1)
+
+
+# ---------------------------------------------------------------------------
+# Bounded session cache: LRU order, spill/restore bitwise, concurrency.
+
+def test_session_store_lru_spill_and_bitwise_restore():
+    """Pure store semantics: the LRU carry past `max_sessions` spills to
+    host numpy; a touch restores it bitwise and re-evicts the new LRU."""
+    def carry(v):
+        return RolloutCarry(sched={"t": jnp.full((2, 3), v)},
+                            params={"w": jnp.full((1, 4), 10.0 * v)},
+                            opt_state=None)
+
+    store = SessionStore(max_sessions=2)
+    vals = {s: carry(float(i)) for i, s in enumerate("abc")}
+    for s in "abc":
+        store.put(s, vals[s])
+    assert (store.n_device, store.n_spilled, len(store)) == (2, 1, 3)
+    assert list(store._hot) == ["b", "c"] and "a" in store
+    # spilled leaves live on host (numpy), hot leaves on device
+    assert isinstance(store._spilled["a"].sched["t"], np.ndarray)
+    got = store.get("a")                    # restore -> evicts b
+    assert isinstance(got.sched["t"], jnp.ndarray)
+    _assert_carry_equal(got, vals["a"])
+    assert list(store._hot) == ["c", "a"] and "b" in store
+    store.get("c")                          # refresh c -> LRU is now a
+    store.put("d", carry(3.0))
+    assert list(store._hot) == ["c", "d"]
+    _assert_carry_equal(store["a"], vals["a"])   # restore via getitem
+    assert store.pop("zzz", None) is None
+    assert store.pop("d") is not None and "d" not in store
+    assert set(store) == {"a", "b", "c"}
+    with pytest.raises(ValueError, match="max_sessions"):
+        SessionStore(max_sessions=0)
+
+
+def test_evicted_session_resumes_bitwise_with_warm_p4():
+    """Evict -> restore roundtrip through real dispatches, on the
+    hardest carry: VEDS with a live warm `p4_tab`. Session x's table
+    updates on its first request, spills to host when y and z arrive,
+    and x's next request — served from the restored carry — responds
+    AND stores bit-for-bit like the never-evicted service."""
+    kw = dict(max_rounds=2, scheduler="veds", n_sov=3, n_opv=2,
+              n_slots=6, ipm_iters=4, ipm_warm_iters=2)
+    reqs = {s: [ServeRequest(s, 2, seed=i), ServeRequest(s, 1, seed=i + 7)]
+            for i, s in enumerate(("x", "y", "z"))}
+    svc = SchedulingService(ServeConfig(batch=1, max_sessions=1, **kw))
+    ref = SchedulingService(ServeConfig(batch=1, **kw))
+    for s in ("x", "y", "z"):
+        svc.run_batch([reqs[s][0]])
+        ref.run_batch([reqs[s][0]])
+    assert svc.sessions.n_device == 1 and svc.sessions.n_spilled == 2
+    tab_hot = np.asarray(ref.sessions["x"].sched.p4_tab)
+    tab_cold = svc.sessions._spilled["x"].sched.p4_tab
+    np.testing.assert_array_equal(tab_cold, tab_hot)
+    got = svc.run_batch([reqs["x"][1]])[0]        # restores x, evicts z
+    want = ref.run_batch([reqs["x"][1]])[0]
+    _assert_same(got, want)
+    _assert_carry_equal(svc.sessions["x"], ref.sessions["x"])
+    assert svc.metrics.n_spills >= 3 and svc.metrics.n_restores == 1
+    assert ref.metrics.n_spills == 0 and ref.metrics.n_restores == 0
+
+
+def test_max_sessions_enforced_under_concurrent_submits():
+    """Device-resident sessions stay bounded (flat in session count)
+    while many concurrent clients hammer the server — every spilled
+    session still answers correctly when it comes back."""
+    svc = SchedulingService(_cfg(3, max_sessions=2))
+    svc.warmup()
+
+    async def load(srv):
+        return await closed_loop_load(srv, n_clients=6, n_requests=2,
+                                      n_rounds=2, seed=3)
+
+    got = _serve(svc, load, window_s=0.01)
+    assert len(got) == 12
+    assert svc.sessions.n_device <= 2
+    assert len(svc.sessions) == 6
+    assert svc.metrics.n_spills >= 4
+    # second-wave responses chained through spill/restore: replay two
+    # sessions' sequences on an UNBOUNDED solo service
+    _, solo = _solo_replay({
+        s: [ServeRequest(s, 2, seed=3 + 1000 * c + i) for i in range(2)]
+        for c, s in [(0, "client-0"), (5, "client-5")]})
+    by_sess = {}
+    for r in got:
+        by_sess.setdefault(r.session, []).append(r)
+    for s in ("client-0", "client-5"):
+        for g, w in zip(by_sess[s], solo[s]):
+            _assert_same(g, w)
+
+
+# ---------------------------------------------------------------------------
+# BatchServer deferral fairness.
+
+def test_deferred_request_is_served_fifo_first_next_batch():
+    """Starvation regression: a deferred duplicate-session request must
+    seed the NEXT batch, ahead of newer arrivals — not re-enter the
+    back of the queue where fresh traffic keeps displacing it."""
+    svc = SchedulingService(_cfg(3))
+    svc.warmup()
+    batches = []
+    orig = svc.run_batch
+    svc.run_batch = lambda reqs: batches.append(
+        [r.session for r in reqs]) or orig(reqs)
+    a1, a2 = ServeRequest("A", 1, seed=1), ServeRequest("A", 1, seed=2)
+    others = [ServeRequest(f"o{i}", 1, seed=3 + i) for i in range(4)]
+
+    async def load(srv):
+        return await asyncio.gather(
+            srv.submit(a1), srv.submit(a2),
+            *(srv.submit(o) for o in others))
+
+    got = _serve(svc, load, window_s=0.25, max_batch=2)
+    # batch 1 takes A#1 + o0 (A#2 deferred); the deferred A#2 must lead
+    # batch 2 — the old tail-requeue would have served o1..o3 first
+    assert batches[0] == ["A", "o0"]
+    assert batches[1][0] == "A"
+    assert [len(b) for b in batches] == [2, 2, 2]
+    _, solo = _solo_replay({"A": [a1, a2],
+                            **{o.session: [o] for o in others}})
+    _assert_same(got[0], solo["A"][0])
+    _assert_same(got[1], solo["A"][1])
+    for o, g in zip(others, got[2:]):
+        _assert_same(g, solo[o.session][0])
+
+
+@pytest.mark.slow
+def test_tiered_routing_sustains_1p3x_on_mixed_poisson_load():
+    """Acceptance, two phases. (1) Throughput at full occupancy: on a
+    mixed n_rounds in {4..64} Poisson load, routing each window to the
+    smallest fitting (horizon x occupancy) tier sustains >= 1.3x the
+    aggregate rounds/s of the single-L=64 service at batch=8. (2)
+    Exactness of horizon routing: the same mixed load served at
+    batch=1 through the full horizon ladder is bit-for-bit the solo
+    single-tier replay for EVERY response — the L axis only changes
+    the scan trip count, never the compiled round program. The B axis
+    is different: B>1 executables fuse/tile differently on XLA CPU and
+    their float bits can drift from B=1 at large shapes (params at
+    L64xB2, virtual queues at B>=4 — pre-existing since the single
+    B=8 executable of the previous PR; DESIGN.md §13), which is why
+    the bitwise sweep pins occupancy 1 while the throughput sweep runs
+    the full B=8 ladder."""
+    mix = (4, 8, 4, 16, 8, 64)            # mostly short, worst case 64
+
+    def run(tiers, batch=8, **cfg_kw):
+        cfg = ServeConfig(batch=batch, max_rounds=64, tiers=tiers,
+                          window_s=2e-3, **cfg_kw)
+        svc = SchedulingService(cfg)
+        svc.warmup(rounds=mix)
+
+        async def go():
+            async with BatchServer(svc) as srv:
+                return await poisson_load(srv, n_clients=8, rate_hz=400.0,
+                                          n_requests=6, n_rounds=mix,
+                                          seed=0)
+
+        resp = asyncio.run(go())
+        return svc.metrics.summary(), resp
+
+    # --- phase 1: throughput, full B=8 occupancy ladder ---
+    tiered, resp = run((8, 16, 64))
+    single, _ = run(None)
+    speedup = tiered["rounds_per_s"] / single["rounds_per_s"]
+    assert speedup >= 1.3, (speedup, tiered, single)
+    assert tiered["pad_frac_rounds"] < single["pad_frac_rounds"]
+    assert len(tiered["tier_hits"]) > 1, tiered
+
+    # --- phase 2: exactness of horizon routing, occupancy pinned at 1 ---
+    exact, resp = run((8, 16, 64), batch=1)
+    assert len(exact["tier_hits"]) > 1, exact
+    assert all(r.tier.endswith("xB1") for r in resp)
+    # replay every session's request sequence on a fresh single-tier
+    # solo B=1 service
+    schedule = {}
+    for r in resp:
+        c = int(r.session.split("-")[1])
+        i = len(schedule.setdefault(r.session, []))
+        schedule[r.session].append(
+            ServeRequest(r.session, r.n_rounds, seed=1000 * c + i))
+    _, solo = _solo_replay(schedule, max_rounds=64)
+    # responses keep per-client submission order, so zip lines up
+    for s, seq in schedule.items():
+        packed = [r for r in resp if r.session == s]
+        for g, w in zip(packed, solo[s]):
+            _assert_same(g, w)
 
 
 @pytest.mark.slow
