@@ -17,7 +17,9 @@ from repro.core.scenario import ScenarioParams, make_round_batch
 
 def time_call(fn: Callable, *args, reps: int = 3) -> float:
     """Median wall time of a jitted call, in microseconds."""
-    fn(*args)  # compile + warmup
+    # compile + warmup must drain before the timed reps start, or the
+    # first rep pays the tail of the async warmup dispatch
+    jax.block_until_ready(fn(*args))
     ts = []
     for _ in range(reps):
         t0 = time.perf_counter()

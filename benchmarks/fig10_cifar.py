@@ -2,6 +2,8 @@
 VEDS vs benchmarks (synthetic substitute dataset; DESIGN.md §8)."""
 from __future__ import annotations
 
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -36,7 +38,10 @@ def run(rounds: int = 25, iid: bool = False, n_train: int = 4000,
     return results
 
 
-def main(csv=True, rounds: int = 30):
+def main(argv=None, csv=True, rounds: int = 30):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=rounds)
+    rounds = ap.parse_args(argv).rounds
     res = run(rounds=rounds, iid=False)
     # the paper's Fig. 10/11 text quotes the *highest achievable* accuracy
     finals = {n: max(h["metric"]) for n, h in res.items()}

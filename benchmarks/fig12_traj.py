@@ -2,6 +2,8 @@
 VEDS vs benchmarks (synthetic kinematic substitute; DESIGN.md §8)."""
 from __future__ import annotations
 
+import argparse
+
 import jax
 import numpy as np
 
@@ -33,7 +35,10 @@ def run(rounds: int = 30,
     return results
 
 
-def main(csv=True, rounds: int = 30):
+def main(argv=None, csv=True, rounds: int = 30):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=rounds)
+    rounds = ap.parse_args(argv).rounds
     res = run(rounds=rounds)
     finals = {n: h["metric"][-1] for n, h in res.items()}
     if csv:

@@ -444,7 +444,12 @@ def serve_tier_sweep(tiers=(2, 4, 8), *, B: int = 8, clients: int = 8,
     }
 
 
-def main(csv=True, smoke=False):
+def main(argv=None, csv=True, smoke=False):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, one JSON line (CI quick lane)")
+    args = ap.parse_args(argv)
+    smoke = smoke or args.smoke
     if smoke:
         rows = []
         us = None
@@ -608,8 +613,4 @@ def main(csv=True, smoke=False):
 
 
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny shapes, one JSON line (CI quick lane)")
-    args = ap.parse_args()
-    main(smoke=args.smoke)
+    main()

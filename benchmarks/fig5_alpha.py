@@ -1,6 +1,8 @@
 """Fig. 5: successful aggregations vs sigmoid parameter alpha (VEDS)."""
 from __future__ import annotations
 
+import argparse
+
 from benchmarks.common import mean_success, time_call
 
 
@@ -18,7 +20,8 @@ def run(rounds: int = 6, alphas=(0.01, 0.1, 0.5, 2.0, 10.0, 100.0)):
     return rows, us
 
 
-def main(csv=True):
+def main(argv=None, csv=True):
+    argparse.ArgumentParser().parse_args(argv)
     rows, us = run()
     best = max(rows, key=lambda r: r[1])
     if csv:

@@ -1,6 +1,8 @@
 """Figs. 8/9: successful aggregations and energy vs the weight V (VEDS)."""
 from __future__ import annotations
 
+import argparse
+
 from benchmarks.common import mean_success, time_call
 
 
@@ -18,7 +20,8 @@ def run(rounds: int = 6, vs=(0.01, 0.1, 0.2, 1.0, 10.0, 100.0)):
     return rows, us
 
 
-def main(csv=True):
+def main(argv=None, csv=True):
+    argparse.ArgumentParser().parse_args(argv)
     rows, us = run()
     mono = all(rows[i][2] <= rows[i + 1][2] + 0.05
                for i in range(len(rows) - 1))

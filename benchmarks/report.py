@@ -54,13 +54,13 @@ def roofline_table(records, mesh):
     return "\n".join(out)
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--mesh", default="pod16x16")
     ap.add_argument("--kind", default="roofline",
                     choices=["roofline", "dryrun"])
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     recs = [r for r in load_all(args.dir)
             if "__iter" not in json.dumps(r.get("arch", ""))]
     if args.kind == "dryrun":

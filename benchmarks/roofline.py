@@ -9,6 +9,8 @@ the useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
 """
 from __future__ import annotations
 
+import argparse
+
 import glob
 import json
 import math
@@ -116,7 +118,8 @@ def table(dirpath: str = "experiments/dryrun", mesh: Optional[str] = None):
     return rows
 
 
-def main(csv: bool = True):
+def main(argv=None, csv: bool = True):
+    argparse.ArgumentParser().parse_args(argv)
     rows = table(mesh="pod16x16")
     if not rows:
         print("roofline,0,no_dryrun_records_found")

@@ -10,23 +10,25 @@ import argparse
 import sys
 
 
-def main() -> int:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
-    args, _ = ap.parse_known_args()
+    args, _ = ap.parse_known_args(argv)
 
     from benchmarks import (fig4_speed, fig5_alpha, fig8_v_weight,
                             fig10_cifar, fig12_traj, roofline)
     jobs = {
-        "fig4_speed": lambda: fig4_speed.main(),
-        "fig5_alpha": lambda: fig5_alpha.main(),
-        "fig8_v_weight": lambda: fig8_v_weight.main(),
+        "fig4_speed": lambda: fig4_speed.main(argv=[]),
+        "fig5_alpha": lambda: fig5_alpha.main(argv=[]),
+        "fig8_v_weight": lambda: fig8_v_weight.main(argv=[]),
         "fig10_cifar": lambda: fig10_cifar.main(
+            argv=[],
             rounds=50 if args.full else 30),
         "fig12_traj": lambda: fig12_traj.main(
+            argv=[],
             rounds=60 if args.full else 20),
-        "roofline": lambda: roofline.main(),
+        "roofline": lambda: roofline.main(argv=[]),
     }
     only = [s for s in args.only.split(",") if s]
     print("name,us_per_call,derived")

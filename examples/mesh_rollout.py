@@ -21,6 +21,8 @@ Run on one device:   PYTHONPATH=src python examples/mesh_rollout.py
 Run on 8 (fake CPU): XLA_FLAGS=--xla_force_host_platform_device_count=8 \
                      PYTHONPATH=src python examples/mesh_rollout.py
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -54,7 +56,12 @@ def make_problem(n_clients=12, dim=8, classes=3):
     return {"w": jnp.zeros((dim, classes))}, loss_fn, data
 
 
-def main(R: int = 20, B: int = 8, batch_size: int = 8):
+def main(argv=None, R: int = 20, B: int = 8, batch_size: int = 8):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=R)
+    ap.add_argument("--cells", type=int, default=B)
+    args = ap.parse_args(argv)
+    R, B = args.rounds, args.cells
     mesh = fleet_mesh()                    # every visible device
     n_dev = mesh.devices.size
     print(f"mesh: {n_dev} device(s) on axis 'data' -> "

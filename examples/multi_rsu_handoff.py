@@ -12,6 +12,8 @@ scan (one XLA dispatch).
 
 Run:  PYTHONPATH=src python examples/multi_rsu_handoff.py
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -25,7 +27,12 @@ from repro.core.scenario import (init_fleet, migrated_fraction, rsu_grid,
 from repro.core.streaming import StreamConfig, stream_rounds
 
 
-def main(B: int = 4, R: int = 30, n_fleet: int = 24):
+def main(argv=None, B: int = 4, R: int = 30, n_fleet: int = 24):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", type=int, default=B)
+    ap.add_argument("--rounds", type=int, default=R)
+    args = ap.parse_args(argv)
+    B, R = args.cells, args.rounds
     mob = ManhattanParams(v_max=15.0)      # fast fleet: frequent handoffs
     ch = ChannelParams()
     prm = VedsParams(alpha=2.0, V=0.2, Q=1e7, slot=0.1)

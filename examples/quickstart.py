@@ -7,6 +7,8 @@ scheduler and prints who got their model uploaded.
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import argparse
+
 import jax
 import numpy as np
 
@@ -19,7 +21,8 @@ from repro.core.scenario import ScenarioParams, make_round_batch
 B = 4  # RSU cells scheduled concurrently
 
 
-def main():
+def main(argv=None):
+    argparse.ArgumentParser().parse_args(argv)
     mob = ManhattanParams(v_max=10.0)
     ch = ChannelParams()
     prm = VedsParams(alpha=2.0, V=0.2, Q=1e7, slot=0.1)

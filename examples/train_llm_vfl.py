@@ -12,13 +12,12 @@ import sys
 from repro.launch.train import main as train_main
 
 
-def main():
-    argv = ["--arch", "qwen3-32b", "--rounds", "50", "--devices", "8",
+def main(argv=None):
+    base = ["--arch", "qwen3-32b", "--rounds", "50", "--devices", "8",
             "--vehicles", "4", "--seq", "128", "--batch-per-vehicle", "8",
             "--lr", "0.5"]
-    argv += sys.argv[1:]
-    sys.argv = ["train_llm_vfl"] + argv
-    return train_main()
+    extra = sys.argv[1:] if argv is None else list(argv)
+    return train_main(base + extra)
 
 
 if __name__ == "__main__":

@@ -19,7 +19,7 @@ from repro.models.cnn import cnn_accuracy, cnn_decl, cnn_loss
 from repro.models.module import materialize
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=15)
     ap.add_argument("--scheduler", default="veds")
@@ -35,7 +35,7 @@ def main():
                     help="fused rounds unrolled per scan step (CPU "
                          "while-loop bodies lose intra-op threading; "
                          "unrolling keeps the conv grads multithreaded)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     key = jax.random.key(0)
     x, y = cifar_like_dataset(jax.random.fold_in(key, 1), 4000, args.noise)

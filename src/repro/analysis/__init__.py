@@ -1,0 +1,37 @@
+"""reprolint: compiled-program invariant linter for the fused VFL stack.
+
+A stdlib-`ast` static-analysis pass (no third-party deps, no jax import)
+that machine-checks the invariants the codebase's correctness story
+rests on — one-trace-per-shape jit discipline, the `FLEET_CAST_FIELDS`
+fp32-master dtype contract, honest benchmark timing, entrypoint argv
+hygiene — instead of leaving them to DESIGN.md and reviewer memory.
+
+  PYTHONPATH=src python -m repro.analysis.lint src tests benchmarks examples
+
+Layers (DESIGN.md §14):
+
+  manifest  file loading, module naming, the repo import graph, and the
+            TRACED-SET manifest: every function reachable from a
+            `jax.jit` / `lax.scan` / `vmap` call site via the static
+            call graph (name-devirtualized for `x.solve_round(...)`
+            style method calls)
+  rules     the rule catalogue (`RULES`), each a pure function
+            `(LintContext) -> [Finding]`
+  core      findings, per-line `# reprolint: disable=<rule>`
+            suppressions, the checked-in baseline for grandfathered
+            findings, and the human/JSON reporters
+  lint      the CLI (`main(argv=None)`)
+"""
+from repro.analysis.core import (Baseline, Finding, LintConfig,  # noqa: F401
+                                 suppressed_rules)
+from repro.analysis.manifest import Manifest, load_files  # noqa: F401
+from repro.analysis.rules import RULES  # noqa: F401
+
+
+def __getattr__(name):
+    # lazy: importing the package must not pre-import the CLI module,
+    # or `python -m repro.analysis.lint` trips runpy's double-import check
+    if name == "run_lint":
+        from repro.analysis.lint import run_lint
+        return run_lint
+    raise AttributeError(name)

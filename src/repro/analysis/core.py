@@ -1,0 +1,184 @@
+"""reprolint core: findings, suppressions, baseline, reporters.
+
+Finding identity for baseline matching is (rule, path, scope) — the
+enclosing function's qualified name, not the line number, so a
+grandfathered finding survives unrelated edits above it but a NEW
+violation of the same rule in a DIFFERENT function still fails the
+build. Inline suppressions are per line:
+
+    something_hazardous()  # reprolint: disable=timer-no-block -- why
+
+and should carry the why after `--`; `disable=all` silences every rule
+on that line.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Sequence, Set, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+    rule: str
+    path: str          # repo-relative, posix separators
+    line: int          # 1-indexed
+    scope: str         # qualified enclosing def, or "<module>"
+    message: str
+
+    def key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.scope)
+
+    def to_json(self) -> Dict[str, object]:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "scope": self.scope, "message": self.message}
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: [{self.rule}] {self.scope}: "
+                f"{self.message}")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintConfig:
+    """Static knobs of a lint run (rule thresholds live with the rules).
+
+    hot_modules: path prefixes whose modules carry the dtype-contract's
+    "hot" obligations (rule dtype-contract flags dtype-less literal
+    `jnp.array`/`jnp.asarray` only there — a dtype-less literal in a
+    cold script is noise, in a carry/kernel module it is a silent
+    weak-type/x64 hazard).
+    """
+    hot_modules: Tuple[str, ...] = (
+        "src/repro/core/", "src/repro/fl/", "src/repro/sharding/",
+        "src/repro/channel/", "src/repro/kernels/",
+        "src/repro/launch/serve.py")
+    # fixture snippets are deliberate violations; never lint them as
+    # part of the repo tree
+    exclude: Tuple[str, ...] = ("tests/analysis_fixtures",
+                                ".jax_cache", "__pycache__")
+    # dtype-contract fallbacks, used when the scanned fileset does not
+    # itself define FLEET_CAST_FIELDS / FleetState (e.g. fixture runs);
+    # a repo run parses the live values out of core/streaming.py and
+    # core/scenario.py instead
+    fleet_cast_fields: Tuple[str, ...] = ("p4_tab",)
+    fleet_state_fields: Tuple[str, ...] = (
+        "pos", "dir", "speed", "jitter", "allowance", "energy", "queue",
+        "rsu_xy", "covered", "cell_id", "p4_tab")
+
+
+_DISABLE_RE = re.compile(r"#\s*reprolint:\s*disable=([A-Za-z0-9_\-, ]+)")
+
+
+def suppressed_rules(lines: Sequence[str]) -> Dict[int, Set[str]]:
+    """Per-line inline suppressions: {1-indexed line: {rule ids}}.
+    `all` suppresses every rule on that line."""
+    out: Dict[int, Set[str]] = {}
+    for i, raw in enumerate(lines, start=1):
+        m = _DISABLE_RE.search(raw)
+        if m:
+            # rule ids use single hyphens; `--` starts the why text
+            spec = m.group(1).split("--")[0]
+            out[i] = {r.strip() for r in spec.split(",") if r.strip()}
+    return out
+
+
+def apply_suppressions(findings: List[Finding],
+                       per_file_lines: Dict[str, Sequence[str]]
+                       ) -> Tuple[List[Finding], int]:
+    """Drop findings whose line carries a matching disable comment.
+    Returns (kept, n_suppressed)."""
+    cache: Dict[str, Dict[int, Set[str]]] = {}
+    kept, n_supp = [], 0
+    for f in findings:
+        if f.path not in cache:
+            cache[f.path] = suppressed_rules(per_file_lines.get(f.path, ()))
+        rules = cache[f.path].get(f.line, set())
+        if f.rule in rules or "all" in rules:
+            n_supp += 1
+        else:
+            kept.append(f)
+    return kept, n_supp
+
+
+class Baseline:
+    """Checked-in grandfathered findings (`reprolint_baseline.json`).
+
+    Each entry is {"rule", "path", "scope", "why"} — `why` is mandatory
+    documentation, the linter only matches on the identity triple. An
+    entry absorbs every finding with its key (a grandfathered hazard
+    may surface at several lines of one function); entries that match
+    nothing are reported as stale so the baseline shrinks as code is
+    fixed."""
+
+    def __init__(self, entries: Sequence[Dict[str, str]] = ()):
+        self.entries = list(entries)
+        for e in self.entries:
+            missing = {"rule", "path", "scope", "why"} - set(e)
+            if missing:
+                raise ValueError(f"baseline entry {e} missing {missing}")
+        self._keys = {(e["rule"], e["path"], e["scope"])
+                      for e in self.entries}
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except FileNotFoundError:
+            return cls(())
+        return cls(data.get("findings", []))
+
+    def split(self, findings: List[Finding]
+              ) -> Tuple[List[Finding], List[Finding], List[Dict[str, str]]]:
+        """-> (new findings, baselined findings, stale baseline entries)."""
+        new = [f for f in findings if f.key() not in self._keys]
+        old = [f for f in findings if f.key() in self._keys]
+        hit = {f.key() for f in old}
+        stale = [e for e in self.entries
+                 if (e["rule"], e["path"], e["scope"]) not in hit]
+        return new, old, stale
+
+    @staticmethod
+    def render(findings: List[Finding]) -> str:
+        """Serialize findings as a fresh baseline file body (the `why`
+        fields start as TODO — a baseline without reasons should not
+        pass review)."""
+        entries, seen = [], set()
+        for f in sorted(findings, key=lambda f: f.key()):
+            if f.key() in seen:
+                continue
+            seen.add(f.key())
+            entries.append({"rule": f.rule, "path": f.path,
+                            "scope": f.scope,
+                            "why": "TODO: justify or fix"})
+        return json.dumps({"findings": entries}, indent=2) + "\n"
+
+
+def render_human(new: List[Finding], baselined: List[Finding],
+                 stale: List[Dict[str, str]], n_suppressed: int,
+                 n_files: int) -> str:
+    out = [f.render() for f in sorted(new, key=lambda f: (f.path, f.line))]
+    out.append(f"reprolint: {len(new)} finding(s) in {n_files} file(s) "
+               f"({len(baselined)} baselined, {n_suppressed} suppressed "
+               "inline)")
+    for e in stale:
+        out.append(f"reprolint: stale baseline entry {e['rule']} "
+                   f"{e['path']} {e['scope']} — fixed? remove it")
+    return "\n".join(out)
+
+
+def render_json(new: List[Finding], baselined: List[Finding],
+                stale: List[Dict[str, str]], n_suppressed: int,
+                n_files: int) -> str:
+    return json.dumps({
+        "tool": "reprolint",
+        "files_scanned": n_files,
+        "new": [f.to_json() for f in
+                sorted(new, key=lambda f: (f.path, f.line))],
+        "baselined": [f.to_json() for f in
+                      sorted(baselined, key=lambda f: (f.path, f.line))],
+        "stale_baseline": list(stale),
+        "suppressed_inline": n_suppressed,
+    }, indent=2)

@@ -1,0 +1,132 @@
+"""reprolint CLI.
+
+    PYTHONPATH=src python -m repro.analysis.lint src tests benchmarks examples
+
+Exit code 0 when every finding is either inline-suppressed or in the
+checked-in baseline (`reprolint_baseline.json`); 1 when there are new
+findings; 2 when the baseline has stale entries (code got fixed —
+shrink the baseline). `--json PATH` additionally writes the machine
+report CI uploads as an artifact; `--write-baseline` regenerates the
+baseline from the current findings (each entry's `why` starts as TODO
+and must be filled in by hand before commit).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.core import (Baseline, Finding, LintConfig,
+                                 apply_suppressions, render_human,
+                                 render_json)
+from repro.analysis.manifest import Manifest, SourceFile, load_files
+from repro.analysis.rules import RULES, LintContext
+
+
+def _contract_fields(files: Sequence[SourceFile],
+                     cfg: LintConfig) -> Tuple[Tuple[str, ...],
+                                               Tuple[str, ...]]:
+    """Read the live dtype contract out of the scanned tree: the
+    `FLEET_CAST_FIELDS` tuple (core/streaming.py) and the `FleetState`
+    field names (core/scenario.py). Falls back to the LintConfig
+    defaults when the fileset doesn't define them (fixture runs)."""
+    cast = cfg.fleet_cast_fields
+    state = cfg.fleet_state_fields
+    for sf in files:
+        for node in sf.tree.body:
+            if isinstance(node, ast.Assign) and \
+                    any(isinstance(t, ast.Name)
+                        and t.id == "FLEET_CAST_FIELDS"
+                        for t in node.targets) and \
+                    isinstance(node.value, ast.Tuple):
+                vals = tuple(e.value for e in node.value.elts
+                             if isinstance(e, ast.Constant))
+                if vals:
+                    cast = vals
+            if isinstance(node, ast.ClassDef) and \
+                    node.name == "FleetState":
+                fields = tuple(
+                    s.target.id for s in node.body
+                    if isinstance(s, ast.AnnAssign)
+                    and isinstance(s.target, ast.Name))
+                if fields:
+                    state = fields
+    return cast, state
+
+
+def run_lint(roots: Sequence[str], repo_root: str,
+             config: Optional[LintConfig] = None,
+             baseline: Optional[Baseline] = None,
+             ) -> Tuple[List[Finding], List[Finding],
+                        List[Dict[str, str]], int, int]:
+    """Lint `roots` (paths relative to `repo_root`).
+
+    Returns (new, baselined, stale_baseline_entries, n_suppressed,
+    n_files). `new` non-empty means the tree is dirty."""
+    cfg = config or LintConfig()
+    files = load_files(roots, repo_root, exclude=cfg.exclude)
+    manifest = Manifest(files)
+    cast, state = _contract_fields(files, cfg)
+    ctx = LintContext(manifest=manifest, config=cfg,
+                      fleet_cast_fields=cast,
+                      fleet_state_fields=state)
+    findings: List[Finding] = []
+    for rule_fn in RULES.values():
+        findings.extend(rule_fn(ctx))
+    findings, n_supp = apply_suppressions(
+        findings, {f.rel: f.lines for f in files})
+    base = baseline if baseline is not None else Baseline(())
+    new, old, stale = base.split(findings)
+    return new, old, stale, n_supp, len(files)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="reprolint",
+        description="compiled-program invariant linter "
+                    "(see DESIGN.md §14)")
+    p.add_argument("roots", nargs="+",
+                   help="files or directories to lint, relative to "
+                        "--repo-root")
+    p.add_argument("--repo-root", default=os.getcwd(),
+                   help="repository root (default: cwd)")
+    p.add_argument("--baseline", default="reprolint_baseline.json",
+                   help="baseline path relative to --repo-root")
+    p.add_argument("--json", dest="json_out", default=None,
+                   help="also write the JSON report to this path")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="regenerate the baseline from current "
+                        "findings and exit 0")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore the baseline (report everything "
+                        "as new)")
+    args = p.parse_args(argv)
+
+    base_path = os.path.join(args.repo_root, args.baseline)
+    baseline = Baseline(()) if args.no_baseline \
+        else Baseline.load(base_path)
+    new, old, stale, n_supp, n_files = run_lint(
+        args.roots, args.repo_root, baseline=baseline)
+
+    if args.write_baseline:
+        with open(base_path, "w") as f:
+            f.write(Baseline.render(new + old))
+        print(f"reprolint: wrote {len({x.key() for x in new + old})} "
+              f"entr(ies) to {args.baseline}")
+        return 0
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            f.write(render_json(new, old, stale, n_supp, n_files))
+    print(render_human(new, old, stale, n_supp, n_files))
+    if new:
+        return 1
+    if stale:
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,568 @@
+"""reprolint manifest: files, imports, and the jit-traced set.
+
+Everything downstream of the rules hangs off three artifacts built
+here, all from stdlib `ast` (no jax import — the lint lane must run on
+a bare interpreter):
+
+* `SourceFile` — parsed module with parent links on every node, a
+  per-file alias table (``import jax.numpy as jnp`` →
+  ``jnp: jax.numpy``; ``from functools import lru_cache`` →
+  ``lru_cache: functools.lru_cache``), and its dotted module name
+  (``src/`` stripped, so ``src/repro/fl/engine.py`` → ``repro.fl.engine``).
+* the repo-internal import graph (rule 8: dead modules).
+* the TRACED SET: every function whose body can run under a jax trace.
+  Seeds are `jax.jit` / `partial(jax.jit, ...)` decorators and calls,
+  and function-valued operands of `lax.scan` / `cond` / `while_loop` /
+  `fori_loop` / `vmap` / `grad` / `value_and_grad` / `checkpoint`.
+  The set is closed over the static call graph; method calls
+  (``x.solve_round(...)``) devirtualize by name against every def in
+  the scanned tree — deliberately over-approximate, rules that key on
+  the traced set carry their own precision guards (see rule 2's
+  param-derivation check).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+# jax transforms whose Nth positional operands are traced callables
+_TRACED_OPERANDS: Dict[str, Tuple[int, ...]] = {
+    "jax.jit": (0,),
+    "jax.vmap": (0,),
+    "jax.pmap": (0,),
+    "jax.grad": (0,),
+    "jax.value_and_grad": (0,),
+    "jax.checkpoint": (0,),
+    "jax.remat": (0,),
+    "jax.lax.scan": (0,),
+    "jax.lax.map": (0,),
+    "jax.lax.cond": (1, 2),
+    "jax.lax.switch": (1,),
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.associative_scan": (0,),
+}
+
+
+@dataclasses.dataclass
+class SourceFile:
+    path: str                 # absolute
+    rel: str                  # repo-relative, posix
+    module: str               # dotted name ("" if unnameable)
+    tree: ast.Module
+    lines: List[str]
+    aliases: Dict[str, str] = dataclasses.field(default_factory=dict)
+    has_main_guard: bool = False
+
+    def scope_of(self, node: ast.AST) -> str:
+        """Qualified name of the innermost enclosing def, or <module>."""
+        parts: List[str] = []
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if isinstance(cur, FuncNode):
+                parts.append(cur.name)
+            elif isinstance(cur, ast.ClassDef):
+                parts.append(cur.name)
+            cur = getattr(cur, "_rl_parent", None)
+        return ".".join(reversed(parts)) or "<module>"
+
+
+def _module_name(rel: str) -> str:
+    if not rel.endswith(".py"):
+        return ""
+    stem = rel[:-3]
+    if stem.startswith("src/"):
+        stem = stem[4:]
+    if stem.endswith("/__init__"):
+        stem = stem[: -len("/__init__")]
+    return stem.replace("/", ".")
+
+
+def _is_main_guard(node: ast.stmt) -> bool:
+    return (isinstance(node, ast.If)
+            and isinstance(node.test, ast.Compare)
+            and isinstance(node.test.left, ast.Name)
+            and node.test.left.id == "__name__")
+
+
+def _link_parents(tree: ast.Module) -> None:
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            child._rl_parent = parent  # type: ignore[attr-defined]
+
+
+def _collect_aliases(sf: SourceFile) -> None:
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                sf.aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+                if a.asname:
+                    sf.aliases[a.asname] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            if node.level:   # relative import: resolve against sf.module
+                base = sf.module.split(".")
+                base = base[: len(base) - node.level + (
+                    1 if sf.rel.endswith("__init__.py") else 0)]
+                mod = ".".join(base + [node.module])
+            else:
+                mod = node.module
+            for a in node.names:
+                if a.name != "*":
+                    sf.aliases[a.asname or a.name] = f"{mod}.{a.name}"
+
+
+def load_files(roots: Sequence[str], repo_root: str,
+               exclude: Sequence[str] = ()) -> List[SourceFile]:
+    """Parse every .py under `roots` (files or directories), skipping
+    any whose repo-relative path contains an `exclude` fragment."""
+    out: List[SourceFile] = []
+    paths: List[str] = []
+    for root in roots:
+        root = os.path.join(repo_root, root)
+        if os.path.isfile(root):
+            paths.append(root)
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if not d.startswith("."))
+            paths.extend(os.path.join(dirpath, f)
+                         for f in sorted(filenames) if f.endswith(".py"))
+    seen: Set[str] = set()
+    for p in paths:
+        rel = os.path.relpath(p, repo_root).replace(os.sep, "/")
+        if rel in seen or any(x in rel for x in exclude):
+            continue
+        seen.add(rel)
+        with open(p, encoding="utf-8") as f:
+            src = f.read()
+        tree = ast.parse(src, filename=rel)
+        _link_parents(tree)
+        sf = SourceFile(path=p, rel=rel, module=_module_name(rel),
+                        tree=tree, lines=src.splitlines(),
+                        has_main_guard=any(_is_main_guard(s)
+                                           for s in tree.body))
+        _collect_aliases(sf)
+        out.append(sf)
+    return out
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """`a.b.c` attribute/name chain as a string, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    sf: SourceFile
+    node: ast.AST             # FunctionDef/AsyncFunctionDef/Lambda
+    qual: str                 # file-scoped qualified name
+    params: Set[str]
+    param_order: List[str] = dataclasses.field(default_factory=list)
+    vararg: Optional[str] = None
+    is_method: bool = False   # immediate parent is a ClassDef
+    # params WITHOUT a default: when this callable is handed to
+    # jit/vmap/scan these are bound to tracers; default-valued params
+    # follow the `lambda k, c=cfg:` static-binding idiom and stay
+    # static
+    nondefault_params: Set[str] = dataclasses.field(
+        default_factory=set)
+
+    @property
+    def uid(self) -> Tuple[str, str, int]:
+        return (self.sf.rel, self.qual, self.node.lineno)
+
+
+def _param_names(node: ast.AST) -> Tuple[Set[str], List[str],
+                                         Optional[str], Set[str]]:
+    a = node.args
+    pos = list(a.posonlyargs) + list(a.args)
+    order = [x.arg for x in pos if x.arg not in ("self", "cls")]
+    names = set(order) | {x.arg for x in a.kwonlyargs}
+    for extra in (a.vararg, a.kwarg):
+        if extra is not None:
+            names.add(extra.arg)
+    defaulted = {x.arg for x in pos[len(pos) - len(a.defaults):]}
+    defaulted |= {x.arg for x, d in zip(a.kwonlyargs, a.kw_defaults)
+                  if d is not None}
+    return names, order, a.vararg.arg if a.vararg else None, \
+        names - defaulted
+
+
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+
+def param_derived(expr: ast.AST, params: Set[str]) -> bool:
+    """True if `expr` carries a traced VALUE derived from `params`.
+    Occurrences reached only through `.shape`/`.ndim`/`.dtype`/`.size`
+    are static under trace (`int(x.shape[0])` is legal jit code) and
+    don't count."""
+    for n in ast.walk(expr):
+        if not (isinstance(n, ast.Name) and n.id in params):
+            continue
+        static = False
+        cur: ast.AST = n
+        while True:
+            parent = getattr(cur, "_rl_parent", None)
+            if isinstance(parent, ast.Attribute) and cur is parent.value:
+                if parent.attr in _STATIC_ATTRS:
+                    static = True
+                    break
+                cur = parent
+            elif isinstance(parent, ast.Subscript) and \
+                    cur is parent.value:
+                cur = parent
+            else:
+                break
+        if not static:
+            return True
+    return False
+
+
+class Manifest:
+    """Import graph + function index + traced set over a file set."""
+
+    def __init__(self, files: Sequence[SourceFile]):
+        self.files = list(files)
+        self.by_module: Dict[str, SourceFile] = {
+            f.module: f for f in files if f.module}
+        self.by_rel: Dict[str, SourceFile] = {f.rel: f for f in files}
+        # function index
+        self.funcs: List[FuncInfo] = []
+        self._by_name: Dict[str, List[FuncInfo]] = {}
+        self._by_node: Dict[int, FuncInfo] = {}
+        for sf in self.files:
+            for node in ast.walk(sf.tree):
+                if isinstance(node, FuncNode + (ast.Lambda,)):
+                    name = getattr(node, "name", "<lambda>")
+                    qual = sf.scope_of(node)
+                    pnames, porder, vararg, nondef = _param_names(node)
+                    fi = FuncInfo(
+                        sf=sf, node=node, qual=qual,
+                        params=pnames, param_order=porder,
+                        vararg=vararg,
+                        is_method=isinstance(
+                            getattr(node, "_rl_parent", None),
+                            ast.ClassDef),
+                        nondefault_params=nondef)
+                    self.funcs.append(fi)
+                    self._by_name.setdefault(name, []).append(fi)
+                    self._by_node[id(node)] = fi
+        self.imports = self._import_graph()
+        self.traced: Set[Tuple[str, str, int]] = set()
+        # per-traced-function names of parameters that carry traced
+        # VALUES (static config params stay out — `int(cfg.n_rounds)`
+        # inside a jitted driver is legal)
+        self.traced_params: Dict[Tuple[str, str, int], Set[str]] = {}
+        self._build_traced_set()
+
+    # ---------------- name resolution ----------------
+
+    def resolve(self, sf: SourceFile, node: ast.AST) -> Optional[str]:
+        """Expand a call target through the file's alias table to a
+        canonical dotted path: ``jnp.where`` → ``jax.numpy.where``,
+        ``lru_cache`` → ``functools.lru_cache``."""
+        d = dotted(node)
+        if d is None:
+            return None
+        head, _, rest = d.partition(".")
+        head = sf.aliases.get(head, head)
+        out = f"{head}.{rest}" if rest else head
+        # one more hop for `from jax import lax` → lax.scan
+        h2, _, r2 = out.partition(".")
+        if h2 in sf.aliases and sf.aliases[h2] != h2:
+            out = f"{sf.aliases[h2]}.{r2}" if r2 else sf.aliases[h2]
+        return out
+
+    def func_of(self, node: ast.AST) -> Optional[FuncInfo]:
+        return self._by_node.get(id(node))
+
+    def defs_named(self, name: str) -> List[FuncInfo]:
+        return self._by_name.get(name, [])
+
+    def enclosing_func(self, node: ast.AST) -> Optional[FuncInfo]:
+        cur = getattr(node, "_rl_parent", None)
+        while cur is not None:
+            if isinstance(cur, FuncNode + (ast.Lambda,)):
+                return self.func_of(cur)
+            cur = getattr(cur, "_rl_parent", None)
+        return None
+
+    # ---------------- import graph (rule 8) ----------------
+
+    def _repo_module(self, dotted_name: str) -> Optional[str]:
+        """Longest prefix of `dotted_name` that is a scanned module."""
+        parts = dotted_name.split(".")
+        for i in range(len(parts), 0, -1):
+            cand = ".".join(parts[:i])
+            if cand in self.by_module:
+                return cand
+        return None
+
+    def _import_graph(self) -> Dict[str, Set[str]]:
+        graph: Dict[str, Set[str]] = {f.rel: set() for f in self.files}
+        for sf in self.files:
+            for node in ast.walk(sf.tree):
+                targets: List[str] = []
+                if isinstance(node, ast.Import):
+                    targets = [a.name for a in node.names]
+                elif isinstance(node, ast.ImportFrom):
+                    if node.level:
+                        base = sf.module.split(".")
+                        base = base[: len(base) - node.level + (
+                            1 if sf.rel.endswith("__init__.py") else 0)]
+                        mod = ".".join(base + ([node.module]
+                                               if node.module else []))
+                    else:
+                        mod = node.module or ""
+                    targets = [mod] + [f"{mod}.{a.name}"
+                                       for a in node.names]
+                for t in targets:
+                    m = self._repo_module(t)
+                    if m is not None:
+                        graph[sf.rel].add(self.by_module[m].rel)
+        return graph
+
+    def reachable_from(self, roots: Iterable[str]) -> Set[str]:
+        seen: Set[str] = set()
+        stack = [r for r in roots if r in self.imports]
+        while stack:
+            cur = stack.pop()
+            if cur in seen:
+                continue
+            seen.add(cur)
+            stack.extend(self.imports.get(cur, ()))
+        return seen
+
+    # ---------------- traced set (rules 2, 3) ----------------
+
+    def _callable_operand_funcs(self, sf: SourceFile, node: ast.AST,
+                                virtual: bool = True
+                                ) -> List[FuncInfo]:
+        """FuncInfos a callable-valued expression may refer to.
+
+        Resolution order: exact (a from-import or module alias that
+        names a def in a scanned module), then same-file bare name.
+        Only then, and only for method-style `x.meth` references with
+        `virtual=True`, fall back to name devirtualization — and only
+        against METHOD defs, so generic top-level names (`run`,
+        `main`) never pull host drivers into the traced set."""
+        if isinstance(node, (ast.Lambda,) + FuncNode):
+            fi = self.func_of(node)
+            return [fi] if fi else []
+        if isinstance(node, ast.Call):
+            # functools.partial(f, ...) nested operand
+            inner = self.resolve(sf, node.func)
+            if inner in ("functools.partial", "partial") and node.args:
+                return self._callable_operand_funcs(
+                    sf, node.args[0], virtual=virtual)
+            return []
+        d = dotted(node)
+        if d is None:
+            return []
+        leafname = d.split(".")[-1]
+        resolved = self.resolve(sf, node) or d
+        # exact: resolved prefix is a scanned module defining the leaf
+        mod = self._repo_module(".".join(resolved.split(".")[:-1]))
+        if mod is not None:
+            target = self.by_module[mod]
+            exact = [fi for fi in self.defs_named(leafname)
+                     if fi.sf is target]
+            if exact:
+                return exact
+        # bare name defined in this file
+        if "." not in d:
+            local = [fi for fi in self.defs_named(leafname)
+                     if fi.sf is sf]
+            if local:
+                return local
+        # method-call devirtualization by name
+        if virtual and "." in d:
+            return [fi for fi in self.defs_named(leafname)
+                    if fi.is_method]
+        return []
+
+    def _operand_infos(self, sf: SourceFile, node: ast.AST
+                       ) -> List[Tuple[FuncInfo, Set[str]]]:
+        """(FuncInfo, names statically bound by `partial`) pairs for a
+        callable operand — partial-bound params are trace-time
+        constants, not tracers."""
+        if isinstance(node, ast.Call):
+            inner = self.resolve(sf, node.func)
+            if inner in ("functools.partial", "partial") and node.args:
+                out = []
+                for fi, bound in self._operand_infos(sf, node.args[0]):
+                    b = set(bound)
+                    b.update(fi.param_order[:len(node.args) - 1])
+                    b.update(kw.arg for kw in node.keywords if kw.arg)
+                    out.append((fi, b))
+                return out
+            return []
+        return [(fi, set())
+                for fi in self._callable_operand_funcs(sf, node)]
+
+    def _operand_traced_names(self, sf: SourceFile, op: ast.AST,
+                              transform: str,
+                              call: Optional[ast.Call]
+                              ) -> List[Tuple[FuncInfo, Set[str]]]:
+        """Which of an operand callable's params become tracers under
+        `transform`: non-default params, minus partial-bound names,
+        minus `in_axes=None` positions of a vmap."""
+        axes_none: Optional[Set[int]] = None
+        if transform == "jax.vmap" and call is not None:
+            in_axes = next((kw.value for kw in call.keywords
+                            if kw.arg == "in_axes"),
+                           call.args[1] if len(call.args) > 1 else None)
+            if isinstance(in_axes, ast.Tuple):
+                axes_none = {j for j, el in enumerate(in_axes.elts)
+                             if isinstance(el, ast.Constant)
+                             and el.value is None}
+        out = []
+        for fi, bound in self._operand_infos(sf, op):
+            names = set(fi.nondefault_params) - bound
+            if axes_none:
+                unbound = [p for p in fi.param_order if p not in bound]
+                names -= {unbound[j] for j in axes_none
+                          if j < len(unbound)}
+            out.append((fi, names))
+        return out
+
+    def _seed_traced(self) -> List[Tuple[FuncInfo, Set[str]]]:
+        seeds: List[Tuple[FuncInfo, Set[str]]] = []
+        for sf in self.files:
+            for node in ast.walk(sf.tree):
+                # decorators: @jax.jit, @jit, @partial(jax.jit, ...)
+                if isinstance(node, FuncNode):
+                    for dec in node.decorator_list:
+                        target = dec.func if isinstance(dec, ast.Call) \
+                            else dec
+                        r = self.resolve(sf, target)
+                        if r in ("functools.partial", "partial") and \
+                                isinstance(dec, ast.Call) and dec.args:
+                            r = self.resolve(sf, dec.args[0])
+                        if r in _TRACED_OPERANDS:
+                            fi = self.func_of(node)
+                            if fi:
+                                seeds.append(
+                                    (fi, set(fi.nondefault_params)))
+                # call sites: jax.jit(f), lax.scan(body, ...), vmap(f)
+                if isinstance(node, ast.Call):
+                    r = self.resolve(sf, node.func)
+                    if r in ("functools.partial", "partial") \
+                            and node.args:
+                        rr = self.resolve(sf, node.args[0])
+                        if rr in _TRACED_OPERANDS and \
+                                len(node.args) > 1:
+                            seeds.extend(self._operand_traced_names(
+                                sf, node.args[1], rr, None))
+                        continue
+                    if r in _TRACED_OPERANDS:
+                        for i in _TRACED_OPERANDS[r]:
+                            if i < len(node.args):
+                                seeds.extend(
+                                    self._operand_traced_names(
+                                        sf, node.args[i], r, node))
+        return seeds
+
+    def _build_traced_set(self) -> None:
+        """Fixpoint: traced MEMBERSHIP (body may execute under a
+        trace) closes over every static call edge out of a traced
+        body; traced PARAMS flow only along argument positions whose
+        expression is param-derived at the caller. Transform operands
+        (jit/scan/vmap/...) get all params traced — they're bound to
+        tracers by construction."""
+        queue: List[FuncInfo] = []
+
+        def add(fi: FuncInfo, params: Set[str]) -> None:
+            cur = self.traced_params.setdefault(fi.uid, set())
+            fresh = fi.uid not in self.traced
+            grew = not params <= cur
+            cur |= params
+            if fresh:
+                self.traced.add(fi.uid)
+            if fresh or grew:
+                queue.append(fi)
+
+        for fi, names in self._seed_traced():
+            add(fi, names)
+
+        while queue:
+            fi = queue.pop()
+            tp = self.derived_names(fi)
+            for node in ast.walk(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                # callables handed to a transform
+                r = self.resolve(fi.sf, node.func)
+                if r in _TRACED_OPERANDS:
+                    for i in _TRACED_OPERANDS[r]:
+                        if i < len(node.args):
+                            for cand, names in \
+                                    self._operand_traced_names(
+                                        fi.sf, node.args[i], r, node):
+                                add(cand, names)
+                    continue
+                # plain call: map derived argument positions onto the
+                # callee's parameters
+                for cand in self._callable_operand_funcs(
+                        fi.sf, node.func):
+                    passed: Set[str] = set()
+                    order = cand.param_order
+                    for i, a in enumerate(node.args):
+                        if isinstance(a, ast.Starred):
+                            if param_derived(a.value, tp):
+                                passed.update(order[i:])
+                                if cand.vararg:
+                                    passed.add(cand.vararg)
+                        elif param_derived(a, tp):
+                            if i < len(order):
+                                passed.add(order[i])
+                            elif cand.vararg:
+                                passed.add(cand.vararg)
+                    for kw in node.keywords:
+                        if kw.arg and kw.arg in cand.params and \
+                                param_derived(kw.value, tp):
+                            passed.add(kw.arg)
+                    add(cand, passed)
+
+    def is_traced(self, fi: Optional[FuncInfo]) -> bool:
+        return fi is not None and fi.uid in self.traced
+
+    def traced_value_params(self, fi: FuncInfo) -> Set[str]:
+        return self.traced_params.get(fi.uid, set())
+
+    def derived_names(self, fi: FuncInfo) -> Set[str]:
+        """Traced params of `fi` plus locals (transitively) assigned
+        from traced-derived expressions."""
+        tp = set(self.traced_params.get(fi.uid, set()))
+        changed = bool(tp)
+        while changed:
+            changed = False
+            for n in ast.walk(fi.node):
+                value = target_nodes = None
+                if isinstance(n, ast.Assign):
+                    value, target_nodes = n.value, n.targets
+                elif isinstance(n, (ast.AugAssign, ast.AnnAssign)) \
+                        and n.value is not None:
+                    value, target_nodes = n.value, [n.target]
+                if value is None or not param_derived(value, tp):
+                    continue
+                for t in target_nodes:
+                    for nn in ast.walk(t):
+                        if isinstance(nn, ast.Name) and \
+                                isinstance(nn.ctx, ast.Store) and \
+                                nn.id not in tp:
+                            tp.add(nn.id)
+                            changed = True
+        return tp

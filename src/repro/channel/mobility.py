@@ -24,7 +24,8 @@ class ManhattanParams:
     coverage: float = 400.0      # RSU coverage radius [m]
 
 # Directions: 0:+x 1:-x 2:+y 3:-y
-_DIRS = jnp.array([[1.0, 0.0], [-1.0, 0.0], [0.0, 1.0], [0.0, -1.0]])
+_DIRS = jnp.array([[1.0, 0.0], [-1.0, 0.0], [0.0, 1.0], [0.0, -1.0]],
+                  dtype=jnp.float32)
 
 
 def init_mobility(key: jax.Array, n: int, prm: ManhattanParams,
@@ -85,7 +86,7 @@ def step_mobility(key: jax.Array, state, prm: ManhattanParams, dt: float):
     oob_hi = new > prm.extent
     oob_lo = new < 0.0
     new = jnp.clip(new, 0.0, prm.extent)
-    flip = jnp.array([1, 0, 3, 2])
+    flip = jnp.array([1, 0, 3, 2], dtype=jnp.int32)
     hit = (oob_hi | oob_lo).any(-1)
     d = jnp.where(hit, flip[d], d)
     return {"pos": new, "dir": d, "speed": speed}

@@ -2,6 +2,7 @@
 HLO dumps (no recompilation). Usage:
   PYTHONPATH=src python -m repro.launch.reanalyze [dir]
 """
+import argparse
 import glob
 import gzip
 import json
@@ -10,8 +11,10 @@ import sys
 from repro.launch.hlo_costs import analyze
 
 
-def main() -> int:
-    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("dir", nargs="?", default="experiments/dryrun")
+    d = ap.parse_args(argv).dir
     for path in sorted(glob.glob(d + "/*.json")):
         gz = path.replace(".json", ".hlo.txt.gz")
         try:

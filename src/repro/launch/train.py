@@ -15,7 +15,7 @@ import sys
 import time
 
 
-def main() -> int:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-32b")
     ap.add_argument("--rounds", type=int, default=20)
@@ -28,7 +28,7 @@ def main() -> int:
                     choices=["veds", "optimal", "v2i_only", "madca", "sa"])
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")

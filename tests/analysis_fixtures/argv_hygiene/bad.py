@@ -1,0 +1,20 @@
+"""BAD: `main()` that reads the process argv and mutates it.
+
+A `main` without an `argv` parameter can only be driven through
+`sys.argv`, so in-process callers (benchmark harness, tests) inherit
+the HOST process's arguments; assigning to `sys.argv` leaks parse
+state into every later import.
+"""
+import argparse
+import sys
+
+
+def main():
+    sys.argv = ["prog", "--fast"]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    return 0 if ap.parse_args().fast else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,14 @@
+"""GOOD: the repo's entrypoint convention — `main(argv=None)` threads
+straight into `parse_args`; in-process callers pass `argv=[]`."""
+import argparse
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    return 0 if ap.parse_args(argv).fast else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+"""BAD: data-dependent output shapes inside traced code.
+
+Single-arg `where`, `unique`, and `.nonzero()` size their outputs by
+the VALUES of the input — untraceable under jit (jax raises; with
+dynamic shapes it would retrace per round).
+"""
+import jax
+import jax.numpy as jnp
+
+
+def body(carry, x):
+    idx = jnp.where(x > 0)
+    uniq = jnp.unique(x)
+    live = (x > carry).nonzero()
+    return carry, (idx, uniq, live)
+
+
+def run(xs):
+    return jax.lax.scan(body, 0.0, xs)

@@ -1,0 +1,11 @@
+"""Fixture root: a miniature repo whose import graph reaches
+`pkg.used` (and its package __init__) but never `pkg.orphan`."""
+from pkg.used import helper
+
+
+def main(argv=None):
+    return helper()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Alive via the ancestor-package rule: importing pkg.used implies
+executing this __init__."""

@@ -1,0 +1,6 @@
+"""Nothing imports this module — reprolint's dead-module rule must
+flag it."""
+
+
+def unused():
+    return 0

@@ -1,0 +1,18 @@
+"""BAD: reading an argument after its buffer was donated.
+
+`donate_argnums=(0,)` hands the carry's buffer to XLA for in-place
+reuse; the python name still exists but its buffer is gone — reading
+it returns a deleted-buffer error (or garbage on some backends).
+"""
+import jax
+
+step = jax.jit(lambda c, x: (c + x, x * c), donate_argnums=(0,))
+
+
+def drive(carry, xs):
+    total = 0.0
+    for x in xs:
+        out, aux = step(carry, x)
+        total = total + carry.sum()
+        carry = out
+    return carry, total

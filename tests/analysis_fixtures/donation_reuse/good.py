@@ -1,0 +1,15 @@
+"""GOOD: the rebind idiom — the result takes the donated name.
+
+`carry, _ = step(carry, x)` reads the old buffer only as the call's
+own argument and immediately rebinds the name to the fresh output, so
+no later read can touch the dead buffer.
+"""
+import jax
+
+step = jax.jit(lambda c, x: (c + x, x * c), donate_argnums=(0,))
+
+
+def drive(carry, xs):
+    for x in xs:
+        carry, _ = step(carry, x)
+    return carry

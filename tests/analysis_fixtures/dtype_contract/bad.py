@@ -1,0 +1,15 @@
+"""BAD: fp32-master contract violations.
+
+`energy` feeds the battery-threshold comparison in the scheduler, so it
+is NOT in `FLEET_CAST_FIELDS` — down-casting it to bf16 flips success
+masks near the threshold. The dtype-less literal in a hot module lets
+weak-type promotion (or the x64 flag) pick the dtype of everything it
+touches.
+"""
+import jax.numpy as jnp
+
+
+def demote(state):
+    energy16 = state.energy.astype(jnp.bfloat16)
+    dirs = jnp.array([[1.0, 0.0], [0.0, 1.0]])
+    return energy16, dirs

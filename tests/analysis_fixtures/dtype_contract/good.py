@@ -1,0 +1,13 @@
+"""GOOD: the contract followed.
+
+`p4_tab` is the one field FLEET_CAST_FIELDS allows to travel in bf16
+(it is re-promoted before use), and hot-module literals pin their
+dtype explicitly.
+"""
+import jax.numpy as jnp
+
+
+def demote(state):
+    tab16 = state.p4_tab.astype(jnp.bfloat16)
+    dirs = jnp.array([[1.0, 0.0], [0.0, 1.0]], dtype=jnp.float32)
+    return tab16, dirs

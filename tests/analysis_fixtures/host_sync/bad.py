@@ -1,0 +1,20 @@
+"""BAD: host materialization of traced values inside a scan body.
+
+`body` runs under `lax.scan`, so `carry` and `x` are tracers: `float()`
+on one raises ConcretizationTypeError (or, via callbacks, forces a
+device->host sync per step), `.item()` likewise, and handing a tracer
+to host `numpy` silently falls back to object arrays or errors.
+"""
+import jax
+import numpy as np
+
+
+def body(carry, x):
+    loss = float(x)
+    host = np.asarray(x)
+    flat = x.sum().item()
+    return carry + loss + flat, host.shape[0]
+
+
+def run(xs):
+    return jax.lax.scan(body, 0.0, xs)

@@ -1,0 +1,20 @@
+"""GOOD: the same scan body with trace-legal host interactions.
+
+`.shape`-derived ints are static under trace; `float()` of a python
+config value is host arithmetic on a non-traced name; the numpy call
+happens OUTSIDE the traced function, on materialized results.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def body(carry, x):
+    n = int(x.shape[0])
+    return carry + x.sum() / n, jnp.mean(x)
+
+
+def run(xs, slot=0.1):
+    dt = float(slot)
+    carry, means = jax.lax.scan(body, 0.0 * dt, xs)
+    return carry, np.asarray(means)

@@ -1,0 +1,30 @@
+"""BAD: lru_cache compile factories keyed on less than they read.
+
+Reconstruction of the PR-5 `eval_fn` fork: `_EVAL_FN` is module state
+reassigned through `global`, so two calls of `compiled_segment(4)` with
+different eval functions installed return the SAME cached jitted
+program — the cache key cannot see the fork. `make_factory` shows the
+enclosing-scope variant: `scale` is invisible to `inner`'s cache key,
+so every closure instance silently shares one cache line.
+"""
+import functools
+
+_EVAL_FN = None
+
+
+def set_eval_fn(fn):
+    global _EVAL_FN
+    _EVAL_FN = fn
+
+
+@functools.lru_cache(maxsize=None)
+def compiled_segment(n_rounds):
+    import jax
+    return jax.jit(lambda c: _EVAL_FN(c) * n_rounds)
+
+
+def make_factory(scale):
+    @functools.lru_cache(maxsize=None)
+    def inner(n):
+        return n * scale
+    return inner

@@ -1,0 +1,20 @@
+"""GOOD: everything the factory reads is part of its cache key.
+
+The eval function and the scale are explicit (hashable) arguments, so
+a forked callable or changed constant gets its own cache line; reading
+module-level CONSTANTS (assigned once, never `global`-written) is fine.
+"""
+import functools
+
+_SLOT_SECONDS = 0.1
+
+
+@functools.lru_cache(maxsize=None)
+def compiled_segment(n_rounds, eval_fn):
+    import jax
+    return jax.jit(lambda c: eval_fn(c) * n_rounds * _SLOT_SECONDS)
+
+
+@functools.lru_cache(maxsize=None)
+def scaled(n, scale):
+    return n * scale

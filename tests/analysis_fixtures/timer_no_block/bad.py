@@ -1,0 +1,18 @@
+"""BAD: timing the async dispatch instead of the compute.
+
+jax returns control as soon as the work is ENQUEUED; without a
+`block_until_ready` (or materialization) before the second
+`perf_counter`, the delta measures the python overhead of launching,
+not the kernel.
+"""
+import time
+
+import jax
+
+
+def bench(fn, x):
+    t0 = time.perf_counter()
+    y = fn(x)
+    t1 = time.perf_counter()
+    jax.block_until_ready(y)
+    return t1 - t0

@@ -1,0 +1,11 @@
+"""GOOD: the dispatch is drained before the timer stops."""
+import time
+
+import jax
+
+
+def bench(fn, x):
+    t0 = time.perf_counter()
+    y = jax.block_until_ready(fn(x))
+    t1 = time.perf_counter()
+    return t1 - t0, y

@@ -6,6 +6,8 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import contextlib  # noqa: E402
+
 import jax  # noqa: E402
 import pytest  # noqa: E402
 
@@ -31,6 +33,30 @@ requires_mesh_api = pytest.mark.skipif(
     not HAS_MESH_API,
     reason="needs jax>=0.7 mesh APIs (jax.sharding.AxisType / "
            "jax.shard_map); toolchain has jax " + jax.__version__)
+
+
+@contextlib.contextmanager
+def assert_no_retrace(fn, *, compiles=0):
+    """Pin the jit trace-cache growth of `fn` across the with-block.
+
+    Exactly `compiles` new cache entries may appear while the block
+    runs; the default 0 means every call inside must be served from an
+    already-traced program (the one-trace-per-shape discipline reprolint's
+    jit-cache-key rule guards statically, asserted dynamically). Pass
+    `compiles=1` around the first run through a freshly built jitted fn
+    to pin "this whole run is ONE program". No-op on jax builds without
+    `_cache_size` introspection — the behavioral asserts around the pin
+    still run there.
+    """
+    if not hasattr(fn, "_cache_size"):
+        yield
+        return
+    n0 = fn._cache_size()
+    yield
+    n1 = fn._cache_size()
+    assert n1 == n0 + compiles, (
+        f"retrace: expected {compiles} new compile(s), got {n1 - n0} "
+        f"(cache {n0} -> {n1})")
 
 
 def mark_slow_unless(values, quick):

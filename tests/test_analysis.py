@@ -1,0 +1,163 @@
+"""reprolint: mutation proofs per rule + self-lint of the shipped tree.
+
+Each rule has a `bad.py` (deliberately violating) and `good.py`
+(idiomatic) fixture under `tests/analysis_fixtures/`; the tests pin
+the EXACT finding set on each, so a rule that stops firing on its bug
+class — or starts firing on the blessed idiom — fails here. The
+self-lint test is the same gate CI runs: the shipped tree must be
+clean against the checked-in baseline.
+
+The analysis package never imports jax, so these tests run on a bare
+interpreter too (the CI lint lane).
+"""
+import json
+import os
+import pathlib
+
+import pytest
+
+from repro.analysis.core import Baseline, LintConfig, suppressed_rules
+from repro.analysis.lint import main as lint_main
+from repro.analysis.lint import run_lint
+from repro.analysis.rules import RULES
+
+FIXTURES = pathlib.Path(__file__).resolve().parent / "analysis_fixtures"
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# every rule with a good/bad pair (dead-module uses its own mini-tree)
+PAIRED = {
+    "jit-cache-key": "jit_cache_key",
+    "host-sync-in-jit": "host_sync",
+    "data-dep-shape": "data_dep_shape",
+    "dtype-contract": "dtype_contract",
+    "donation-reuse": "donation_reuse",
+    "timer-no-block": "timer_no_block",
+    "argv-hygiene": "argv_hygiene",
+}
+# findings the bad fixture must produce (count pinned so a rule that
+# half-fires still fails)
+EXPECT_BAD = {
+    "jit-cache-key": 2,       # global fork + enclosing closure
+    "host-sync-in-jit": 3,    # float() / np.asarray / .item()
+    "data-dep-shape": 3,      # 1-arg where / unique / .nonzero
+    "dtype-contract": 2,      # off-allowlist cast + dtype-less literal
+    "donation-reuse": 1,
+    "timer-no-block": 1,
+    "argv-hygiene": 2,        # sys.argv mutation + argv-less main
+}
+
+
+def _lint_fixture(subdir):
+    cfg = LintConfig(exclude=("__pycache__",),
+                     hot_modules=("",))    # every fixture file is "hot"
+    new, old, stale, _, n_files = run_lint(
+        ["."], str(FIXTURES / subdir), config=cfg)
+    assert not old and not stale
+    assert n_files >= 2 or subdir == "dead_module"
+    return new
+
+
+@pytest.mark.parametrize("rule", sorted(PAIRED))
+def test_rule_flags_bad_and_passes_good(rule):
+    found = [f for f in _lint_fixture(PAIRED[rule]) if f.rule == rule]
+    bad = [f for f in found if f.path.endswith("bad.py")]
+    good = [f for f in found if f.path.endswith("good.py")]
+    assert len(bad) == EXPECT_BAD[rule], \
+        f"{rule}: expected {EXPECT_BAD[rule]} finding(s) in bad.py, " \
+        f"got {[f.render() for f in found]}"
+    assert not good, \
+        f"{rule} false positive(s): {[f.render() for f in good]}"
+
+
+def test_pr5_eval_fn_fork_is_reconstructed():
+    """The jit-cache-key bad fixture must flag the exact PR-5 shape:
+    the lru factory's read of the `global`-reassigned `_EVAL_FN`."""
+    found = [f for f in _lint_fixture("jit_cache_key")
+             if f.rule == "jit-cache-key"]
+    assert any("_EVAL_FN" in f.message
+               and f.scope.endswith("compiled_segment") for f in found)
+    assert any("`scale`" in f.message for f in found)
+
+
+def test_dtype_contract_names_the_offending_field():
+    found = [f for f in _lint_fixture("dtype_contract")
+             if f.rule == "dtype-contract"]
+    assert any("`energy`" in f.message for f in found)
+
+
+def test_dead_module_flags_only_the_orphan():
+    new = [f for f in _lint_fixture("dead_module")
+           if f.rule == "dead-module"]
+    assert [f.path for f in new] == ["src/pkg/orphan.py"]
+
+
+def test_good_fixtures_are_fully_clean():
+    """No rule — not just the one under test — may fire on a good
+    fixture: the blessed idioms must survive the whole catalogue."""
+    for subdir in PAIRED.values():
+        bad_rules = [f.render() for f in _lint_fixture(subdir)
+                     if f.path.endswith("good.py")]
+        assert not bad_rules, f"{subdir}: {bad_rules}"
+
+
+def test_rule_catalogue_is_complete():
+    assert set(PAIRED) | {"dead-module"} == set(RULES)
+    assert len(RULES) >= 8
+
+
+def test_inline_suppression_parsing():
+    sup = suppressed_rules([
+        "x = 1",
+        "t = time.time()  # reprolint: disable=timer-no-block -- why",
+        "y = f(x)  # reprolint: disable=all",
+        "z = g(x)  # reprolint: disable=a-b, c-d",
+    ])
+    assert sup == {2: {"timer-no-block"}, 3: {"all"}, 4: {"a-b", "c-d"}}
+
+
+def test_baseline_split_and_staleness():
+    base = Baseline([{"rule": "timer-no-block", "path": "bad.py",
+                      "scope": "bench", "why": "grandfathered"},
+                     {"rule": "dead-module", "path": "gone.py",
+                      "scope": "<module>", "why": "stale entry"}])
+    cfg = LintConfig(exclude=("__pycache__",), hot_modules=("",))
+    new, old, stale, _, _ = run_lint(
+        ["."], str(FIXTURES / "timer_no_block"),
+        config=cfg, baseline=base)
+    assert not new and len(old) == 1
+    assert [e["path"] for e in stale] == ["gone.py"]
+    with pytest.raises(ValueError):
+        Baseline([{"rule": "x", "path": "y", "scope": "z"}])  # no why
+
+
+def test_self_lint_shipped_tree_is_clean(tmp_path, capsys):
+    """The CI gate, in-process: lint the real tree against the real
+    baseline and demand exit 0 plus a well-formed JSON report."""
+    report = tmp_path / "reprolint.json"
+    rc = lint_main(["src", "tests", "benchmarks", "examples",
+                    "--repo-root", str(REPO), "--json", str(report)])
+    out = capsys.readouterr().out
+    assert rc == 0, f"reprolint found new violations:\n{out}"
+    rep = json.loads(report.read_text())
+    assert rep["tool"] == "reprolint" and rep["new"] == []
+    assert rep["files_scanned"] > 50
+    # the fixtures' deliberate violations must be excluded from the
+    # repo-tree scan, or they would dirty every CI run
+    assert not any("analysis_fixtures" in f["path"]
+                   for f in rep["new"] + rep["baselined"])
+
+
+def test_traced_set_reaches_scan_bodies():
+    """Manifest sanity on the real tree: the fused engine's scan body
+    machinery lands in the traced set (rule 2/3's precondition)."""
+    from repro.analysis.manifest import Manifest, load_files
+    files = load_files(["src/repro/fl"], str(REPO))
+    m = Manifest(files)
+    traced_quals = {uid[1] for uid in m.traced}
+    assert traced_quals, "no traced functions found in src/repro/fl"
+
+
+def test_baseline_file_is_checked_in_and_loadable():
+    path = os.path.join(str(REPO), "reprolint_baseline.json")
+    assert os.path.exists(path)
+    Baseline.load(path)   # validates every entry carries a why

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from conftest import mark_slow_unless
+from conftest import assert_no_retrace, mark_slow_unless
 
 from repro.channel.mobility import ManhattanParams
 from repro.channel.v2x import ChannelParams
@@ -328,14 +328,12 @@ def test_fused_run_fl_eval_in_scan_is_one_dispatch(fl_setup, monkeypatch):
     sim = FLSimConfig(n_clients=N_CLIENTS, rounds=7, scheduler="sa",
                       n_slots=10, n_sov=4, n_opv=3, batch_size=BS,
                       streaming=True)
-    h = run_fl(jax.random.key(7), params, _loss_fn, data, sim,
-               eval_fn=eval_fn, eval_every=3)
+    with assert_no_retrace(_seg_of(sim, eval_fn), compiles=1):
+        h = run_fl(jax.random.key(7), params, _loss_fn, data, sim,
+                   eval_fn=eval_fn, eval_every=3)
     assert h["round"] == [0, 3, 6]
     assert h["dispatches"] == 1
     assert len(blocks) == 1
-    seg = _seg_of(sim, eval_fn)
-    if hasattr(seg, "_cache_size"):
-        assert seg._cache_size() == 1
 
 
 def test_fused_run_fl_eval_in_scan_matches_segmented(fl_setup):
@@ -366,14 +364,11 @@ def test_fused_run_fl_segmented_compiles_one_segment_shape(fl_setup):
                       n_slots=10, n_sov=4, n_opv=3, batch_size=BS,
                       streaming=True, eval_in_scan=False)
     # rounds=7, eval_every=3 -> evals at 0, 3, 6: segment lengths 1/3/3
-    h = run_fl(jax.random.key(7), params, _loss_fn, data, sim,
-               eval_fn=eval_fn, eval_every=3)
+    with assert_no_retrace(_seg_of(sim), compiles=1):
+        h = run_fl(jax.random.key(7), params, _loss_fn, data, sim,
+                   eval_fn=eval_fn, eval_every=3)
     assert h["round"] == [0, 3, 6]
     assert h["dispatches"] == 3
-    seg = _seg_of(sim)
-    if not hasattr(seg, "_cache_size"):
-        pytest.skip("jax has no jit _cache_size introspection")
-    assert seg._cache_size() == 1
 
 
 def test_fused_run_fl_segmented_threads_history_chunk(fl_setup):
@@ -385,16 +380,14 @@ def test_fused_run_fl_segmented_threads_history_chunk(fl_setup):
     length also exercises the pad-to-chunk-multiple no-op tail), and the
     segment actually used must live under the chunked cache key."""
     hu = _go(fl_setup, streaming=True, eval_in_scan=False)
-    hc = _go(fl_setup, streaming=True, eval_in_scan=False,
-             fused_history_chunk=4)
-    assert hc == hu
     sim = FLSimConfig(n_clients=N_CLIENTS, rounds=6, scheduler="madca",
                       n_slots=10, n_sov=4, n_opv=3, batch_size=BS,
                       streaming=True, eval_in_scan=False,
                       fused_history_chunk=4)
-    seg = _seg_of(sim)
-    if hasattr(seg, "_cache_size"):
-        assert seg._cache_size() == 1
+    with assert_no_retrace(_seg_of(sim), compiles=1):
+        hc = _go(fl_setup, streaming=True, eval_in_scan=False,
+                 fused_history_chunk=4)
+    assert hc == hu
 
 
 def test_run_fl_accepts_prepadded_shards(fl_setup):

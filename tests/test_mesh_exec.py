@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import mark_slow_unless
+from conftest import assert_no_retrace, mark_slow_unless
 from repro.channel.mobility import ManhattanParams
 from repro.channel.v2x import ChannelParams
 from repro.core.baselines import SCHEDULERS, get_scheduler
@@ -152,10 +152,9 @@ def test_donated_step_does_not_retrace():
         jax.block_until_ready(res.params)
 
     call()                              # one entry for this placement
-    n0 = step._cache_size()
-    call()
-    call()
-    assert step._cache_size() == n0
+    with assert_no_retrace(step):
+        call()
+        call()
 
 
 def test_uneven_batch_is_rejected_up_front():
