@@ -1,0 +1,25 @@
+# Developer entrypoints. The lint target is the exact CI gate
+# (stdlib-only, no jax import); warm runs are served from the
+# mtime-keyed cache in .reprolint_cache.json and take milliseconds.
+
+PY ?= python
+ROOTS = src tests benchmarks examples
+
+.PHONY: lint lint-sarif lint-baseline test test-slow
+
+lint:
+	PYTHONPATH=src $(PY) -m repro.analysis.lint $(ROOTS)
+
+lint-sarif:
+	PYTHONPATH=src $(PY) -m repro.analysis.lint $(ROOTS) \
+		--json reprolint_report.json --sarif reprolint.sarif
+
+# regenerate the baseline (fill in every TODO why before committing)
+lint-baseline:
+	PYTHONPATH=src $(PY) -m repro.analysis.lint $(ROOTS) --write-baseline
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -q -m "not slow"
+
+test-slow:
+	PYTHONPATH=src $(PY) -m pytest -q -m slow

@@ -400,11 +400,17 @@ def serve_tier_sweep(tiers=(2, 4, 8), *, B: int = 8, clients: int = 8,
     bounded-session-store probe: a `max_sessions=1` service whose
     sessions all spill to host and restore must answer every request
     bit-for-bit like the unbounded service, with spills and restores
-    actually observed. Returns one flat dict of scalars (the smoke JSON
-    / BENCH_serve.json payload)."""
+    actually observed. Also runs the round-bucketing probe: the same
+    mixed window dispatched with and without
+    `ServeConfig.bucket_rounds` (pad fractions are deterministic
+    dispatch-shape counters, so the comparison carries no timing
+    noise). Returns one flat dict of scalars (the smoke JSON /
+    BENCH_serve.json payload)."""
+    import asyncio
+
     import numpy as np
-    from repro.launch.serve import (SchedulingService, ServeConfig,
-                                    ServeRequest, drive)
+    from repro.launch.serve import (BatchServer, SchedulingService,
+                                    ServeConfig, ServeRequest, drive)
     tiers = tuple(sorted(tiers))
     mix = tiers + tiers[:-1]                # mostly short requests
     load = dict(n_clients=clients, n_requests=requests, n_rounds=mix,
@@ -432,6 +438,32 @@ def serve_tier_sweep(tiers=(2, 4, 8), *, B: int = 8, clients: int = 8,
     ok = (ok and bounded.metrics.n_spills > 0
           and bounded.metrics.n_restores > 0
           and free.metrics.n_spills == 0)
+
+    # round-bucketing probe: one window holding the whole mix, every
+    # request enqueued BEFORE the collector starts, so the comparison
+    # is deterministic — bucketed, each request dispatches at exactly
+    # its own rung (pad 0 for a mix of exact tier sizes); unbucketed,
+    # the window routes to the max rung and every short cell pays its
+    # padded tail
+    def bucket_probe(bucket: bool) -> float:
+        svc = SchedulingService(ServeConfig(
+            batch=B, max_rounds=tiers[-1], tiers=tiers,
+            window_s=0.05, bucket_rounds=bucket))
+        svc.warmup(rounds=mix)
+
+        async def go():
+            srv = BatchServer(svc, max_batch=min(B, len(mix)))
+            subs = [asyncio.ensure_future(
+                srv.submit(ServeRequest(f"b{i}", n_rounds=r, seed=i)))
+                for i, r in enumerate(mix)]
+            await asyncio.sleep(0)      # all enqueued before collecting
+            async with srv:
+                await asyncio.gather(*subs)
+        asyncio.run(go())
+        return svc.metrics.summary()["pad_frac_rounds"]
+
+    pad_bucketed = bucket_probe(True)
+    pad_unbucketed = bucket_probe(False)
     return {
         "tier_speedup": tiered["rounds_per_s"] / single["rounds_per_s"],
         "pad_frac_rounds": tiered["pad_frac_rounds"],
@@ -441,6 +473,8 @@ def serve_tier_sweep(tiers=(2, 4, 8), *, B: int = 8, clients: int = 8,
         "single_rps": single["rounds_per_s"],
         "n_tiers_hit": len(tiered["tier_hits"]),
         "spill_restore_ok": bool(ok),
+        "pad_frac_rounds_bucketed": pad_bucketed,
+        "pad_frac_rounds_unbucketed": pad_unbucketed,
     }
 
 
@@ -528,6 +562,9 @@ def main(argv=None, csv=True, smoke=False):
         out["pad_frac_rounds"] = trow["pad_frac_rounds"]
         out["pad_frac_cells"] = trow["pad_frac_cells"]
         out["single_pad_frac_rounds"] = trow["single_pad_frac_rounds"]
+        out["pad_frac_rounds_bucketed"] = trow["pad_frac_rounds_bucketed"]
+        out["pad_frac_rounds_unbucketed"] = \
+            trow["pad_frac_rounds_unbucketed"]
         out["spill_restore_ok"] = trow["spill_restore_ok"]
         # mesh fields exist per available device count (the CI mesh lane
         # fakes 8 CPU devices; a plain host only emits the 1-device row)
@@ -549,6 +586,10 @@ def main(argv=None, csv=True, smoke=False):
         # pads to its own tier, not to the max horizon
         assert out["pad_frac_rounds"] < out["single_pad_frac_rounds"], \
             trow
+        # round bucketing strictly cuts the padded fraction on the
+        # same window: each rung's group pads to its own tier
+        assert out["pad_frac_rounds_bucketed"] < \
+            out["pad_frac_rounds_unbucketed"], trow
         if 1 in mesh_by_n and 8 in mesh_by_n:
             # 8 fake CPU devices share the host's cores, so sharding
             # buys no throughput here (measured ~0.1-0.2x) — the lever
@@ -608,6 +649,8 @@ def main(argv=None, csv=True, smoke=False):
           f"speedup={trow['tier_speedup']:4.1f}x  "
           f"pad_frac_rounds={trow['pad_frac_rounds']:.2f} "
           f"(single {trow['single_pad_frac_rounds']:.2f})  "
+          f"bucketed={trow['pad_frac_rounds_bucketed']:.2f} vs "
+          f"unbucketed={trow['pad_frac_rounds_unbucketed']:.2f}  "
           f"spill_restore_ok={trow['spill_restore_ok']}")
     return frac
 

@@ -1,0 +1,89 @@
+"""reprolint run cache: mtime-keyed findings memoization.
+
+Whole-program analysis (symbol table, call graph, traced-set fixpoint)
+is not incremental — one touched file can change the traced set of
+every other — so the cache memoizes at run granularity instead: the
+post-suppression findings of a full run, keyed on a tree signature of
+``{rel: (mtime_ns, size)}`` over exactly the files `load_files` would
+parse (both walk `iter_source_paths`, so they cannot disagree), plus
+the lint config and a rules version. Any edit anywhere in the scanned
+set misses; an untouched tree serves findings from JSON without
+parsing a single module, which is what keeps the warm CLI run
+sub-second.
+
+Rule selection (`--select`/`--ignore`) and the baseline are applied
+AFTER the cache layer, so neither invalidates it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.core import Finding, LintConfig
+from repro.analysis.manifest import iter_source_paths
+
+# bump when rule logic changes in a way mtimes cannot see (rules.py is
+# usually inside the scanned tree, so edits to it miss naturally; this
+# covers installs where it is not)
+CACHE_VERSION = 1
+
+
+def tree_signature(roots: Sequence[str], repo_root: str,
+                   exclude: Sequence[str] = ()) -> Dict[str, List[int]]:
+    """{rel: [mtime_ns, size]} for every file a lint run would parse."""
+    sig: Dict[str, List[int]] = {}
+    for path, rel in iter_source_paths(roots, repo_root, exclude):
+        st = os.stat(path)
+        sig[rel] = [st.st_mtime_ns, st.st_size]
+    return sig
+
+
+def cache_key(roots: Sequence[str], config: LintConfig,
+              signature: Dict[str, List[int]]) -> Dict[str, object]:
+    # json-normalize so the computed key compares equal to one that
+    # round-tripped through the cache file (tuples become lists)
+    return json.loads(json.dumps({
+        "version": CACHE_VERSION,
+        "roots": sorted(roots),
+        "config": dataclasses.asdict(config),
+        "signature": signature,
+    }))
+
+
+def load_cached(cache_path: str, key: Dict[str, object]
+                ) -> Optional[Tuple[List[Finding], int, int]]:
+    """(findings, n_suppressed, n_files) when the stored key matches
+    exactly, else None (missing, stale, or unreadable)."""
+    try:
+        with open(cache_path, encoding="utf-8") as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if data.get("key") != key:
+        return None
+    try:
+        findings = [Finding(**e) for e in data["findings"]]
+        return findings, int(data["n_suppressed"]), int(data["n_files"])
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+def store_cached(cache_path: str, key: Dict[str, object],
+                 findings: List[Finding], n_suppressed: int,
+                 n_files: int) -> None:
+    payload = {
+        "tool": "reprolint-cache",
+        "key": key,
+        "findings": [f.to_json() for f in findings],
+        "n_suppressed": n_suppressed,
+        "n_files": n_files,
+    }
+    tmp = cache_path + ".tmp"
+    try:
+        with open(tmp, "w", encoding="utf-8") as f:
+            json.dump(payload, f)
+        os.replace(tmp, cache_path)
+    except OSError:
+        pass            # a read-only checkout never fails the lint

@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import re
-from typing import Dict, List, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +58,14 @@ class LintConfig:
     # part of the repo tree
     exclude: Tuple[str, ...] = ("tests/analysis_fixtures",
                                 ".jax_cache", "__pycache__")
+    # §13 occupancy-invariance boundary modules: the documented places
+    # that pin the cross-B boundary itself and may therefore compare
+    # differently-batched executables bitwise (rule occupancy-boundary
+    # exempts them; everywhere else needs a tolerance or a
+    # disable-with-why)
+    boundary_modules: Tuple[str, ...] = (
+        "src/repro/launch/serve.py", "tests/test_serve.py",
+        "examples/serve_batch.py")
     # dtype-contract fallbacks, used when the scanned fileset does not
     # itself define FLEET_CAST_FIELDS / FleetState (e.g. fixture runs);
     # a repo run parses the live values out of core/streaming.py and
@@ -130,14 +138,20 @@ class Baseline:
             return cls(())
         return cls(data.get("findings", []))
 
-    def split(self, findings: List[Finding]
+    def split(self, findings: List[Finding],
+              active_rules: Optional[Set[str]] = None
               ) -> Tuple[List[Finding], List[Finding], List[Dict[str, str]]]:
-        """-> (new findings, baselined findings, stale baseline entries)."""
+        """-> (new findings, baselined findings, stale baseline entries).
+
+        `active_rules` restricts STALENESS to entries whose rule ran:
+        under `--select timer-no-block`, a jit-cache-key entry matches
+        no finding by construction and must not be reported stale."""
         new = [f for f in findings if f.key() not in self._keys]
         old = [f for f in findings if f.key() in self._keys]
         hit = {f.key() for f in old}
         stale = [e for e in self.entries
-                 if (e["rule"], e["path"], e["scope"]) not in hit]
+                 if (e["rule"], e["path"], e["scope"]) not in hit
+                 and (active_rules is None or e["rule"] in active_rules)]
         return new, old, stale
 
     @staticmethod
@@ -169,12 +183,55 @@ def render_human(new: List[Finding], baselined: List[Finding],
     return "\n".join(out)
 
 
+def render_sarif(new: List[Finding], baselined: List[Finding],
+                 rule_docs: Dict[str, str]) -> str:
+    """SARIF 2.1.0 report for `github/codeql-action/upload-sarif` —
+    new findings annotate PR diffs at `error` level; baselined ones
+    ride along as `note` so grandfathered hazards stay visible inline.
+    The partialFingerprints carry the (rule, path, scope) identity
+    triple so GitHub tracks a finding across unrelated edits the same
+    way the baseline does."""
+    rules = [{
+        "id": rid,
+        "shortDescription": {
+            "text": (doc or rid).strip().splitlines()[0]},
+        "defaultConfiguration": {"level": "error"},
+    } for rid, doc in sorted(rule_docs.items())]
+    results = []
+    for findings, level in ((new, "error"), (baselined, "note")):
+        for f in sorted(findings, key=lambda f: (f.path, f.line)):
+            results.append({
+                "ruleId": f.rule,
+                "level": level,
+                "message": {"text": f.message},
+                "locations": [{"physicalLocation": {
+                    "artifactLocation": {"uri": f.path,
+                                         "uriBaseId": "%SRCROOT%"},
+                    "region": {"startLine": f.line},
+                }}],
+                "partialFingerprints": {
+                    "reprolintKey/v1": "|".join(f.key())},
+            })
+    return json.dumps({
+        "$schema": "https://json.schemastore.org/sarif-2.1.0.json",
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {
+                "name": "reprolint",
+                "rules": rules,
+            }},
+            "results": results,
+        }],
+    }, indent=2) + "\n"
+
+
 def render_json(new: List[Finding], baselined: List[Finding],
                 stale: List[Dict[str, str]], n_suppressed: int,
-                n_files: int) -> str:
+                n_files: int, cache_hit: bool = False) -> str:
     return json.dumps({
         "tool": "reprolint",
         "files_scanned": n_files,
+        "cache_hit": cache_hit,
         "new": [f.to_json() for f in
                 sorted(new, key=lambda f: (f.path, f.line))],
         "baselined": [f.to_json() for f in

@@ -6,21 +6,31 @@ Exit code 0 when every finding is either inline-suppressed or in the
 checked-in baseline (`reprolint_baseline.json`); 1 when there are new
 findings; 2 when the baseline has stale entries (code got fixed —
 shrink the baseline). `--json PATH` additionally writes the machine
-report CI uploads as an artifact; `--write-baseline` regenerates the
-baseline from the current findings (each entry's `why` starts as TODO
-and must be filled in by hand before commit).
+report CI uploads as an artifact; `--sarif PATH` writes a SARIF 2.1.0
+report for inline PR annotations; `--select`/`--ignore` restrict the
+active rule set (staleness is then judged only against selected
+rules); `--write-baseline` regenerates the baseline from the current
+findings (each entry's `why` starts as TODO and must be filled in by
+hand before commit).
+
+Warm runs are served from an mtime-keyed cache
+(`.reprolint_cache.json`, see `cache.py`); `--no-cache` forces a full
+re-analysis.
 """
 from __future__ import annotations
 
 import argparse
 import ast
+import dataclasses
 import os
 import sys
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.analysis.cache import (cache_key, load_cached, store_cached,
+                                  tree_signature)
 from repro.analysis.core import (Baseline, Finding, LintConfig,
                                  apply_suppressions, render_human,
-                                 render_json)
+                                 render_json, render_sarif)
 from repro.analysis.manifest import Manifest, SourceFile, load_files
 from repro.analysis.rules import RULES, LintContext
 
@@ -56,30 +66,82 @@ def _contract_fields(files: Sequence[SourceFile],
     return cast, state
 
 
+@dataclasses.dataclass
+class LintResult:
+    new: List[Finding]
+    baselined: List[Finding]
+    stale: List[Dict[str, str]]
+    n_suppressed: int
+    n_files: int
+    cache_hit: bool = False
+
+
+def active_rules(select: Optional[Sequence[str]] = None,
+                 ignore: Optional[Sequence[str]] = None) -> Set[str]:
+    """Rule ids a run executes; unknown ids are an error, not a typo
+    that silently lints nothing."""
+    unknown = (set(select or ()) | set(ignore or ())) - set(RULES)
+    if unknown:
+        raise ValueError(f"unknown rule id(s): {sorted(unknown)}; "
+                         f"known: {sorted(RULES)}")
+    active = set(select) if select else set(RULES)
+    return active - set(ignore or ())
+
+
 def run_lint(roots: Sequence[str], repo_root: str,
              config: Optional[LintConfig] = None,
              baseline: Optional[Baseline] = None,
-             ) -> Tuple[List[Finding], List[Finding],
-                        List[Dict[str, str]], int, int]:
+             select: Optional[Sequence[str]] = None,
+             ignore: Optional[Sequence[str]] = None,
+             cache_path: Optional[str] = None) -> LintResult:
     """Lint `roots` (paths relative to `repo_root`).
 
-    Returns (new, baselined, stale_baseline_entries, n_suppressed,
-    n_files). `new` non-empty means the tree is dirty."""
+    `result.new` non-empty means the tree is dirty. With `cache_path`
+    set, an unchanged tree (same mtimes/sizes over exactly the files
+    the run would parse) is served from the cache without parsing;
+    rule selection and the baseline are applied after the cache, so
+    they never invalidate it."""
     cfg = config or LintConfig()
-    files = load_files(roots, repo_root, exclude=cfg.exclude)
-    manifest = Manifest(files)
-    cast, state = _contract_fields(files, cfg)
-    ctx = LintContext(manifest=manifest, config=cfg,
-                      fleet_cast_fields=cast,
-                      fleet_state_fields=state)
-    findings: List[Finding] = []
-    for rule_fn in RULES.values():
-        findings.extend(rule_fn(ctx))
-    findings, n_supp = apply_suppressions(
-        findings, {f.rel: f.lines for f in files})
+    key = None
+    findings: Optional[List[Finding]] = None
+    n_supp = n_files = 0
+    cache_hit = False
+    if cache_path:
+        key = cache_key(roots, cfg,
+                        tree_signature(roots, repo_root, cfg.exclude))
+        cached = load_cached(cache_path, key)
+        if cached is not None:
+            findings, n_supp, n_files = cached
+            cache_hit = True
+    if findings is None:
+        files = load_files(roots, repo_root, exclude=cfg.exclude)
+        manifest = Manifest(files)
+        cast, state = _contract_fields(files, cfg)
+        ctx = LintContext(manifest=manifest, config=cfg,
+                          fleet_cast_fields=cast,
+                          fleet_state_fields=state)
+        findings = []
+        for rule_fn in RULES.values():
+            findings.extend(rule_fn(ctx))
+        findings, n_supp = apply_suppressions(
+            findings, {f.rel: f.lines for f in files})
+        n_files = len(files)
+        if cache_path and key is not None:
+            store_cached(cache_path, key, findings, n_supp, n_files)
+    active = active_rules(select, ignore)
+    findings = [f for f in findings if f.rule in active]
     base = baseline if baseline is not None else Baseline(())
-    new, old, stale = base.split(findings)
-    return new, old, stale, n_supp, len(files)
+    new, old, stale = base.split(findings, active_rules=active)
+    return LintResult(new=new, baselined=old, stale=stale,
+                      n_suppressed=n_supp, n_files=n_files,
+                      cache_hit=cache_hit)
+
+
+def _split_rule_args(vals: Optional[Sequence[str]]
+                     ) -> Optional[List[str]]:
+    if not vals:
+        return None
+    return [r.strip() for v in vals for r in v.split(",") if r.strip()]
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -96,34 +158,67 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                    help="baseline path relative to --repo-root")
     p.add_argument("--json", dest="json_out", default=None,
                    help="also write the JSON report to this path")
+    p.add_argument("--sarif", dest="sarif_out", default=None,
+                   help="also write a SARIF 2.1.0 report (GitHub "
+                        "code-scanning PR annotations)")
+    p.add_argument("--select", action="append", default=None,
+                   metavar="RULE[,RULE...]",
+                   help="run only these rule ids (repeatable); "
+                        "baseline staleness is judged only against "
+                        "selected rules")
+    p.add_argument("--ignore", action="append", default=None,
+                   metavar="RULE[,RULE...]",
+                   help="skip these rule ids (repeatable)")
     p.add_argument("--write-baseline", action="store_true",
                    help="regenerate the baseline from current "
                         "findings and exit 0")
     p.add_argument("--no-baseline", action="store_true",
                    help="ignore the baseline (report everything "
                         "as new)")
+    p.add_argument("--no-cache", action="store_true",
+                   help="bypass the mtime-keyed findings cache")
+    p.add_argument("--cache-path", default=".reprolint_cache.json",
+                   help="cache file relative to --repo-root")
     args = p.parse_args(argv)
 
     base_path = os.path.join(args.repo_root, args.baseline)
     baseline = Baseline(()) if args.no_baseline \
         else Baseline.load(base_path)
-    new, old, stale, n_supp, n_files = run_lint(
-        args.roots, args.repo_root, baseline=baseline)
+    select = _split_rule_args(args.select)
+    ignore = _split_rule_args(args.ignore)
+    cache_path = None if args.no_cache else \
+        os.path.join(args.repo_root, args.cache_path)
+    try:
+        res = run_lint(args.roots, args.repo_root, baseline=baseline,
+                       select=select, ignore=ignore,
+                       cache_path=cache_path)
+    except ValueError as e:       # unknown --select/--ignore rule id
+        print(f"reprolint: {e}", file=sys.stderr)
+        return 2
 
     if args.write_baseline:
         with open(base_path, "w") as f:
-            f.write(Baseline.render(new + old))
-        print(f"reprolint: wrote {len({x.key() for x in new + old})} "
+            f.write(Baseline.render(res.new + res.baselined))
+        print(f"reprolint: wrote "
+              f"{len({x.key() for x in res.new + res.baselined})} "
               f"entr(ies) to {args.baseline}")
         return 0
 
     if args.json_out:
         with open(args.json_out, "w") as f:
-            f.write(render_json(new, old, stale, n_supp, n_files))
-    print(render_human(new, old, stale, n_supp, n_files))
-    if new:
+            f.write(render_json(res.new, res.baselined, res.stale,
+                                res.n_suppressed, res.n_files,
+                                cache_hit=res.cache_hit))
+    if args.sarif_out:
+        docs = {rid: (fn.__doc__ or rid)
+                for rid, fn in RULES.items()}
+        with open(args.sarif_out, "w") as f:
+            f.write(render_sarif(res.new, res.baselined, docs))
+    print(render_human(res.new, res.baselined, res.stale,
+                       res.n_suppressed, res.n_files))
+    if res.new:
         return 1
-    if stale:
+    if res.stale:
         return 2
     return 0
 

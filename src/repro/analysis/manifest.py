@@ -116,11 +116,13 @@ def _collect_aliases(sf: SourceFile) -> None:
                     sf.aliases[a.asname or a.name] = f"{mod}.{a.name}"
 
 
-def load_files(roots: Sequence[str], repo_root: str,
-               exclude: Sequence[str] = ()) -> List[SourceFile]:
-    """Parse every .py under `roots` (files or directories), skipping
-    any whose repo-relative path contains an `exclude` fragment."""
-    out: List[SourceFile] = []
+def iter_source_paths(roots: Sequence[str], repo_root: str,
+                      exclude: Sequence[str] = ()
+                      ) -> List[Tuple[str, str]]:
+    """(abs_path, repo-relative posix path) for every .py under
+    `roots`, in deterministic order, minus `exclude` fragments. Shared
+    by `load_files` and the lint cache's tree signature so the two can
+    never disagree about what a run covers."""
     paths: List[str] = []
     for root in roots:
         root = os.path.join(repo_root, root)
@@ -132,12 +134,31 @@ def load_files(roots: Sequence[str], repo_root: str,
                                  if not d.startswith("."))
             paths.extend(os.path.join(dirpath, f)
                          for f in sorted(filenames) if f.endswith(".py"))
+    out: List[Tuple[str, str]] = []
     seen: Set[str] = set()
     for p in paths:
         rel = os.path.relpath(p, repo_root).replace(os.sep, "/")
         if rel in seen or any(x in rel for x in exclude):
             continue
         seen.add(rel)
+        out.append((p, rel))
+    return out
+
+
+def is_test_file(rel: str) -> bool:
+    """Part of the test tree (where retrace pins and parity matrices
+    live): under tests/ or a pytest-collected test_*.py / conftest."""
+    base = rel.rsplit("/", 1)[-1]
+    return (rel.startswith("tests/") or "/tests/" in rel
+            or base.startswith("test_") or base == "conftest.py")
+
+
+def load_files(roots: Sequence[str], repo_root: str,
+               exclude: Sequence[str] = ()) -> List[SourceFile]:
+    """Parse every .py under `roots` (files or directories), skipping
+    any whose repo-relative path contains an `exclude` fragment."""
+    out: List[SourceFile] = []
+    for p, rel in iter_source_paths(roots, repo_root, exclude):
         with open(p, encoding="utf-8") as f:
             src = f.read()
         tree = ast.parse(src, filename=rel)
@@ -259,7 +280,44 @@ class Manifest:
                     self.funcs.append(fi)
                     self._by_name.setdefault(name, []).append(fi)
                     self._by_node[id(node)] = fi
+        # whole-program symbol table: module-qualified def name
+        # ("repro.fl.engine.fused_segment", "repro...Cls.meth") → FuncInfo
+        self.symbols: Dict[str, FuncInfo] = {}
+        for fi in self.funcs:
+            if not isinstance(fi.node, ast.Lambda) and fi.sf.module:
+                self.symbols.setdefault(
+                    f"{fi.sf.module}.{fi.qual}", fi)
+        # module-level assignment table: module → {name: value expr}.
+        # Lets cross-file resolution follow re-export aliases
+        # (`_fused_segment = fused_segment`) and lets rules read
+        # statically-known registries (the SCHEDULERS dict literal).
+        self.module_assigns: Dict[str, Dict[str, ast.AST]] = {}
+        for sf in self.files:
+            if not sf.module:
+                continue
+            tbl = self.module_assigns.setdefault(sf.module, {})
+            for node in sf.tree.body:
+                if isinstance(node, ast.Assign):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            tbl[t.id] = node.value
+                elif isinstance(node, ast.AnnAssign) and \
+                        node.value is not None and \
+                        isinstance(node.target, ast.Name):
+                    tbl[node.target.id] = node.value
         self.imports = self._import_graph()
+        # cross-module call graph over resolved defs (alias tables +
+        # symbol table; no devirtualization — edges are exact)
+        self.call_graph: Dict[Tuple[str, str, int],
+                              Set[Tuple[str, str, int]]] = {}
+        for fi in self.funcs:
+            edges: Set[Tuple[str, str, int]] = set()
+            for n in ast.walk(fi.node):
+                if isinstance(n, ast.Call):
+                    tgt = self.resolve_def(fi.sf, n.func)
+                    if tgt is not None and tgt is not fi:
+                        edges.add(tgt.uid)
+            self.call_graph[fi.uid] = edges
         self.traced: Set[Tuple[str, str, int]] = set()
         # per-traced-function names of parameters that carry traced
         # VALUES (static config params stay out — `int(cfg.n_rounds)`
@@ -287,6 +345,64 @@ class Manifest:
 
     def func_of(self, node: ast.AST) -> Optional[FuncInfo]:
         return self._by_node.get(id(node))
+
+    def module_value(self, module: str, name: str
+                     ) -> Optional[ast.AST]:
+        """Value expression of a module-level assignment, if scanned."""
+        return self.module_assigns.get(module, {}).get(name)
+
+    def lookup_symbol(self, dotted_name: str,
+                      _seen: Optional[Set[str]] = None
+                      ) -> Optional[FuncInfo]:
+        """Def named by a canonical dotted path, following module-level
+        assignment aliases (`_fused_segment = fused_segment` hops to
+        the engine def) across files, cycle-guarded."""
+        if not dotted_name:
+            return None
+        fi = self.symbols.get(dotted_name)
+        if fi is not None:
+            return fi
+        parts = dotted_name.split(".")
+        if len(parts) < 2:
+            return None
+        mod = self._repo_module(".".join(parts[:-1]))
+        if mod is None:
+            return None
+        v = self.module_value(mod, parts[-1])
+        if v is None or not isinstance(v, (ast.Name, ast.Attribute)):
+            return None
+        seen = _seen or set()
+        if dotted_name in seen:
+            return None
+        seen.add(dotted_name)
+        sf2 = self.by_module[mod]
+        alias = self.resolve(sf2, v) or dotted(v)
+        if alias is None:
+            return None
+        for cand in (alias, f"{mod}.{alias}" if "." not in alias
+                     else None):
+            if cand:
+                hit = self.lookup_symbol(cand, seen)
+                if hit is not None:
+                    return hit
+        return None
+
+    def resolve_def(self, sf: SourceFile, node: ast.AST
+                    ) -> Optional[FuncInfo]:
+        """Cross-file: the def a call-target expression denotes, via
+        the file's alias table and the repo symbol table. Bare names
+        try the same module first (locals shadow imports of the same
+        name only through the alias table, which already reflects the
+        last import statement)."""
+        d = dotted(node)
+        if d is None:
+            return None
+        resolved = self.resolve(sf, node) or d
+        if "." not in d and sf.module:
+            hit = self.lookup_symbol(f"{sf.module}.{resolved}")
+            if hit is not None:
+                return hit
+        return self.lookup_symbol(resolved)
 
     def defs_named(self, name: str) -> List[FuncInfo]:
         return self._by_name.get(name, [])

@@ -14,11 +14,13 @@ from __future__ import annotations
 import ast
 import builtins
 import dataclasses
+import re
 from typing import Dict, List, Optional, Set, Tuple
 
 from repro.analysis.core import Finding, LintConfig
 from repro.analysis.manifest import (FuncNode, Manifest, SourceFile,
-                                     dotted, param_derived)
+                                     dotted, is_test_file,
+                                     param_derived)
 
 
 @dataclasses.dataclass
@@ -313,6 +315,52 @@ def _donated_indices(call: ast.Call) -> Optional[Tuple[int, ...]]:
     return None
 
 
+def _donation_findings(ctx: LintContext, rule: str, sf: "SourceFile",
+                       node: ast.AST,
+                       donors: Dict[str, Tuple[int, ...]],
+                       origin: str) -> List[Finding]:
+    """Linear event walk by line over one function body:
+    donate → (load ⇒ finding) | (store ⇒ kill). Shared by the
+    per-file rule 5 and the cross-file rule 9."""
+    out: List[Finding] = []
+    events: List[Tuple[int, int, str, str, ast.AST]] = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call) and \
+                isinstance(n.func, ast.Name) and \
+                n.func.id in donors:
+            for i in donors[n.func.id]:
+                if i < len(n.args) and \
+                        isinstance(n.args[i], ast.Name):
+                    events.append((n.lineno, n.col_offset,
+                                   "donate", n.args[i].id, n))
+        elif isinstance(n, ast.Name):
+            kind = "load" if isinstance(n.ctx, ast.Load) \
+                else "store"
+            events.append((n.lineno, n.col_offset, kind,
+                           n.id, n))
+    donated: Set[str] = set()
+    # within one line, follow python evaluation order — RHS
+    # loads, then the donating call, then the statement's
+    # stores — so `carry, _ = step(carry, x)` (the correct
+    # rebind idiom) neither flags the argument load nor lets
+    # the pre-call store mask the donation
+    _PRIO = {"load": 0, "donate": 1, "store": 2}
+    for _, _, kind, name, n in sorted(
+            events, key=lambda e: (e[0], _PRIO[e[2]], e[1])):
+        if kind == "donate":
+            donated.add(name)
+        elif kind == "store":
+            donated.discard(name)
+        elif name in donated:
+            donated.discard(name)   # report once per donation
+            out.append(ctx.finding(
+                rule, sf, n,
+                f"`{name}` was donated to a {origin} and read "
+                f"afterwards — its buffer no longer exists; rebind "
+                f"the result or drop donation"))
+    return out
+
+
 def rule_donation_reuse(ctx: LintContext) -> List[Finding]:
     """An argument passed at a `donate_argnums` position is dead after
     the call — its buffer was handed to XLA. Reading it afterwards
@@ -332,46 +380,10 @@ def rule_donation_reuse(ctx: LintContext) -> List[Finding]:
         if not donors:
             continue
         for node in ast.walk(sf.tree):
-            if not isinstance(node, FuncNode):
-                continue
-            # linear event walk by line: donate → (load ⇒ finding) |
-            # (store ⇒ kill)
-            events: List[Tuple[int, int, str, str, ast.AST]] = []
-            for n in ast.walk(node):
-                if isinstance(n, ast.Call) and \
-                        isinstance(n.func, ast.Name) and \
-                        n.func.id in donors:
-                    for i in donors[n.func.id]:
-                        if i < len(n.args) and \
-                                isinstance(n.args[i], ast.Name):
-                            events.append((n.lineno, n.col_offset,
-                                           "donate", n.args[i].id, n))
-                elif isinstance(n, ast.Name):
-                    kind = "load" if isinstance(n.ctx, ast.Load) \
-                        else "store"
-                    events.append((n.lineno, n.col_offset, kind,
-                                   n.id, n))
-            donated: Set[str] = set()
-            # within one line, follow python evaluation order — RHS
-            # loads, then the donating call, then the statement's
-            # stores — so `carry, _ = step(carry, x)` (the correct
-            # rebind idiom) neither flags the argument load nor lets
-            # the pre-call store mask the donation
-            _PRIO = {"load": 0, "donate": 1, "store": 2}
-            for _, _, kind, name, n in sorted(
-                    events, key=lambda e: (e[0], _PRIO[e[2]], e[1])):
-                if kind == "donate":
-                    donated.add(name)
-                elif kind == "store":
-                    donated.discard(name)
-                elif name in donated:
-                    donated.discard(name)   # report once per donation
-                    out.append(ctx.finding(
-                        "donation-reuse", sf, n,
-                        f"`{name}` was donated to a "
-                        f"donate_argnums jit and read afterwards — "
-                        f"its buffer no longer exists; rebind the "
-                        f"result or drop donation"))
+            if isinstance(node, FuncNode):
+                out.extend(_donation_findings(
+                    ctx, "donation-reuse", sf, node, donors,
+                    "donate_argnums jit"))
     return out
 
 
@@ -526,6 +538,362 @@ def rule_dead_module(ctx: LintContext) -> List[Finding]:
     return out
 
 
+# --------------------------------------------------------------------
+# rule 9 · donation-reuse-xfile
+# --------------------------------------------------------------------
+
+def _donor_factories(m: Manifest) -> Dict[Tuple[str, str, int],
+                                          Tuple[int, ...]]:
+    """Functions that RETURN a `donate_argnums` jit (the compile-
+    factory pattern: `return jax.jit(step, donate_argnums=(0,))`,
+    possibly through a local name), keyed by FuncInfo uid with the
+    donated positions. Conditional donation (`(0,) if donate else ()`)
+    counts as donating — callers must assume the hot configuration."""
+    out: Dict[Tuple[str, str, int], Tuple[int, ...]] = {}
+    for fi in m.funcs:
+        if isinstance(fi.node, ast.Lambda):
+            continue
+        local: Dict[str, Tuple[int, ...]] = {}
+        for n in ast.walk(fi.node):
+            if isinstance(n, ast.Assign) and \
+                    isinstance(n.value, ast.Call) and \
+                    m.resolve(fi.sf, n.value.func) == "jax.jit":
+                idx = _donated_indices(n.value)
+                if idx:
+                    for t in n.targets:
+                        if isinstance(t, ast.Name):
+                            local[t.id] = idx
+        for n in ast.walk(fi.node):
+            if not (isinstance(n, ast.Return) and n.value is not None
+                    and m.enclosing_func(n) is fi):
+                continue
+            if isinstance(n.value, ast.Call) and \
+                    m.resolve(fi.sf, n.value.func) == "jax.jit":
+                idx = _donated_indices(n.value)
+                if idx:
+                    out[fi.uid] = idx
+            elif isinstance(n.value, ast.Name) and \
+                    n.value.id in local:
+                out[fi.uid] = local[n.value.id]
+    return out
+
+
+def rule_donation_reuse_xfile(ctx: LintContext) -> List[Finding]:
+    """Rule 5 catches `f = jax.jit(...)` reuse in the SAME file; this
+    closes the cross-file hole: a callable obtained from a donor
+    FACTORY defined in another module (`step = _fused_exec(...)`)
+    donates its caller's buffers just the same, and reading the
+    argument after the call returns garbage. Factories are resolved
+    through the repo symbol table, so helper aliases and re-exports
+    are followed."""
+    m, out = ctx.manifest, []
+    factories = _donor_factories(m)
+    if not factories:
+        return []
+    for fi in m.funcs:
+        if isinstance(fi.node, ast.Lambda):
+            continue
+        donors: Dict[str, Tuple[int, ...]] = {}
+        for n in ast.walk(fi.node):
+            if not (isinstance(n, ast.Assign)
+                    and isinstance(n.value, ast.Call)):
+                continue
+            if m.resolve(fi.sf, n.value.func) == "jax.jit":
+                continue          # rule 5's territory
+            tgt = m.resolve_def(fi.sf, n.value.func)
+            if tgt is not None and tgt.uid in factories:
+                for t in n.targets:
+                    if isinstance(t, ast.Name):
+                        donors[t.id] = factories[tgt.uid]
+        if donors:
+            out.extend(_donation_findings(
+                ctx, "donation-reuse-xfile", fi.sf, fi.node, donors,
+                "donating compile factory's jit"))
+    return out
+
+
+# --------------------------------------------------------------------
+# rule 10 · retrace-budget
+# --------------------------------------------------------------------
+
+def _is_compile_factory(m: Manifest, fi) -> bool:
+    """lru_cache-decorated def whose body mentions `jax.jit` (call,
+    decorator on an inner def, or partial) — the one-trace-per-shape
+    pattern every engine hot path uses."""
+    if isinstance(fi.node, ast.Lambda):
+        return False
+    if not _is_lru_decorated(m, fi.sf, fi.node):
+        return False
+    for n in ast.walk(fi.node):
+        if isinstance(n, (ast.Attribute, ast.Name)) and \
+                m.resolve(fi.sf, n) == "jax.jit":
+            return True
+    return False
+
+
+def _pin_targets(m: Manifest, sf, scope_node, expr,
+                 factories: Dict[Tuple[str, str, int], Tuple[int, ...]],
+                 depth: int = 0) -> Set[Tuple[str, str, int]]:
+    """Factory uids an `assert_no_retrace(expr, ...)` pin covers.
+    Follows (a) direct factory calls, (b) local names assigned from a
+    covered expression inside the same test, (c) one hop through a
+    local helper whose body calls a factory (the `_seg_of(sim)`
+    reconstruction idiom)."""
+    if depth > 2:
+        return set()
+    covered: Set[Tuple[str, str, int]] = set()
+    if isinstance(expr, ast.Call):
+        tgt = m.resolve_def(sf, expr.func)
+        if tgt is not None:
+            if tgt.uid in factories:
+                covered.add(tgt.uid)
+            else:
+                # helper hop: every factory the helper's body invokes
+                for n in ast.walk(tgt.node):
+                    if isinstance(n, ast.Call):
+                        t2 = m.resolve_def(tgt.sf, n.func)
+                        if t2 is not None and t2.uid in factories:
+                            covered.add(t2.uid)
+    elif isinstance(expr, ast.Name):
+        for n in ast.walk(scope_node):
+            if isinstance(n, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == expr.id
+                    for t in n.targets):
+                covered |= _pin_targets(m, sf, scope_node, n.value,
+                                        factories, depth + 1)
+    return covered
+
+
+def rule_retrace_budget(ctx: LintContext) -> List[Finding]:
+    """Every lru_cache compile factory in `src/` must be covered by an
+    `assert_no_retrace(fn, compiles=N)` pin somewhere in the test
+    tree. A factory without a pin can silently start retracing per
+    call (a cache-key regression like the PR-5 eval_fn fork) and
+    nothing fails until a latency cliff ships. Skipped when the
+    scanned set carries no test files (partial-tree runs)."""
+    m, out = ctx.manifest, []
+    test_files = [sf for sf in m.files if is_test_file(sf.rel)]
+    if not test_files:
+        return []
+    factories = {
+        fi.uid: ()
+        for fi in m.funcs
+        if fi.sf.rel.startswith("src/") and _is_compile_factory(m, fi)}
+    if not factories:
+        return []
+    covered: Set[Tuple[str, str, int]] = set()
+    for sf in test_files:
+        for n in ast.walk(sf.tree):
+            if not (isinstance(n, ast.Call) and n.args):
+                continue
+            leaf = (n.func.attr if isinstance(n.func, ast.Attribute)
+                    else n.func.id if isinstance(n.func, ast.Name)
+                    else "")
+            if leaf != "assert_no_retrace":
+                continue
+            encl = m.enclosing_func(n)
+            scope = encl.node if encl is not None else sf.tree
+            covered |= _pin_targets(m, sf, scope, n.args[0], factories)
+    for fi in m.funcs:
+        if fi.uid in factories and fi.uid not in covered:
+            out.append(ctx.finding(
+                "retrace-budget", fi.sf, fi.node,
+                f"lru_cache compile factory `{fi.qual}` has no "
+                f"`assert_no_retrace(fn, compiles=N)` pin in the test "
+                f"tree — an unpinned factory can regress to "
+                f"per-call retracing without failing any test"))
+    return out
+
+
+# --------------------------------------------------------------------
+# rule 11 · parity-coverage
+# --------------------------------------------------------------------
+
+_PARITY_TEST_RE = re.compile(r"match|parity|_vs_")
+
+
+def _string_constants(m: Manifest, sf, expr, depth: int = 0
+                      ) -> Set[str]:
+    """String literals reachable from `expr`, following Name loads to
+    module-level assignments (local or imported) one hop — so a
+    parametrize over an explicit `PARITY_SCHEDULERS = (...)` tuple is
+    statically readable. References that resolve back to a registry
+    named `SCHEDULERS` are deliberately opaque: deriving a parity
+    matrix from the live registry hides the per-scheduler coverage
+    decision this rule exists to force."""
+    out: Set[str] = set()
+    if depth > 2 or expr is None:
+        return out
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Constant) and isinstance(n.value, str):
+            out.add(n.value)
+        elif isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load):
+            if n.id == "SCHEDULERS":
+                continue
+            resolved = m.resolve(sf, n) or n.id
+            if resolved.split(".")[-1] == "SCHEDULERS":
+                continue
+            cands = []
+            if "." in resolved:
+                mod = m._repo_module(
+                    ".".join(resolved.split(".")[:-1]))
+                if mod is not None:
+                    cands.append((mod, resolved.split(".")[-1]))
+            if sf.module:
+                cands.append((sf.module, n.id))
+            for mod, leaf in cands:
+                v = m.module_value(mod, leaf)
+                if v is not None and v is not expr:
+                    out |= _string_constants(
+                        m, m.by_module[mod], v, depth + 1)
+                    break
+    return out
+
+
+def rule_parity_coverage(ctx: LintContext) -> List[Finding]:
+    """Every scheduler registered in the `SCHEDULERS` registry must
+    appear, by name, in at least one blocked-vs-fused / packed-vs-solo
+    parity matrix in the test tree. A scheduler outside the matrix has
+    no bitwise pin against the paper's per-round math — a new
+    (e.g. learned) scheduler that skips the pin is a lint error, not a
+    review nit. Matrices must enumerate names via explicit literals
+    (`PARITY_SCHEDULERS`); parametrizing over the registry itself is
+    opaque to this rule by design."""
+    m, out = ctx.manifest, []
+    test_files = [sf for sf in m.files if is_test_file(sf.rel)]
+    if not test_files:
+        return []
+    registries = []                # (sf, key node, scheduler name)
+    for sf in m.files:
+        for node in sf.tree.body:
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AnnAssign):   # SCHEDULERS: Dict[...] = {...}
+                targets = [node.target]
+            else:
+                continue
+            if any(isinstance(t, ast.Name) and t.id == "SCHEDULERS"
+                   for t in targets) and \
+                    isinstance(node.value, ast.Dict):
+                for k in node.value.keys:
+                    if isinstance(k, ast.Constant) and \
+                            isinstance(k.value, str):
+                        registries.append((sf, k, k.value))
+    if not registries:
+        return []
+    parity_names: Set[str] = set()
+    for sf in test_files:
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, FuncNode)
+                    and node.name.startswith("test_")
+                    and _PARITY_TEST_RE.search(node.name)):
+                continue
+            for dec in node.decorator_list:
+                if not (isinstance(dec, ast.Call)
+                        and len(dec.args) >= 2):
+                    continue
+                r = m.resolve(sf, dec.func) or ""
+                if not r.endswith("parametrize"):
+                    continue
+                argnames = dec.args[0]
+                if isinstance(argnames, ast.Constant) and \
+                        "name" in str(argnames.value):
+                    parity_names |= _string_constants(
+                        m, sf, dec.args[1])
+    for sf, key_node, name in registries:
+        if name not in parity_names:
+            out.append(ctx.finding(
+                "parity-coverage", sf, key_node,
+                f"scheduler `{name}` is registered in SCHEDULERS but "
+                f"appears in no blocked-vs-fused/packed-vs-solo "
+                f"parity matrix — add it to the explicit "
+                f"PARITY_SCHEDULERS list (or a new matrix) so its "
+                f"compiled program is pinned against the per-round "
+                f"reference"))
+    return out
+
+
+# --------------------------------------------------------------------
+# rule 12 · occupancy-boundary
+# --------------------------------------------------------------------
+
+_EXACT_CMP = {"numpy.testing.assert_array_equal", "numpy.array_equal",
+              "jax.numpy.array_equal"}
+_BATCH_KWARGS = {"batch", "B", "occupancy"}
+
+
+def rule_occupancy_boundary(ctx: LintContext) -> List[Finding]:
+    """DESIGN.md §13: differently-batched `[L,B]` executables
+    fuse/tile differently on XLA and per-cell floats drift, so exact
+    float comparisons across different `B` signatures are only valid
+    inside the documented boundary modules (which pin the boundary
+    itself). Anywhere else, a comparison whose two operands trace to
+    calls with different static `batch=`/`B=`/`occupancy=` literals
+    must carry an explicit tolerance (`assert_allclose`) or a
+    disable-with-why."""
+    m, cfg, out = ctx.manifest, ctx.config, []
+    for fi in m.funcs:
+        sf = fi.sf
+        if isinstance(fi.node, ast.Lambda) or any(
+                sf.rel == b or sf.rel.startswith(b.rstrip("/") + "/")
+                for b in cfg.boundary_modules):
+            continue
+        sig: Dict[str, Set[int]] = {}
+
+        def expr_sig(e: ast.AST) -> Set[int]:
+            s: Set[int] = set()
+            for n in ast.walk(e):
+                if isinstance(n, ast.Call):
+                    for kw in n.keywords:
+                        if kw.arg in _BATCH_KWARGS and \
+                                isinstance(kw.value, ast.Constant) and \
+                                isinstance(kw.value.value, int):
+                            s.add(kw.value.value)
+                elif isinstance(n, ast.Name) and \
+                        isinstance(n.ctx, ast.Load) and n.id in sig:
+                    s |= sig[n.id]
+            return s
+
+        assigns = [n for n in ast.walk(fi.node)
+                   if isinstance(n, ast.Assign)
+                   and m.enclosing_func(n) is fi]
+        for _ in range(3):         # bounded fixpoint over fwd refs
+            changed = False
+            for n in assigns:
+                s = expr_sig(n.value)
+                if not s:
+                    continue
+                for t in n.targets:
+                    for nn in ast.walk(t):
+                        if isinstance(nn, ast.Name) and \
+                                isinstance(nn.ctx, ast.Store):
+                            cur = sig.setdefault(nn.id, set())
+                            if not s <= cur:
+                                cur |= s
+                                changed = True
+            if not changed:
+                break
+        if not sig:
+            continue
+        for n in ast.walk(fi.node):
+            if not (isinstance(n, ast.Call) and len(n.args) >= 2):
+                continue
+            if m.resolve(sf, n.func) not in _EXACT_CMP:
+                continue
+            a, b = expr_sig(n.args[0]), expr_sig(n.args[1])
+            if a and b and a != b:
+                out.append(ctx.finding(
+                    "occupancy-boundary", sf, n,
+                    f"exact equality between outputs of "
+                    f"differently-batched executables "
+                    f"(B={sorted(a)} vs B={sorted(b)}) outside the "
+                    f"§13 boundary modules — per-cell floats drift "
+                    f"across [L,B] programs; use assert_allclose "
+                    f"with an explicit tolerance or disable with a "
+                    f"why"))
+    return out
+
+
 RULES: Dict[str, "object"] = {
     "jit-cache-key": rule_jit_cache_key,
     "host-sync-in-jit": rule_host_sync,
@@ -535,4 +903,8 @@ RULES: Dict[str, "object"] = {
     "timer-no-block": rule_timer_no_block,
     "argv-hygiene": rule_argv_hygiene,
     "dead-module": rule_dead_module,
+    "donation-reuse-xfile": rule_donation_reuse_xfile,
+    "retrace-budget": rule_retrace_budget,
+    "parity-coverage": rule_parity_coverage,
+    "occupancy-boundary": rule_occupancy_boundary,
 }

@@ -114,12 +114,20 @@ class ServeConfig:
                    session stays on device (the PR-7 behavior)
       window_s     batching window: after the first request of a batch
                    arrives, how long the server waits for more
+      bucket_rounds round-count-aware window formation: the BatchServer
+                   splits a collected window by horizon rung before
+                   routing, so one long request no longer drags every
+                   short co-arrival up to its padded horizon (each
+                   bucket dispatches to its own smallest tier, shortest
+                   first). Off = one dispatch per window, routed to the
+                   max rung (the PR-8 behavior)
     """
     batch: int = 4
     max_rounds: int = 4
     tiers: Optional[Tuple[int, ...]] = None
     batch_tiers: Optional[Tuple[int, ...]] = None
     max_sessions: Optional[int] = None
+    bucket_rounds: bool = True
     window_s: float = 0.002
     scheduler: str = "madca"
     n_sov: int = 4
@@ -670,7 +678,17 @@ class BatchServer:
     but deferred requests seed the NEXT batch FIFO-first, ahead of any
     newer arrivals — a session whose requests keep coming can be
     deferred at most one window, never starved by fresh traffic
-    (regression-pinned in `tests/test_serve.py`)."""
+    (regression-pinned in `tests/test_serve.py`).
+
+    Round bucketing (`ServeConfig.bucket_rounds`): a collected window
+    is split by horizon rung before routing, shortest rung first —
+    `route()` pads every cell of a dispatch to the batch's max
+    `n_rounds` rung, so co-batching a 1-round request with an L-round
+    one burns (L-1)/L of the short cell's compute on inactive padding.
+    Bucketed, each group dispatches to its own smallest tier and
+    `pad_frac_rounds` collapses toward the ladder's quantization error.
+    On a single-rung ladder every request shares the one rung and the
+    split is a no-op."""
 
     def __init__(self, service: SchedulingService, *,
                  window_s: Optional[float] = None,
@@ -753,27 +771,47 @@ class BatchServer:
                     continue
                 sessions.add(nxt[0].session)
                 batch.append(nxt)
-            reqs = [b[0] for b in batch]
-            t_start = time.perf_counter()
-            try:
-                resps = await loop.run_in_executor(
-                    self._pool, self.service.run_batch, reqs)
-                # run_batch materializes every output via np.asarray
-                # before returning, so the device work is already
-                # flushed when the executor future resolves
-                t_end = time.perf_counter()  # reprolint: disable=timer-no-block
-                self.service.metrics.observe_batch(
-                    reqs, [b[2] for b in batch], t_start, t_end)
-                for (req, fut, ts), resp in zip(batch, resps):
-                    resp.queue_wait_s = t_start - ts
-                    resp.compute_s = t_end - t_start
-                    resp.total_s = t_end - ts
-                    if not fut.done():
-                        fut.set_result(resp)
-            except Exception as e:          # noqa: BLE001 — fail the batch
-                for _, fut, _ in batch:
-                    if not fut.done():
-                        fut.set_exception(e)
+            for group in self._round_buckets(batch):
+                await self._dispatch(loop, group)
+
+    def _round_buckets(self, batch: List) -> List[List]:
+        """The window's dispatch groups: split by horizon rung
+        (ascending) when `bucket_rounds` is on, else the whole window
+        as one group. A request beyond the ladder keeps the top rung's
+        group so `run_batch` raises its ValueError into that request's
+        future instead of the collector dying on routing."""
+        if not self.service.cfg.bucket_rounds or len(batch) <= 1:
+            return [batch]
+        horizons = self.service.cfg.horizons
+        by_rung: Dict[int, List] = {}
+        for it in batch:
+            rung = next((h for h in horizons
+                         if h >= int(it[0].n_rounds)), horizons[-1])
+            by_rung.setdefault(rung, []).append(it)
+        return [by_rung[h] for h in sorted(by_rung)]
+
+    async def _dispatch(self, loop, batch: List) -> None:
+        reqs = [b[0] for b in batch]
+        t_start = time.perf_counter()
+        try:
+            resps = await loop.run_in_executor(
+                self._pool, self.service.run_batch, reqs)
+            # run_batch materializes every output via np.asarray
+            # before returning, so the device work is already
+            # flushed when the executor future resolves
+            t_end = time.perf_counter()  # reprolint: disable=timer-no-block
+            self.service.metrics.observe_batch(
+                reqs, [b[2] for b in batch], t_start, t_end)
+            for (req, fut, ts), resp in zip(batch, resps):
+                resp.queue_wait_s = t_start - ts
+                resp.compute_s = t_end - t_start
+                resp.total_s = t_end - ts
+                if not fut.done():
+                    fut.set_result(resp)
+        except Exception as e:          # noqa: BLE001 — fail the batch
+            for _, fut, _ in batch:
+                if not fut.done():
+                    fut.set_exception(e)
 
 
 def _rounds_of(n_rounds: Union[int, Sequence[int]], i: int) -> int:

@@ -1,0 +1,19 @@
+"""BAD: reading a donated carry obtained through another module's
+factory.
+
+`step = make_step(...)` hides the `donate_argnums` jit behind a
+cross-file call; `carry`'s buffer is gone after `step(carry, x)`
+exactly as if the jit were local, and the later `.sum()` touches a
+deleted buffer.
+"""
+from helper import make_step
+
+
+def drive(carry, xs):
+    step = make_step(0.5)
+    total = 0.0
+    for x in xs:
+        out, aux = step(carry, x)
+        total = total + carry.sum()
+        carry = out
+    return carry, total

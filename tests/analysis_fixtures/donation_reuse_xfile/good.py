@@ -1,0 +1,15 @@
+"""GOOD: the rebind idiom survives the cross-file factory too.
+
+`carry, _ = step(carry, x)` reads the old buffer only as the donating
+call's own argument and immediately rebinds the name to the fresh
+output — no later read can touch the dead buffer, whichever module
+built the jit.
+"""
+from helper import make_step
+
+
+def drive(carry, xs):
+    step = make_step(0.5)
+    for x in xs:
+        carry, _ = step(carry, x)
+    return carry

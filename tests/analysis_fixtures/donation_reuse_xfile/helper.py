@@ -1,0 +1,14 @@
+"""The cross-file donor: a compile factory whose product donates.
+
+`make_step` returns a `donate_argnums` jit through a local name — the
+caller never sees `jax.jit` in its own file, so the per-file rule 5
+cannot warn about reuse; rule 9 resolves the factory through the repo
+symbol table instead.
+"""
+import jax
+
+
+def make_step(scale):
+    step = jax.jit(lambda c, x: (c + scale * x, c * x),
+                   donate_argnums=(0,))
+    return step

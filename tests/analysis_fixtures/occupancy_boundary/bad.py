@@ -1,0 +1,17 @@
+"""BAD: exact float equality across differently-batched executables,
+outside the documented §13 boundary modules.
+
+`batch=1` and `batch=4` trace to different [L,B] programs whose
+per-cell floats fuse/tile differently — bitwise comparison is only
+valid where the boundary itself is pinned.
+"""
+import numpy as np
+
+from service import run_cells
+
+
+def check_packed_vs_solo():
+    solo = run_cells(4, batch=1, seed=0)
+    packed = run_cells(4, batch=4, seed=0)
+    np.testing.assert_array_equal(solo, packed)
+    assert np.array_equal(solo, packed)

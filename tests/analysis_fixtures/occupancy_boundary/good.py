@@ -1,0 +1,17 @@
+"""GOOD: tolerance across the batch boundary, exactness within it.
+
+Cross-B comparisons carry an explicit `assert_allclose` tolerance;
+same-B outputs come from the SAME executable and may be compared
+bitwise.
+"""
+import numpy as np
+
+from service import run_cells
+
+
+def check_packed_vs_solo():
+    solo = run_cells(4, batch=1, seed=0)
+    packed = run_cells(4, batch=4, seed=0)
+    np.testing.assert_allclose(solo, packed, rtol=1e-6, atol=0.0)
+    repeat = run_cells(4, batch=4, seed=0)
+    np.testing.assert_array_equal(packed, repeat)

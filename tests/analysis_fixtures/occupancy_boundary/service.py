@@ -1,0 +1,8 @@
+"""Stub of a batched rollout entrypoint: `batch=` keys the compiled
+[L,B] program shape, so outputs across different `batch` literals come
+from different executables."""
+
+
+def run_cells(n, batch=1, seed=0):
+    base = [float(i + seed) for i in range(n)]
+    return [base for _ in range(batch)]

@@ -1,0 +1,21 @@
+"""BAD: a registered scheduler missing from every parity matrix.
+
+`ghost` ships in the registry but appears in no blocked-vs-fused /
+packed-vs-solo matrix — its compiled program has no bitwise pin
+against the per-round reference.
+"""
+
+
+def veds(q):
+    return q
+
+
+def madca(q):
+    return q + 1
+
+
+def ghost(q):
+    return q - 1
+
+
+SCHEDULERS = {"veds": veds, "madca": madca, "ghost": ghost}

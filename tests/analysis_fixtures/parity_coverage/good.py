@@ -1,0 +1,13 @@
+"""GOOD: every registered scheduler appears in the explicit parity
+matrix (`PARITY_SCHEDULERS` in tests/test_parity.py)."""
+
+
+def veds(q):
+    return q
+
+
+def madca(q):
+    return q + 1
+
+
+SCHEDULERS = {"veds": veds, "madca": madca}

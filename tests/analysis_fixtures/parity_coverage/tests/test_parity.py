@@ -1,0 +1,11 @@
+"""The coverage side of the parity contract: an EXPLICIT name list —
+parametrizing over the registry itself is opaque to the rule by
+design, so adding a scheduler forces a visible edit here."""
+import pytest
+
+PARITY_SCHEDULERS = ("veds", "madca")
+
+
+@pytest.mark.parametrize("name", PARITY_SCHEDULERS)
+def test_blocked_vs_fused_match(name):
+    assert name in PARITY_SCHEDULERS

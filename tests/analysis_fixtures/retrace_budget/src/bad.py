@@ -1,0 +1,23 @@
+"""BAD: lru_cache compile factories with no retrace pin anywhere in
+the test tree.
+
+Both factories follow the one-trace-per-shape pattern the engine hot
+paths use, but nothing asserts their compile count — a cache-key
+regression (the PR-5 eval_fn fork) would silently retrace per call.
+"""
+import functools
+
+import jax
+
+
+@functools.lru_cache(maxsize=None)
+def unpinned_segment(n):
+    @jax.jit
+    def go(x):
+        return x * n
+    return go
+
+
+@functools.lru_cache(maxsize=8)
+def unpinned_apply(lr):
+    return jax.jit(lambda p, g: p - lr * g)

@@ -1,0 +1,23 @@
+"""GOOD: a pinned compile factory, and a memo that is not one.
+
+`pinned_factory` is covered by the `assert_no_retrace(fn, compiles=1)`
+pin in `tests/test_pins.py`; `cached_table` is lru-cached but contains
+no jit, so it is not a compile factory and needs no pin.
+"""
+import functools
+
+import jax
+
+
+@functools.lru_cache(maxsize=None)
+def pinned_factory(scale):
+    @jax.jit
+    def go(x):
+        return x * scale
+    return go
+
+
+@functools.lru_cache(maxsize=None)
+def cached_table(n):
+    # plain memoized host table — no executable behind it
+    return tuple(range(n))

@@ -1,0 +1,13 @@
+"""The pin side of the retrace-budget contract: one factory covered,
+its sibling file deliberately not."""
+from conftest import assert_no_retrace
+
+import bad  # noqa: F401  -- imported so the orphan detector stays quiet
+from good import pinned_factory
+
+
+def test_pinned_factory_does_not_retrace():
+    fn = pinned_factory(2.0)
+    with assert_no_retrace(fn, compiles=1):
+        fn(1.0)
+        fn(2.0)

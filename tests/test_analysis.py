@@ -4,7 +4,10 @@ Each rule has a `bad.py` (deliberately violating) and `good.py`
 (idiomatic) fixture under `tests/analysis_fixtures/`; the tests pin
 the EXACT finding set on each, so a rule that stops firing on its bug
 class — or starts firing on the blessed idiom — fails here. The
-self-lint test is the same gate CI runs: the shipped tree must be
+whole-program rules (retrace-budget, parity-coverage) are additionally
+mutation-proven against the REAL tree: deleting one retrace pin or one
+parity-matrix entry from a copy of the repo must turn the lint red.
+The self-lint test is the same gate CI runs: the shipped tree must be
 clean against the checked-in baseline.
 
 The analysis package never imports jax, so these tests run on a bare
@@ -13,6 +16,8 @@ interpreter too (the CI lint lane).
 import json
 import os
 import pathlib
+import shutil
+import time
 
 import pytest
 
@@ -23,6 +28,7 @@ from repro.analysis.rules import RULES
 
 FIXTURES = pathlib.Path(__file__).resolve().parent / "analysis_fixtures"
 REPO = pathlib.Path(__file__).resolve().parent.parent
+REAL_ROOTS = ["src", "tests", "benchmarks", "examples"]
 
 # every rule with a good/bad pair (dead-module uses its own mini-tree)
 PAIRED = {
@@ -33,6 +39,10 @@ PAIRED = {
     "donation-reuse": "donation_reuse",
     "timer-no-block": "timer_no_block",
     "argv-hygiene": "argv_hygiene",
+    "donation-reuse-xfile": "donation_reuse_xfile",
+    "retrace-budget": "retrace_budget",
+    "parity-coverage": "parity_coverage",
+    "occupancy-boundary": "occupancy_boundary",
 }
 # findings the bad fixture must produce (count pinned so a rule that
 # half-fires still fails)
@@ -44,17 +54,20 @@ EXPECT_BAD = {
     "donation-reuse": 1,
     "timer-no-block": 1,
     "argv-hygiene": 2,        # sys.argv mutation + argv-less main
+    "donation-reuse-xfile": 1,    # carry read after factory's donation
+    "retrace-budget": 2,          # two unpinned compile factories
+    "parity-coverage": 1,         # `ghost` in no parity matrix
+    "occupancy-boundary": 2,      # assert_array_equal + np.array_equal
 }
 
 
 def _lint_fixture(subdir):
     cfg = LintConfig(exclude=("__pycache__",),
                      hot_modules=("",))    # every fixture file is "hot"
-    new, old, stale, _, n_files = run_lint(
-        ["."], str(FIXTURES / subdir), config=cfg)
-    assert not old and not stale
-    assert n_files >= 2 or subdir == "dead_module"
-    return new
+    res = run_lint(["."], str(FIXTURES / subdir), config=cfg)
+    assert not res.baselined and not res.stale
+    assert res.n_files >= 2 or subdir == "dead_module"
+    return res.new
 
 
 @pytest.mark.parametrize("rule", sorted(PAIRED))
@@ -102,7 +115,7 @@ def test_good_fixtures_are_fully_clean():
 
 def test_rule_catalogue_is_complete():
     assert set(PAIRED) | {"dead-module"} == set(RULES)
-    assert len(RULES) >= 8
+    assert len(RULES) >= 12
 
 
 def test_inline_suppression_parsing():
@@ -121,21 +134,56 @@ def test_baseline_split_and_staleness():
                      {"rule": "dead-module", "path": "gone.py",
                       "scope": "<module>", "why": "stale entry"}])
     cfg = LintConfig(exclude=("__pycache__",), hot_modules=("",))
-    new, old, stale, _, _ = run_lint(
-        ["."], str(FIXTURES / "timer_no_block"),
-        config=cfg, baseline=base)
-    assert not new and len(old) == 1
-    assert [e["path"] for e in stale] == ["gone.py"]
+    res = run_lint(["."], str(FIXTURES / "timer_no_block"),
+                   config=cfg, baseline=base)
+    assert not res.new and len(res.baselined) == 1
+    assert [e["path"] for e in res.stale] == ["gone.py"]
     with pytest.raises(ValueError):
         Baseline([{"rule": "x", "path": "y", "scope": "z"}])  # no why
 
 
+def test_select_staleness_only_judges_selected_rules():
+    """The --select exit-code contract: a baseline entry for an
+    UNSELECTED rule matches no finding by construction and must not be
+    reported stale (it would flip a clean `--select timer-no-block`
+    run to exit 2)."""
+    base = Baseline([{"rule": "jit-cache-key", "path": "elsewhere.py",
+                      "scope": "factory", "why": "judged only when "
+                      "jit-cache-key runs"}])
+    cfg = LintConfig(exclude=("__pycache__",), hot_modules=("",))
+    sel = run_lint(["."], str(FIXTURES / "timer_no_block"), config=cfg,
+                   baseline=base, select=["timer-no-block"])
+    assert not sel.stale
+    assert [f.rule for f in sel.new] == ["timer-no-block"]
+    full = run_lint(["."], str(FIXTURES / "timer_no_block"), config=cfg,
+                    baseline=base)
+    assert [e["path"] for e in full.stale] == ["elsewhere.py"]
+
+
+def test_unknown_rule_id_is_exit_2(capsys):
+    rc = lint_main(["src", "--repo-root", str(REPO), "--no-cache",
+                    "--select", "no-such-rule"])
+    assert rc == 2
+    assert "unknown rule id" in capsys.readouterr().err
+
+
+def test_ignore_drops_a_rule():
+    cfg = LintConfig(exclude=("__pycache__",), hot_modules=("",))
+    res = run_lint(["."], str(FIXTURES / "timer_no_block"), config=cfg,
+                   ignore=["timer-no-block"])
+    assert not res.new
+
+
 def test_self_lint_shipped_tree_is_clean(tmp_path, capsys):
     """The CI gate, in-process: lint the real tree against the real
-    baseline and demand exit 0 plus a well-formed JSON report."""
+    baseline and demand exit 0 plus well-formed JSON and SARIF
+    reports."""
     report = tmp_path / "reprolint.json"
-    rc = lint_main(["src", "tests", "benchmarks", "examples",
-                    "--repo-root", str(REPO), "--json", str(report)])
+    sarif = tmp_path / "reprolint.sarif"
+    rc = lint_main(REAL_ROOTS + ["--repo-root", str(REPO),
+                                 "--no-cache",
+                                 "--json", str(report),
+                                 "--sarif", str(sarif)])
     out = capsys.readouterr().out
     assert rc == 0, f"reprolint found new violations:\n{out}"
     rep = json.loads(report.read_text())
@@ -145,6 +193,171 @@ def test_self_lint_shipped_tree_is_clean(tmp_path, capsys):
     # repo-tree scan, or they would dirty every CI run
     assert not any("analysis_fixtures" in f["path"]
                    for f in rep["new"] + rep["baselined"])
+    sar = json.loads(sarif.read_text())
+    assert sar["version"] == "2.1.0"
+    driver = sar["runs"][0]["tool"]["driver"]
+    assert driver["name"] == "reprolint"
+    assert {r["id"] for r in driver["rules"]} == set(RULES)
+
+
+def test_sarif_report_carries_fingerprints(tmp_path):
+    """New findings must land at `error` level with the baseline's
+    (rule, path, scope) identity in partialFingerprints, so GitHub
+    code-scanning tracks them across unrelated edits."""
+    sarif = tmp_path / "out.sarif"
+    rc = lint_main([".", "--repo-root",
+                    str(FIXTURES / "timer_no_block"),
+                    "--no-cache", "--sarif", str(sarif)])
+    assert rc == 1
+    res = json.loads(sarif.read_text())["runs"][0]["results"]
+    assert len(res) == 1 and res[0]["ruleId"] == "timer-no-block"
+    assert res[0]["level"] == "error"
+    assert res[0]["partialFingerprints"]["reprolintKey/v1"] == \
+        "timer-no-block|bad.py|bench"
+    loc = res[0]["locations"][0]["physicalLocation"]
+    assert loc["artifactLocation"]["uri"] == "bad.py"
+    assert loc["region"]["startLine"] > 1
+
+
+# ---- whole-program rules, mutation-proven on the real tree --------------
+
+def _copy_repo(tmp_path):
+    """A mutable copy of exactly what the repo-tree lint scans."""
+    dst = tmp_path / "repo"
+    dst.mkdir()
+    for root in REAL_ROOTS:
+        shutil.copytree(REPO / root, dst / root,
+                        ignore=shutil.ignore_patterns(
+                            "__pycache__", ".pytest_cache",
+                            ".jax_cache"))
+    shutil.copy(REPO / "reprolint_baseline.json", dst)
+    return dst
+
+
+def _mutate(path, old, new):
+    text = path.read_text()
+    assert old in text, f"mutation anchor missing from {path}: {old!r}"
+    path.write_text(text.replace(old, new))
+
+
+def test_mutation_deleting_retrace_pin_turns_lint_red(tmp_path):
+    """Delete the `_padded_draws` pin from the real test tree: the
+    factory loses its only `assert_no_retrace` coverage and
+    retrace-budget must fire — proof the rule watches the REAL pins,
+    not a hardcoded allowlist."""
+    repo = _copy_repo(tmp_path)
+    _mutate(repo / "tests" / "test_serve.py",
+            "assert_no_retrace", "former_retrace_pin")
+    res = run_lint(REAL_ROOTS, str(repo),
+                   baseline=Baseline.load(
+                       str(repo / "reprolint_baseline.json")))
+    hits = [f for f in res.new if f.rule == "retrace-budget"]
+    assert len(hits) == 1 and "_padded_draws" in hits[0].message, \
+        [f.render() for f in res.new]
+
+
+def test_mutation_deleting_parity_entry_turns_lint_red(tmp_path):
+    """Drop one scheduler from the explicit PARITY_SCHEDULERS matrix:
+    its registry entry loses coverage and parity-coverage must point
+    at the registry line naming it."""
+    repo = _copy_repo(tmp_path)
+    _mutate(repo / "tests" / "test_fused_engine.py",
+            '("madca", "optimal", "sa", "v2i_only", "veds")',
+            '("madca", "optimal", "v2i_only", "veds")')
+    res = run_lint(REAL_ROOTS, str(repo),
+                   baseline=Baseline.load(
+                       str(repo / "reprolint_baseline.json")))
+    hits = [f for f in res.new if f.rule == "parity-coverage"]
+    assert len(hits) == 1 and "`sa`" in hits[0].message, \
+        [f.render() for f in res.new]
+    assert hits[0].path == "src/repro/core/baselines.py"
+
+
+# ---- findings cache -----------------------------------------------------
+
+def test_cache_cold_warm_touch(tmp_path):
+    """The mtime-keyed cache contract: an untouched tree is served
+    from the cache (and much faster than the cold analysis), touching
+    ANY scanned file re-parses, and the cached findings are identical
+    to the cold ones."""
+    repo = _copy_repo(tmp_path)
+    cache = tmp_path / "cache.json"
+
+    t0 = time.perf_counter()
+    cold = run_lint(REAL_ROOTS, str(repo), cache_path=str(cache))
+    cold_s = time.perf_counter() - t0  # reprolint: disable=timer-no-block -- host-only lint timing, nothing async in flight
+    assert not cold.cache_hit and cache.exists()
+
+    t0 = time.perf_counter()  # reprolint: disable=timer-no-block -- host-only lint timing, nothing async in flight
+    warm = run_lint(REAL_ROOTS, str(repo), cache_path=str(cache))
+    warm_s = time.perf_counter() - t0  # reprolint: disable=timer-no-block -- host-only lint timing, nothing async in flight
+    assert warm.cache_hit
+    assert warm_s < cold_s and warm_s < 1.0
+    assert [f.key() for f in warm.new] == [f.key() for f in cold.new]
+    assert warm.n_files == cold.n_files
+
+    touched = repo / "src" / "repro" / "core" / "baselines.py"
+    st = touched.stat()
+    os.utime(touched, ns=(st.st_atime_ns, st.st_mtime_ns + 10_000_000))
+    miss = run_lint(REAL_ROOTS, str(repo), cache_path=str(cache))
+    assert not miss.cache_hit
+    # ...and the re-analysis re-primes the cache
+    assert run_lint(REAL_ROOTS, str(repo),
+                    cache_path=str(cache)).cache_hit
+
+
+def test_cache_is_keyed_on_roots_and_config(tmp_path):
+    """A cache entry for one (roots, config) must not serve another —
+    the key covers both, not just the file signature."""
+    fix = FIXTURES / "timer_no_block"
+    cache = tmp_path / "cache.json"
+    cfg = LintConfig(exclude=("__pycache__",), hot_modules=("",))
+    first = run_lint(["."], str(fix), config=cfg,
+                     cache_path=str(cache))
+    assert not first.cache_hit
+    other_cfg = LintConfig(exclude=("__pycache__",),
+                           hot_modules=("nothing/",))
+    other = run_lint(["."], str(fix), config=other_cfg,
+                     cache_path=str(cache))
+    assert not other.cache_hit
+
+
+def test_cache_is_applied_before_select_and_baseline(tmp_path):
+    """--select / --baseline post-process cached findings: a warm hit
+    must honour a DIFFERENT selection than the run that primed it."""
+    fix = FIXTURES / "timer_no_block"
+    cache = tmp_path / "cache.json"
+    cfg = LintConfig(exclude=("__pycache__",), hot_modules=("",))
+    run_lint(["."], str(fix), config=cfg, cache_path=str(cache))
+    warm = run_lint(["."], str(fix), config=cfg, cache_path=str(cache),
+                    select=["dead-module"])
+    assert warm.cache_hit and not warm.new
+
+
+# ---- baseline drift lane ------------------------------------------------
+
+def test_write_baseline_then_fix_reports_drift(tmp_path, capsys):
+    """The weekly drift lane, end to end: --write-baseline
+    grandfathers the findings (exit 0), a later run is clean against
+    it, and FIXING the code flips the run to exit 2 — the stale entry
+    is the drift signal telling the baseline to shrink."""
+    root = tmp_path / "fixrepo"
+    shutil.copytree(FIXTURES / "timer_no_block", root,
+                    ignore=shutil.ignore_patterns("__pycache__"))
+    args = [".", "--repo-root", str(root), "--no-cache"]
+    assert lint_main(args) == 1                    # dirty, no baseline
+    assert lint_main(args + ["--write-baseline"]) == 0
+    entries = json.loads(
+        (root / "reprolint_baseline.json").read_text())["findings"]
+    assert len(entries) == 1 and "TODO" in entries[0]["why"]
+    entries[0]["why"] = "grandfathered for the drift test"
+    (root / "reprolint_baseline.json").write_text(
+        json.dumps({"findings": entries}))
+    assert lint_main(args) == 0                    # baselined
+    shutil.copy(root / "good.py", root / "bad.py")  # "fix" the code
+    capsys.readouterr()
+    assert lint_main(args) == 2                    # stale entry: drift
+    assert "stale baseline entry" in capsys.readouterr().out
 
 
 def test_traced_set_reaches_scan_bodies():
@@ -155,6 +368,22 @@ def test_traced_set_reaches_scan_bodies():
     m = Manifest(files)
     traced_quals = {uid[1] for uid in m.traced}
     assert traced_quals, "no traced functions found in src/repro/fl"
+
+
+def test_cross_file_symbol_table_resolves_aliases():
+    """Whole-program manifest sanity: `lookup_symbol` follows the
+    `_fused_segment = fused_segment` module-level rebind in
+    fl/simulator.py to the engine's def, and the call graph links the
+    mesh executor's factory callers cross-file."""
+    from repro.analysis.manifest import Manifest, load_files
+    files = load_files(["src/repro/fl", "src/repro/core",
+                        "src/repro/sharding", "src/repro/channel"],
+                       str(REPO))
+    m = Manifest(files)
+    fi = m.lookup_symbol("repro.fl.simulator._fused_segment")
+    assert fi is not None and fi.qual == "fused_segment"
+    assert fi.sf.rel == "src/repro/fl/engine.py"
+    assert any(edges for edges in m.call_graph.values())
 
 
 def test_baseline_file_is_checked_in_and_loadable():

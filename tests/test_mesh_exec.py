@@ -27,8 +27,9 @@ from repro.core.lyapunov import VedsParams
 from repro.core.scenario import ScenarioParams
 from repro.core.streaming import StreamConfig, round_keys
 from repro.fl.engine import ClientShards, init_carry
-from repro.sharding.mesh_exec import (_fused_exec, check_batch_divisible,
-                                      fleet_mesh, mesh_fused_rollout,
+from repro.sharding.mesh_exec import (_fused_exec, _stream_exec,
+                                      check_batch_divisible, fleet_mesh,
+                                      mesh_fused_rollout,
                                       mesh_stream_rounds, place_batch,
                                       place_carry, place_shards)
 
@@ -155,6 +156,25 @@ def test_donated_step_does_not_retrace():
     with assert_no_retrace(step):
         call()
         call()
+
+
+def test_stream_exec_factory_does_not_retrace():
+    """reprolint retrace-budget pin: the scheduling-only whole-run
+    factory (`_stream_exec`) serves repeated same-config rollouts from
+    one compiled program. Donation is off so the second call is legal
+    with the same persistent-fleet layout; the config is distinct from
+    every other test's so the pin measures a fresh executable."""
+    sched = get_scheduler("madca")
+    cfg = StreamConfig(n_rounds=R, batch=1, fresh_fleet=False,
+                       carry_queues=True)
+    step = _stream_exec(sched, SC, MOB, CH, PRM, cfg, False)
+    mesh = fleet_mesh(1)
+    with assert_no_retrace(step, compiles=1):
+        mesh_stream_rounds(mesh, KEY, sched, SC, MOB, CH, PRM, cfg,
+                           donate=False)
+        s2 = mesh_stream_rounds(mesh, KEY, sched, SC, MOB, CH, PRM,
+                                cfg, donate=False)
+        jax.block_until_ready(s2.outputs.success)
 
 
 def test_uneven_batch_is_rejected_up_front():

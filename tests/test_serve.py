@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from conftest import mark_slow_unless
+from conftest import assert_no_retrace, mark_slow_unless
 
 from repro.core.baselines import SCHEDULERS
 from repro.core.scheduler import RolloutCarry
@@ -44,6 +44,22 @@ def _assert_same(a, b):
     np.testing.assert_array_equal(a.success, b.success)
     np.testing.assert_array_equal(a.n_success, b.n_success)
     np.testing.assert_array_equal(a.loss, b.loss)
+
+
+def test_padded_draws_factory_does_not_retrace():
+    """reprolint retrace-budget pin: the host-packing draw-column
+    factory (`_padded_draws`) compiles one program per (R, L, ...)
+    shape and serves every seed from it — the shape here is distinct
+    from every service config in this module so the pin measures a
+    fresh executable."""
+    from repro.launch.serve import _padded_draws
+    fn = _padded_draws(3, 5, 9, 4, 6)
+    with assert_no_retrace(fn, compiles=1):
+        keys_a, _, _, active_a = fn(0)
+        keys_b, _, _, _ = fn(1)
+    assert keys_a.shape[0] == 5 and keys_b.shape[0] == 5
+    np.testing.assert_array_equal(np.asarray(active_a),
+                                  np.arange(5) < 3)
 
 
 def _solo_replay(schedule, **cfg_kw):
@@ -252,6 +268,42 @@ def test_batch_server_defers_duplicate_session_to_next_batch():
     _assert_same(g1, solo["dup"][0])
     _assert_same(g2, solo["dup"][1])
     _assert_same(go_, solo["other"][0])
+
+
+def test_batch_server_buckets_rounds_by_horizon_rung():
+    """Round-count-aware window formation: a window mixing 1-round and
+    L-round requests on a (1, L) ladder splits by horizon rung before
+    routing (shortest first), so the short requests stop paying the
+    long rung's padded tail — pad_frac_rounds collapses to 0 for an
+    exact-fit mix — and every response is still bit-for-bit the solo
+    replay. `bucket_rounds=False` routes the same window whole to the
+    max rung (the PR-8 behavior) and pays the padding."""
+    kw = dict(tiers=(1, L), batch_tiers=(1, 3))
+    reqs = [ServeRequest("a", 1, seed=1), ServeRequest("b", L, seed=2),
+            ServeRequest("c", 1, seed=3)]
+
+    async def load(srv):
+        return await asyncio.gather(*(srv.submit(r) for r in reqs))
+
+    svc = SchedulingService(_cfg(3, **kw))
+    svc.warmup(rounds=(1, L))
+    got = _serve(svc, load, window_s=0.25)
+    assert svc.metrics.occupancy == [2, 1]      # rung 1 first, then L
+    assert [g.tier for g in got] == ["L1xB3", f"L{L}xB1", "L1xB3"]
+    assert svc.metrics.summary()["pad_frac_rounds"] == 0.0
+    _, solo = _solo_replay({r.session: [r] for r in reqs})
+    for r, g in zip(reqs, got):
+        _assert_same(g, solo[r.session][0])
+
+    flat = SchedulingService(_cfg(3, bucket_rounds=False, **kw))
+    flat.warmup(rounds=(1, L))
+    got_flat = _serve(flat, load, window_s=0.25)
+    assert flat.metrics.occupancy == [3]        # one max-rung dispatch
+    assert {g.tier for g in got_flat} == {f"L{L}xB3"}
+    assert flat.metrics.summary()["pad_frac_rounds"] == \
+        pytest.approx(1 - (1 + L + 1) / (3 * L))
+    for r, g in zip(reqs, got_flat):
+        _assert_same(g, solo[r.session][0])
 
 
 def test_batch_server_failed_batch_fails_every_future():
